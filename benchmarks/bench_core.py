@@ -1,0 +1,203 @@
+"""Control-plane benchmarks — one per performance factor the paper names in
+§6, plus the §2/§7 Celery-comparison claim quantified on SimSlurm."""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+from repro.core import (Broker, ClusterAgent, Consumer, MonitorAgent,
+                        Producer, SimSlurm, Submitter, WorkerAgent)
+
+
+def bench_broker_throughput(n_msgs: int = 20_000) -> list[tuple[str, float, str]]:
+    """§6: throughput vs topic partition count."""
+    rows = []
+    for parts in (1, 4, 16):
+        b = Broker()
+        b.create_topic("t", partitions=parts)
+        p = Producer(b)
+        t0 = time.perf_counter()
+        for i in range(n_msgs):
+            p.send("t", {"i": i}, key=str(i))
+        t_prod = time.perf_counter() - t0
+        c = Consumer(b, ["t"], group_id="g")
+        t0 = time.perf_counter()
+        seen = 0
+        while seen < n_msgs:
+            for recs in c.poll(0.1).values():
+                seen += len(recs)
+        t_cons = time.perf_counter() - t0
+        b.close()
+        rows.append((f"broker_produce_p{parts}", t_prod / n_msgs * 1e6,
+                     f"{n_msgs / t_prod:,.0f} msg/s"))
+        rows.append((f"broker_consume_p{parts}", t_cons / n_msgs * 1e6,
+                     f"{n_msgs / t_cons:,.0f} msg/s"))
+    return rows
+
+
+def bench_submit_latency() -> list[tuple[str, float, str]]:
+    """§6: submission -> execution delay vs agent polling interval."""
+    rows = []
+    for poll_s in (0.001, 0.02, 0.1):
+        b = Broker()
+        sub = Submitter(b, "lat")
+        mon = MonitorAgent(b, "lat", poll_interval_s=0.001).start()
+        ag = WorkerAgent(b, "lat", slots=2, poll_interval_s=poll_s).start()
+        lats = []
+        for _ in range(20):
+            t0 = time.perf_counter()
+            tid = sub.submit("sleep", params={"duration": 0.0})
+            mon.wait_all([tid], timeout=10.0, poll=0.0005)
+            lats.append(time.perf_counter() - t0)
+        ag.stop()
+        mon.stop()
+        b.close()
+        lats.sort()
+        med = lats[len(lats) // 2]
+        rows.append((f"submit_latency_poll{int(poll_s*1000)}ms",
+                     med * 1e6, f"median e2e {med*1e3:.1f} ms"))
+    return rows
+
+
+class _CeleryStyleWorkerPool:
+    """The paper's §2 anti-pattern: long-running workers squat on cluster
+    slots for the whole campaign, pulling tasks from an internal queue."""
+
+    def __init__(self, slurm: SimSlurm, n_slots: int):
+        self.slurm = slurm
+        self.q: queue.Queue = queue.Queue()
+        self.done = 0
+        self._stop = threading.Event()
+        self.job_ids = [
+            slurm.sbatch(self._worker, name=f"celery-worker-{i}", cpus=1,
+                         user="celery")
+            for i in range(n_slots)
+        ]
+
+    def _worker(self, cancel_event=None) -> None:
+        while not self._stop.is_set():
+            try:
+                dur = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            time.sleep(dur)
+            self.done += 1
+
+    def submit(self, duration: float) -> None:
+        self.q.put(duration)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+
+
+def bench_oversubscription_vs_celery(n_tasks: int = 60,
+                                     task_s: float = 0.05
+                                     ) -> list[tuple[str, float, str]]:
+    """Quantifies §2/§7: while a campaign runs, how long does an *external
+    user's* job wait? KSA releases slots between tasks; Celery-style workers
+    hog them until the pool is torn down."""
+    rows = []
+
+    # --- KSA ClusterAgent path ---
+    slurm = SimSlurm(nodes=2, cpus_per_node=2)
+    b = Broker()
+    sub = Submitter(b, "ov")
+    mon = MonitorAgent(b, "ov", poll_interval_s=0.005).start()
+    agent = ClusterAgent(b, slurm, "ov", poll_interval_s=0.005,
+                         oversubscribe=4).start()
+    ids = [sub.submit("sleep", params={"duration": task_s}, cpus=1)
+           for _ in range(n_tasks)]
+    time.sleep(task_s * 4)
+    ext_wait = {}
+
+    def ext_job(cancel_event=None):
+        ext_wait["run"] = time.perf_counter()
+
+    t_sub = time.perf_counter()
+    slurm.sbatch(ext_job, name="external-user", cpus=1, user="someone_else")
+    mon.wait_all(ids, timeout=120.0)
+    t_all = time.perf_counter() - t_sub
+    wait_ksa = ext_wait["run"] - t_sub
+    agent.stop()
+    mon.stop()
+    slurm.shutdown()
+    b.close()
+    rows.append(("external_wait_ksa", wait_ksa * 1e6,
+                 f"external user waited {wait_ksa*1e3:.0f} ms"))
+    rows.append(("campaign_ksa", t_all * 1e6,
+                 f"campaign {t_all:.2f} s, util model: slots released"))
+
+    # --- Celery-style long-running pool ---
+    slurm = SimSlurm(nodes=2, cpus_per_node=2)
+    pool = _CeleryStyleWorkerPool(slurm, n_slots=4)
+    for _ in range(n_tasks):
+        pool.submit(task_s)
+    time.sleep(task_s * 4)
+    ext_wait2 = {}
+
+    def ext_job2(cancel_event=None):
+        ext_wait2["run"] = time.perf_counter()
+
+    t_sub = time.perf_counter()
+    slurm.sbatch(ext_job2, name="external-user", cpus=1, user="someone_else")
+    while pool.done < n_tasks:
+        time.sleep(0.005)
+    t_all2 = time.perf_counter() - t_sub
+    pool.shutdown()
+    slurm.wait_all(timeout=30.0)
+    wait_celery = ext_wait2.get("run", time.perf_counter()) - t_sub
+    slurm.shutdown()
+    rows.append(("external_wait_celery", wait_celery * 1e6,
+                 f"external user waited {wait_celery*1e3:.0f} ms "
+                 f"(vs {wait_ksa*1e3:.0f} ms under KSA)"))
+    rows.append(("campaign_celery", t_all2 * 1e6,
+                 f"campaign {t_all2:.2f} s, slots held for the whole run"))
+    return rows
+
+
+def bench_startup_sync() -> list[tuple[str, float, str]]:
+    """§6: agent/monitor startup vs number of retained task statuses."""
+    rows = []
+    for n in (1_000, 10_000, 50_000):
+        b = Broker()
+        sub = Submitter(b, "st")
+        p = Producer(b)
+        for i in range(n):
+            p.send("st-jobs", {"task_id": f"t{i}", "status": "DONE",
+                               "attempt": 0}, key=f"t{i}")
+        t0 = time.perf_counter()
+        mon = MonitorAgent(b, "st", poll_interval_s=0.001).start()
+        while mon.summary()["tasks"] < n:
+            time.sleep(0.002)
+        dt = time.perf_counter() - t0
+        mon.stop()
+        b.close()
+        rows.append((f"monitor_startup_{n}_statuses", dt / n * 1e6,
+                     f"{dt:.2f} s to sync {n} statuses"))
+    return rows
+
+
+def bench_failure_recovery() -> list[tuple[str, float, str]]:
+    """Watchdog redelivery latency: agent dies mid-task -> replacement
+    completes; reports the added makespan."""
+    b = Broker(session_timeout_s=0.5)
+    sub = Submitter(b, "fr")
+    mon = MonitorAgent(b, "fr", task_timeout_s=0.4,
+                       poll_interval_s=0.005).start()
+    a1 = WorkerAgent(b, "fr", slots=1, poll_interval_s=0.005,
+                     heartbeat_interval_s=0.1).start()
+    t0 = time.perf_counter()
+    tid = sub.submit("sleep", params={"duration": 0.2})
+    time.sleep(0.05)
+    a1.crash()
+    a2 = WorkerAgent(b, "fr", slots=1, poll_interval_s=0.005,
+                     heartbeat_interval_s=0.1).start()
+    ok = mon.wait_all([tid], timeout=30.0)
+    dt = time.perf_counter() - t0
+    a2.stop()
+    mon.stop()
+    b.close()
+    return [("failure_recovery_e2e", dt * 1e6,
+             f"{'ok' if ok else 'FAILED'}: 0.2s task survived agent kill "
+             f"in {dt:.2f} s")]

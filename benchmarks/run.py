@@ -1,0 +1,42 @@
+"""Benchmark driver — one benchmark per paper table/figure/§6 factor.
+Prints ``name,us_per_call,derived`` CSV. Roofline tables (the LM perf
+report) are produced separately by ``python -m benchmarks.roofline`` from
+the dry-run artifacts."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import bench_apps, bench_core
+
+    suites = [
+        ("broker_throughput", bench_core.bench_broker_throughput),
+        ("submit_latency", bench_core.bench_submit_latency),
+        ("oversubscription_vs_celery",
+         bench_core.bench_oversubscription_vs_celery),
+        ("startup_sync", bench_core.bench_startup_sync),
+        ("failure_recovery", bench_core.bench_failure_recovery),
+        ("writhe_kernel", bench_apps.bench_writhe_kernel),
+        ("knot_campaign", bench_apps.bench_knot_campaign),
+        ("train_step", bench_apps.bench_train_step),
+        ("serve_continuous_batching",
+         bench_apps.bench_serve_continuous_batching),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.2f},\"{derived}\"", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,\"ERROR\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

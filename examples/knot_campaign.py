@@ -1,0 +1,80 @@
+"""The paper's application end-to-end: an AlphaKnot-style knot-detection
+campaign over synthetic protein backbones, with a mid-campaign agent failure
+(straggler mitigation / at-least-once redelivery in action).
+
+Structures are processed in batches (paper §4: batches of 4000 across 3
+clusters; here scaled to the container) through the two-stage pipeline:
+writhe/ACN screen → knot-core localization.
+
+Run:  PYTHONPATH=src python examples/knot_campaign.py [--structures 128]
+"""
+import argparse
+import time
+
+from repro.apps import knots  # registers the "knot_batch" script
+from repro.core import Broker, MonitorAgent, SimSlurm, ClusterAgent, \
+    Submitter, WorkerAgent
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--structures", type=int, default=96)
+    ap.add_argument("--batch-size", type=int, default=12)
+    ap.add_argument("--n-points", type=int, default=96)
+    args = ap.parse_args()
+
+    broker = Broker(default_partitions=4, session_timeout_s=2.0)
+    sub = Submitter(broker, "alphaknot")
+    mon = MonitorAgent(broker, "alphaknot", task_timeout_s=60.0,
+                       max_attempts=4).start()
+    slurm = SimSlurm(nodes=2, cpus_per_node=1)
+    agents = [
+        ClusterAgent(broker, slurm, "alphaknot", oversubscribe=2).start(),
+        WorkerAgent(broker, "alphaknot", slots=1,
+                    heartbeat_interval_s=0.2).start(),
+    ]
+
+    ids = list(range(args.structures))
+    t0 = time.time()
+    tids = sub.submit_batches("knot_batch", ids, batch_size=args.batch_size,
+                              params={"n_points": args.n_points,
+                                      "stage2": True},
+                              timeout_s=120.0)
+    print(f"campaign: {len(ids)} structures in {len(tids)} batch tasks "
+          f"across 1 cluster + 1 workstation")
+
+    # inject a failure once the campaign is under way (paper-motivating
+    # scenario: a node dies mid-campaign; the watchdog redelivers)
+    time.sleep(1.0)
+    print("!! killing the workstation agent mid-campaign")
+    agents[1].crash()
+
+    assert mon.wait_all(tids, timeout=900.0), "campaign stalled"
+    dt = time.time() - t0
+
+    knotted, cores, processed = [], {}, 0
+    for t in tids:
+        r = mon.task(t).result
+        processed += r["processed"]
+        knotted += r["knotted"]
+        cores.update(r["cores"])
+    print(f"\nprocessed {processed} structures in {dt:.1f}s "
+          f"({processed/dt:.1f}/s) despite the failure")
+    print(f"knotted: {len(knotted)} "
+          f"(expected ~{int(args.structures * 0.75 * 0.85)} — "
+          f"3 of 4 families are knotted, minus pLDDT-style drops)")
+    sample = list(cores.items())[:5]
+    for sid, (a, b) in sample:
+        print(f"  structure {sid}: knot core ≈ residues [{a}, {b})")
+    print("monitor summary:", mon.summary())
+
+    for a in agents:
+        a.stop()
+    mon.stop()
+    slurm.shutdown()
+    broker.close()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import knots
+
+__all__ = ["knots"]

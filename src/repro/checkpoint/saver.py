@@ -1,0 +1,216 @@
+"""Sharded, checksummed, async checkpointing.
+
+Layout (one directory per step, atomically renamed into place):
+
+    <dir>/ckpt_<step>/
+        manifest.json       # treedef, per-leaf shape/dtype/file/offset/crc
+        shard_00000.bin.zst # concatenated leaf buffers, zstd-compressed
+
+Writes go to ``.tmp-ckpt_<step>`` and rename on success, so a crash mid-save
+never corrupts the latest checkpoint — the restart path always finds either
+the previous complete step or the new complete step (the idempotence the KSA
+step-chunk tasks rely on). ``async_save`` runs serialization on a background
+thread and overlaps with the next training chunk; the returned handle joins
+and re-raises. Restore accepts a ``like`` tree (ShapeDtypeStructs with
+shardings) and ``device_put``s each leaf to its target sharding — this is the
+resharding path used when the mesh changes between runs (elastic restart).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_SHARD_TARGET_BYTES = 128 * 1024 * 1024
+
+
+def _tree_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat]
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
+                    *, extra: dict | None = None) -> str:
+    """Synchronous save; returns the checkpoint path."""
+    directory = Path(directory)
+    final = directory / f"ckpt_{step:08d}"
+    tmp = directory / f".tmp-ckpt_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _tree_paths(tree)
+    manifest: dict = {"step": int(step), "extra": extra or {}, "leaves": [],
+                      "format": 1}
+    cctx = zstandard.ZstdCompressor(level=3)
+    shard_idx = 0
+    shard_buf: list[bytes] = []
+    shard_bytes = 0
+
+    def flush():
+        nonlocal shard_idx, shard_buf, shard_bytes
+        if not shard_buf:
+            return
+        raw = b"".join(shard_buf)
+        (tmp / f"shard_{shard_idx:05d}.bin.zst").write_bytes(
+            cctx.compress(raw))
+        shard_idx += 1
+        shard_buf = []
+        shard_bytes = 0
+
+    for name, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        buf = arr.tobytes()
+        manifest["leaves"].append({
+            "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "shard": shard_idx, "offset": shard_bytes, "nbytes": len(buf),
+            "crc": zlib.crc32(buf) & 0xFFFFFFFF,
+        })
+        shard_buf.append(buf)
+        shard_bytes += len(buf)
+        if shard_bytes >= _SHARD_TARGET_BYTES:
+            flush()
+    flush()
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return str(final)
+
+
+def restore_checkpoint(path: str | os.PathLike, tree_like: Any
+                       ) -> tuple[Any, dict]:
+    """Restore into the structure of ``tree_like``. Leaves of ``tree_like``
+    may be arrays or ShapeDtypeStructs (optionally carrying ``.sharding``,
+    in which case each leaf is device_put to it — resharding on restore).
+    Returns (tree, manifest_extra)."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    dctx = zstandard.ZstdDecompressor()
+    shards: dict[int, bytes] = {}
+
+    def shard(i: int) -> bytes:
+        if i not in shards:
+            shards[i] = dctx.decompress(
+                (path / f"shard_{i:05d}.bin.zst").read_bytes(),
+                max_output_size=2 ** 34)
+        return shards[i]
+
+    names_like = _tree_paths(tree_like)
+    leaves_out = []
+    for name, like in names_like:
+        e = by_name.get(name)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        raw = shard(e["shard"])[e["offset"]: e["offset"] + e["nbytes"]]
+        if (zlib.crc32(raw) & 0xFFFFFFFF) != e["crc"]:
+            raise IOError(f"checksum mismatch for {name}")
+        arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(
+            e["shape"]).copy()
+        want_dtype = jnp.dtype(like.dtype)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {like.shape}")
+        sharding = getattr(like, "sharding", None)
+        val = jnp.asarray(arr, want_dtype)
+        if sharding is not None:
+            val = jax.device_put(val, sharding)  # reshard on restore
+        leaves_out.append(val)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves_out), \
+        manifest.get("extra", {})
+
+
+class _AsyncHandle:
+    def __init__(self, thread: threading.Thread, box: dict):
+        self._t = thread
+        self._box = box
+
+    def result(self, timeout: float | None = None) -> str:
+        self._t.join(timeout)
+        if self._t.is_alive():
+            raise TimeoutError("checkpoint save still running")
+        if "error" in self._box:
+            raise self._box["error"]
+        return self._box["path"]
+
+
+class CheckpointManager:
+    """Directory of step checkpoints with retention + async save + latest().
+
+    ``on_save`` hook lets the trainer announce new checkpoints on the broker
+    (the MonitorAgent keeps the checkpoint registry)."""
+
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3,
+                 on_save=None):
+        self.directory = Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.on_save = on_save
+        self._lock = threading.Lock()
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.directory.glob("ckpt_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest(self) -> tuple[int, str] | None:
+        s = self.steps()
+        if not s:
+            return None
+        return s[-1], str(self.directory / f"ckpt_{s[-1]:08d}")
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.directory / f"ckpt_{s:08d}",
+                          ignore_errors=True)
+
+    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> str:
+        # snapshot to host BEFORE returning so the caller may mutate state
+        with self._lock:
+            path = save_checkpoint(self.directory, step, tree, extra=extra)
+            self._gc()
+        if self.on_save:
+            self.on_save(step, path)
+        return path
+
+    def async_save(self, step: int, tree: Any, *,
+                   extra: dict | None = None) -> _AsyncHandle:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        box: dict = {}
+
+        def work():
+            try:
+                box["path"] = self.save(step, host_tree, extra=extra)
+            except Exception as exc:  # noqa: BLE001
+                box["error"] = exc
+
+        t = threading.Thread(target=work, daemon=True,
+                             name=f"ckpt-save-{step}")
+        t.start()
+        return _AsyncHandle(t, box)
+
+    def restore_latest(self, tree_like: Any):
+        latest = self.latest()
+        if latest is None:
+            return None
+        step, path = latest
+        tree, extra = restore_checkpoint(path, tree_like)
+        return step, tree, extra

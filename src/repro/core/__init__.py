@@ -1,0 +1,25 @@
+"""repro.core — the kafka-slurm-agent (KSA) control plane, embedded.
+
+Components (paper §3): :class:`Submitter`, :class:`ClusterAgent`,
+:class:`WorkerAgent`, :class:`MonitorAgent`, communicating asynchronously over
+a durable log (:class:`Broker`) with the paper's four-topic layout.
+"""
+from .broker import (Broker, BrokerError, Consumer, FencedError, Producer,
+                     Record, TopicPartition)
+from .computing import (ClusterComputing, TaskCancelled, register_script,
+                        registered_scripts, resolve_script)
+from .agents import AgentBase, ClusterAgent, WorkerAgent
+from .messages import (ErrorMessage, Resources, ResultMessage, StatusUpdate,
+                       TaskMessage, TaskStatus, new_task_id, topic_names)
+from .monitor import MonitorAgent, TaskEntry
+from .simslurm import SimSlurm
+from .submitter import Submitter
+
+__all__ = [
+    "AgentBase", "Broker", "BrokerError", "ClusterAgent", "ClusterComputing",
+    "Consumer", "ErrorMessage", "FencedError", "MonitorAgent", "Producer",
+    "Record", "Resources", "ResultMessage", "SimSlurm", "StatusUpdate",
+    "Submitter", "TaskCancelled", "TaskEntry", "TaskMessage", "TaskStatus",
+    "TopicPartition", "WorkerAgent", "new_task_id", "register_script",
+    "registered_scripts", "resolve_script", "topic_names",
+]

@@ -1,0 +1,348 @@
+"""ClusterAgent and WorkerAgent — the compute-side components of KSA (§3).
+
+Both subscribe to the ``PREFIX-new`` topic in a shared consumer group (so the
+broker load-balances tasks across every agent on every cluster/workstation) and
+differ only in *where* they run the work:
+
+* :class:`WorkerAgent` — "executes the retrieved tasks directly on the
+  workstation where it is running, using separate threads for each task."
+* :class:`ClusterAgent` — submits tasks as Slurm jobs and manages their
+  execution, including the paper's queue-filling strategy: "always submit more
+  tasks to Slurm than can be immediately started … This approach ensures that
+  the Slurm queue always has tasks waiting, allowing Slurm to start subsequent
+  tasks as soon as resources become available", and the watchdog: "If a task
+  hangs or exceeds the predefined timeout, the ClusterAgent intervenes by
+  canceling the associated Slurm job."
+
+Fault-tolerance contract (two levels, matching the paper):
+
+1. *lease-commit*: an agent commits its consumer offset when it has accepted
+   (leased) a task. If the agent dies **before** accepting, the group
+   rebalance hands the partition — and the unread task — to a surviving agent.
+2. *watchdog redelivery*: if the agent dies (or the task hangs) **after**
+   accepting, the MonitorAgent notices the missing heartbeat/timeout and
+   resubmits the task with a bumped attempt (at-least-once end-to-end;
+   the monitor fences duplicate results by attempt).
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from .broker import Broker, Consumer, Producer
+from .computing import ClusterComputing, resolve_script
+from .messages import StatusUpdate, TaskMessage, TaskStatus, topic_names
+from .simslurm import SimSlurm
+
+log = logging.getLogger(__name__)
+
+
+@dataclass
+class _Running:
+    task: TaskMessage
+    cancel: threading.Event
+    thread: threading.Thread | None = None
+    slurm_job_id: int | None = None
+    started_at: float = field(default_factory=time.time)
+    last_heartbeat: float = field(default_factory=time.time)
+
+
+class AgentBase:
+    """Shared polling/lease/watchdog loop."""
+
+    kind = "agent"
+
+    def __init__(self, broker: Broker, prefix: str = "ksa", *,
+                 agent_id: str | None = None,
+                 slots: int = 4,
+                 oversubscribe: int = 0,
+                 poll_interval_s: float = 0.05,
+                 heartbeat_interval_s: float = 0.5,
+                 default_timeout_s: float | None = None):
+        self.broker = broker
+        self.prefix = prefix
+        self.topics = topic_names(prefix)
+        self.agent_id = agent_id or f"{self.kind}-{id(self) & 0xffff:04x}"
+        self.slots = slots
+        # paper's ClusterAgent strategy: keep `oversubscribe` extra tasks
+        # queued beyond what can start immediately.
+        self.oversubscribe = oversubscribe
+        self.poll_interval_s = poll_interval_s
+        self.heartbeat_interval_s = heartbeat_interval_s
+        self.default_timeout_s = default_timeout_s
+        self._producer = Producer(broker)
+        self._consumer = Consumer(broker, [self.topics["new"]],
+                                  group_id=f"{prefix}-agents",
+                                  member_id=f"{prefix}-agents-{self.agent_id}")
+        self._running: dict[str, _Running] = {}
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._crashed = threading.Event()  # test hook: simulate sudden death
+        self.tasks_completed = 0
+        self.tasks_failed = 0
+
+    # -- capacity -------------------------------------------------------------
+
+    def _in_flight(self) -> int:
+        with self._lock:
+            return len(self._running)
+
+    def _capacity(self) -> int:
+        """How many more tasks to lease right now."""
+        return (self.slots + self.oversubscribe) - self._in_flight()
+
+    # -- main loop ----------------------------------------------------------------
+
+    def start(self) -> "AgentBase":
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"{self.agent_id}-loop",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set() and not self._crashed.is_set():
+            try:
+                self._tick()
+            except Exception:  # pragma: no cover - defensive
+                log.exception("agent %s tick failed", self.agent_id)
+            self._stop.wait(self.poll_interval_s)
+        if not self._crashed.is_set():
+            self._drain()
+        # crashed agents do NOT leave the group: the broker's session timeout
+        # must evict them (that is the failure mode being simulated).
+        if not self._crashed.is_set():
+            self._consumer.close()
+
+    def _tick(self) -> None:
+        cap = self._capacity()
+        if cap > 0:
+            batches = self._consumer.poll(timeout=0.0, max_records=cap)
+            for recs in batches.values():
+                for rec in recs:
+                    task = TaskMessage.from_dict(rec.value)
+                    self._accept(task)
+            if batches:
+                self._consumer.commit()  # lease-commit (see module docstring)
+        else:
+            # still heartbeat group membership while saturated
+            try:
+                self.broker.heartbeat(f"{self.prefix}-agents",
+                                      self._consumer.member_id)
+            except Exception:
+                pass
+        self._watchdog()
+        self._heartbeat_running()
+
+    # -- acceptance (subclass hook) --------------------------------------------
+
+    def _accept(self, task: TaskMessage) -> None:
+        raise NotImplementedError
+
+    def _send_status(self, task: TaskMessage, status: TaskStatus | str,
+                     **info: Any) -> None:
+        upd = StatusUpdate(task_id=task.task_id,
+                           status=str(getattr(status, "value", status)),
+                           agent_id=self.agent_id, attempt=task.attempt,
+                           info=info)
+        self._producer.send(self.topics["jobs"], upd.to_dict(),
+                            key=task.task_id)
+
+    # -- watchdog (paper §3: cancel hung / timed-out tasks) -----------------------
+
+    def _watchdog(self) -> None:
+        now = time.time()
+        with self._lock:
+            items = list(self._running.items())
+        for tid, run in items:
+            timeout = run.task.timeout_s or self.default_timeout_s
+            if timeout is None:
+                continue
+            if now - run.started_at > timeout and not run.cancel.is_set():
+                log.warning("agent %s: task %s exceeded %.1fs — cancelling",
+                            self.agent_id, tid, timeout)
+                self._cancel_task(run)
+                self._send_status(run.task, TaskStatus.TIMEOUT,
+                                  timeout_s=timeout)
+
+    def _cancel_task(self, run: _Running) -> None:
+        run.cancel.set()
+
+    def _heartbeat_running(self) -> None:
+        now = time.time()
+        with self._lock:
+            items = list(self._running.values())
+        for run in items:
+            if now - run.last_heartbeat >= self.heartbeat_interval_s:
+                run.last_heartbeat = now
+                self._send_status(run.task, TaskStatus.RUNNING,
+                                  heartbeat=True, elapsed_s=now - run.started_at)
+
+    # -- completion ------------------------------------------------------------------
+
+    def _finish(self, task: TaskMessage, ok: bool) -> None:
+        with self._lock:
+            self._running.pop(task.task_id, None)
+        if ok:
+            self.tasks_completed += 1
+        else:
+            self.tasks_failed += 1
+
+    # -- lifecycle ------------------------------------------------------------------
+
+    def _drain(self) -> None:
+        """On graceful stop, cancel in-flight work so it gets redelivered."""
+        with self._lock:
+            runs = list(self._running.values())
+        for run in runs:
+            self._cancel_task(run)
+        deadline = time.time() + 2.0
+        while time.time() < deadline and self._in_flight() > 0:
+            time.sleep(0.01)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+    def crash(self) -> None:
+        """Test hook: die abruptly — no drain, no group leave, and no further
+        messages of any kind (the producer is killed, as a dead process would
+        be). The broker's session timeout + the MonitorAgent watchdog must
+        recover the work."""
+        self._crashed.set()
+        self._producer.kill()
+        with self._lock:
+            for run in self._running.values():
+                run.cancel.set()  # stop burning CPU; nothing is sent
+
+    @property
+    def alive(self) -> bool:
+        return (self._thread is not None and self._thread.is_alive()
+                and not self._crashed.is_set())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "agent_id": self.agent_id,
+                "kind": self.kind,
+                "in_flight": len(self._running),
+                "completed": self.tasks_completed,
+                "failed": self.tasks_failed,
+                "slots": self.slots,
+                "oversubscribe": self.oversubscribe,
+            }
+
+
+class WorkerAgent(AgentBase):
+    """Runs tasks directly in threads on the local machine (paper §3)."""
+
+    kind = "worker"
+
+    def _accept(self, task: TaskMessage) -> None:
+        cancel = threading.Event()
+        run = _Running(task=task, cancel=cancel)
+        with self._lock:
+            self._running[task.task_id] = run
+        self._send_status(task, TaskStatus.WAITING)
+
+        def _target() -> None:
+            if self._crashed.is_set():
+                return
+            cls = resolve_script(task.script)
+            comp = cls(task, self._producer, self.prefix, self.agent_id,
+                       cancel_event=cancel)
+            ok = False
+            try:
+                ok = comp.execute()
+            finally:
+                if not self._crashed.is_set():
+                    self._finish(task, ok)
+                else:
+                    with self._lock:
+                        self._running.pop(task.task_id, None)
+
+        t = threading.Thread(target=_target,
+                             name=f"{self.agent_id}-{task.task_id}",
+                             daemon=True)
+        run.thread = t
+        t.start()
+
+
+class ClusterAgent(AgentBase):
+    """Submits tasks as (simulated) Slurm jobs and manages their lifecycle.
+
+    ``slots`` is derived from the cluster size; ``oversubscribe`` > 0 enables
+    the paper's keep-the-queue-full strategy. The agent holds **no** compute
+    resources itself — between tasks, nodes are free for other users (the
+    exact property that distinguishes KSA from Celery-style long-running
+    workers, paper §2).
+    """
+
+    kind = "cluster"
+
+    def __init__(self, broker: Broker, slurm: SimSlurm, prefix: str = "ksa",
+                 *, oversubscribe: int | None = None, user: str = "ksa",
+                 **kw: Any):
+        slots = kw.pop("slots", slurm.total_cpus)
+        if oversubscribe is None:
+            oversubscribe = max(2, slots // 2)  # paper: always keep extras queued
+        super().__init__(broker, prefix, slots=slots,
+                         oversubscribe=oversubscribe, **kw)
+        self.slurm = slurm
+        self.user = user
+
+    def _accept(self, task: TaskMessage) -> None:
+        cancel = threading.Event()
+        run = _Running(task=task, cancel=cancel)
+
+        def _job(cancel_event: threading.Event | None = None) -> None:
+            # runs inside a SimSlurm slot; honour both the agent's cancel and
+            # Slurm's scancel/walltime event.
+            if self._crashed.is_set():
+                return
+            merged = cancel
+            if cancel_event is not None:
+                def _pump() -> None:
+                    while not merged.is_set():
+                        if cancel_event.is_set():
+                            merged.set()
+                            return
+                        time.sleep(0.01)
+                threading.Thread(target=_pump, daemon=True).start()
+            cls = resolve_script(task.script)
+            comp = cls(task, self._producer, self.prefix, self.agent_id,
+                       cancel_event=merged)
+            ok = False
+            try:
+                ok = comp.execute()
+            finally:
+                if not self._crashed.is_set():
+                    self._finish(task, ok)
+                else:
+                    with self._lock:
+                        self._running.pop(task.task_id, None)
+
+        job_id = self.slurm.sbatch(
+            _job, name=task.task_id, cpus=task.resources.cpus,
+            gpus=task.resources.gpus, walltime_s=task.timeout_s,
+            user=self.user)
+        run.slurm_job_id = job_id
+        with self._lock:
+            self._running[task.task_id] = run
+        self._send_status(task, TaskStatus.WAITING, slurm_job_id=job_id)
+
+    def _capacity(self) -> int:
+        # lease only while the Slurm queue has room below the oversubscription
+        # target: running-or-pending jobs < slots + oversubscribe.
+        q = len(self.slurm.squeue(user=self.user))
+        return (self.slots + self.oversubscribe) - max(q, self._in_flight())
+
+    def _cancel_task(self, run: _Running) -> None:
+        run.cancel.set()
+        if run.slurm_job_id is not None:
+            self.slurm.scancel(run.slurm_job_id)

@@ -1,0 +1,610 @@
+"""Embedded Kafka-like durable log — the communication layer of the KSA
+control plane.
+
+The paper uses an external Apache Kafka broker as the single piece of shared
+infrastructure ("the only requirement is that an Apache Kafka broker be
+exposed and accessible from every cluster node or workstation", §1). This
+module provides an embedded broker with the same *semantics* so the framework
+is dependency-free in this container while keeping the exact API shape of
+kafka-python (``producer.send`` / ``consumer.poll`` / ``commit`` / ``seek``)
+behind a transport seam — a real Kafka client can be substituted by
+implementing the same five methods on :class:`Broker`.
+
+Faithfully implemented Kafka semantics the paper relies on (§3, §6):
+
+* topics split into **partitions**; records carry ``(topic, partition,
+  offset)`` coordinates; keyed records hash to a stable partition,
+* **consumer groups** with committed offsets per ``(group, topic, partition)``;
+  two groups each see every record (broadcast — the paper's "multiple
+  MonitorAgents, each receiving a copy"), members of one group load-balance
+  partitions (the paper's "each result retrieved and handled by only one of
+  the active MonitorAgents"),
+* **cooperative rebalance** on membership change (agent joins/leaves/dies) with
+  a bumped generation — this is what makes the agent pool *elastic*,
+* **at-least-once** (commit after processing; redelivery after a crash) vs
+  **exactly-once** (atomic process+produce+commit transaction) selected per
+  consumer — the configurability the paper cites as the reason Kafka was
+  chosen,
+* optional **durability**: per-partition segment files (length-prefixed
+  msgpack frames) with replay on restart, plus a committed-offset log; message
+  retention is bounded by ``retention_records`` per partition (§6 mentions the
+  broker-side retention policy).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+import struct
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import msgpack
+
+
+# --------------------------------------------------------------------------
+# Records
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Record:
+    topic: str
+    partition: int
+    offset: int
+    key: str | None
+    value: Any
+    timestamp: float
+
+
+@dataclass(frozen=True)
+class TopicPartition:
+    topic: str
+    partition: int
+
+
+class BrokerError(RuntimeError):
+    pass
+
+
+class UnknownTopicError(BrokerError):
+    pass
+
+
+class FencedError(BrokerError):
+    """Raised when a consumer from an old generation tries to commit."""
+
+
+def _hash_key(key: str, n: int) -> int:
+    h = hashlib.md5(key.encode("utf-8")).digest()
+    return int.from_bytes(h[:4], "big") % n
+
+
+# --------------------------------------------------------------------------
+# Partition log (+ optional segment-file durability)
+# --------------------------------------------------------------------------
+
+_FRAME = struct.Struct("<I")
+
+
+class _PartitionLog:
+    """Append-only in-memory log with an optional on-disk segment file."""
+
+    def __init__(self, topic: str, partition: int, log_dir: str | None,
+                 retention_records: int | None, fsync: bool):
+        self.topic = topic
+        self.partition = partition
+        self.records: list[Record] = []
+        self.base_offset = 0  # offset of records[0] after retention trimming
+        self.next_offset = 0
+        self.retention = retention_records
+        self._fsync = fsync
+        self._fh: io.BufferedWriter | None = None
+        if log_dir is not None:
+            os.makedirs(log_dir, exist_ok=True)
+            path = os.path.join(log_dir, f"{topic}-{partition}.log")
+            self._replay(path)
+            self._fh = open(path, "ab")
+
+    def _replay(self, path: str) -> None:
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as fh:
+            data = fh.read()
+        pos = 0
+        while pos + _FRAME.size <= len(data):
+            (length,) = _FRAME.unpack_from(data, pos)
+            pos += _FRAME.size
+            if pos + length > len(data):
+                break  # truncated tail frame (crash mid-write): drop it
+            frame = msgpack.unpackb(data[pos:pos + length], raw=False)
+            pos += length
+            self.records.append(Record(
+                topic=self.topic, partition=self.partition,
+                offset=frame["o"], key=frame.get("k"), value=frame["v"],
+                timestamp=frame.get("t", 0.0)))
+        if self.records:
+            self.base_offset = self.records[0].offset
+            self.next_offset = self.records[-1].offset + 1
+
+    def append(self, key: str | None, value: Any, ts: float) -> Record:
+        rec = Record(self.topic, self.partition, self.next_offset, key, value, ts)
+        self.records.append(rec)
+        self.next_offset += 1
+        if self._fh is not None:
+            frame = msgpack.packb(
+                {"o": rec.offset, "k": key, "v": value, "t": ts},
+                use_bin_type=True)
+            self._fh.write(_FRAME.pack(len(frame)))
+            self._fh.write(frame)
+            self._fh.flush()
+            if self._fsync:
+                os.fsync(self._fh.fileno())
+        if self.retention is not None and len(self.records) > self.retention:
+            drop = len(self.records) - self.retention
+            self.records = self.records[drop:]
+            self.base_offset = self.records[0].offset
+        return rec
+
+    def fetch(self, offset: int, max_records: int) -> list[Record]:
+        offset = max(offset, self.base_offset)
+        idx = offset - self.base_offset
+        if idx >= len(self.records):
+            return []
+        return self.records[idx: idx + max_records]
+
+    def end_offset(self) -> int:
+        return self.next_offset
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+# --------------------------------------------------------------------------
+# Consumer groups
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class _Member:
+    member_id: str
+    topics: tuple[str, ...]
+    last_heartbeat: float = field(default_factory=time.time)
+
+
+@dataclass
+class _Group:
+    group_id: str
+    members: dict[str, _Member] = field(default_factory=dict)
+    generation: int = 0
+    assignment: dict[str, list[TopicPartition]] = field(default_factory=dict)
+    committed: dict[TopicPartition, int] = field(default_factory=dict)
+
+
+class Broker:
+    """Thread-safe embedded broker. All public methods may be called from any
+    thread; blocking fetches use a condition variable so co-located agents see
+    ~zero poll latency (the paper's polling-interval overhead, §6, collapses
+    when the broker is embedded)."""
+
+    def __init__(self, log_dir: str | None = None, *,
+                 default_partitions: int = 4,
+                 retention_records: int | None = None,
+                 session_timeout_s: float = 10.0,
+                 fsync: bool = False):
+        self._lock = threading.RLock()
+        self._data_arrived = threading.Condition(self._lock)
+        self._topics: dict[str, list[_PartitionLog]] = {}
+        self._groups: dict[str, _Group] = {}
+        self._log_dir = log_dir
+        self._default_partitions = default_partitions
+        self._retention = retention_records
+        self._fsync = fsync
+        self.session_timeout_s = session_timeout_s
+        self._member_seq = 0
+        self._closed = False
+        self._offsets_path = (os.path.join(log_dir, "_offsets.log")
+                              if log_dir else None)
+        if self._offsets_path:
+            self._replay_offsets()
+
+    # -- topics ------------------------------------------------------------
+
+    def create_topic(self, name: str, partitions: int | None = None) -> None:
+        with self._lock:
+            if name in self._topics:
+                return
+            n = partitions or self._default_partitions
+            self._topics[name] = [
+                _PartitionLog(name, p, self._log_dir, self._retention,
+                              self._fsync)
+                for p in range(n)
+            ]
+
+    def topics(self) -> list[str]:
+        with self._lock:
+            return sorted(self._topics)
+
+    def partitions_for(self, topic: str) -> int:
+        with self._lock:
+            self._ensure_topic(topic)
+            return len(self._topics[topic])
+
+    def _ensure_topic(self, topic: str) -> None:
+        if topic not in self._topics:
+            # auto-create, like Kafka's auto.create.topics.enable
+            n = self._default_partitions
+            self._topics[topic] = [
+                _PartitionLog(topic, p, self._log_dir, self._retention,
+                              self._fsync)
+                for p in range(n)
+            ]
+
+    # -- produce / fetch ----------------------------------------------------
+
+    def produce(self, topic: str, value: Any, key: str | None = None,
+                partition: int | None = None) -> Record:
+        with self._lock:
+            self._ensure_topic(topic)
+            logs = self._topics[topic]
+            if partition is None:
+                if key is not None:
+                    partition = _hash_key(key, len(logs))
+                else:
+                    partition = min(range(len(logs)),
+                                    key=lambda p: logs[p].end_offset())
+            rec = logs[partition].append(key, value, time.time())
+            self._data_arrived.notify_all()
+            return rec
+
+    def fetch(self, tp: TopicPartition, offset: int,
+              max_records: int = 500) -> list[Record]:
+        with self._lock:
+            self._ensure_topic(tp.topic)
+            return self._topics[tp.topic][tp.partition].fetch(offset, max_records)
+
+    def end_offset(self, tp: TopicPartition) -> int:
+        with self._lock:
+            self._ensure_topic(tp.topic)
+            return self._topics[tp.topic][tp.partition].end_offset()
+
+    def wait_for_data(self, timeout: float) -> None:
+        """Block until any record is produced (or timeout)."""
+        with self._lock:
+            self._data_arrived.wait(timeout)
+
+    # -- consumer groups ----------------------------------------------------
+
+    def join_group(self, group_id: str, topics: Sequence[str],
+                   member_id: str | None = None) -> tuple[str, int]:
+        """Register a member; returns (member_id, generation). Triggers a
+        rebalance (range assignor over the union of subscribed topics)."""
+        with self._lock:
+            for t in topics:
+                self._ensure_topic(t)
+            grp = self._groups.setdefault(group_id, _Group(group_id))
+            if member_id is None:
+                self._member_seq += 1
+                member_id = f"{group_id}-member-{self._member_seq}"
+            grp.members[member_id] = _Member(member_id, tuple(topics))
+            self._rebalance(grp)
+            return member_id, grp.generation
+
+    def leave_group(self, group_id: str, member_id: str) -> None:
+        with self._lock:
+            grp = self._groups.get(group_id)
+            if grp and member_id in grp.members:
+                del grp.members[member_id]
+                self._rebalance(grp)
+
+    def heartbeat(self, group_id: str, member_id: str) -> int:
+        """Refresh liveness; returns current generation (consumer compares to
+        detect rebalances). Also lazily evicts dead members."""
+        with self._lock:
+            grp = self._groups.get(group_id)
+            if grp is None or member_id not in grp.members:
+                raise FencedError(f"unknown member {member_id} in {group_id}")
+            grp.members[member_id].last_heartbeat = time.time()
+            self._evict_dead(grp)
+            return grp.generation
+
+    def _evict_dead(self, grp: _Group) -> None:
+        now = time.time()
+        dead = [m for m, st in grp.members.items()
+                if now - st.last_heartbeat > self.session_timeout_s]
+        for m in dead:
+            del grp.members[m]
+        if dead:
+            self._rebalance(grp)
+
+    def evict_expired_members(self) -> None:
+        """Watchdog entry point: evict all session-expired members (elastic
+        downscale path — the broker notices a dead agent and reassigns its
+        partitions to the survivors)."""
+        with self._lock:
+            for grp in self._groups.values():
+                self._evict_dead(grp)
+
+    def _rebalance(self, grp: _Group) -> None:
+        grp.generation += 1
+        grp.assignment = {m: [] for m in grp.members}
+        if not grp.members:
+            return
+        # range assignor per topic, deterministic member order
+        members = sorted(grp.members)
+        topics = sorted({t for m in grp.members.values() for t in m.topics})
+        for topic in topics:
+            subs = [m for m in members if topic in grp.members[m].topics]
+            if not subs:
+                continue
+            nparts = len(self._topics[topic])
+            for p in range(nparts):
+                owner = subs[p % len(subs)]
+                grp.assignment[owner].append(TopicPartition(topic, p))
+        self._data_arrived.notify_all()
+
+    def assignment(self, group_id: str, member_id: str) -> list[TopicPartition]:
+        with self._lock:
+            grp = self._groups.get(group_id)
+            if grp is None or member_id not in grp.members:
+                return []
+            return list(grp.assignment.get(member_id, []))
+
+    def generation(self, group_id: str) -> int:
+        with self._lock:
+            grp = self._groups.get(group_id)
+            return grp.generation if grp else 0
+
+    # -- offsets -------------------------------------------------------------
+
+    def commit(self, group_id: str, offsets: Mapping[TopicPartition, int],
+               member_id: str | None = None,
+               generation: int | None = None) -> None:
+        with self._lock:
+            grp = self._groups.setdefault(group_id, _Group(group_id))
+            if generation is not None and generation != grp.generation:
+                raise FencedError(
+                    f"commit from stale generation {generation} "
+                    f"(current {grp.generation})")
+            for tp, off in offsets.items():
+                grp.committed[tp] = off
+            self._persist_offsets(group_id, offsets)
+
+    def committed(self, group_id: str, tp: TopicPartition) -> int:
+        with self._lock:
+            grp = self._groups.get(group_id)
+            if grp is None:
+                return 0
+            return grp.committed.get(tp, 0)
+
+    # -- transactions (exactly-once) -----------------------------------------
+
+    def transact(self, group_id: str, offsets: Mapping[TopicPartition, int],
+                 produces: Iterable[tuple[str, Any, str | None]],
+                 member_id: str | None = None,
+                 generation: int | None = None) -> list[Record]:
+        """Atomically: verify generation fencing, append all ``produces``
+        ``(topic, value, key)``, and commit ``offsets``. This is the Kafka
+        read-process-write transaction that gives exactly-once stream
+        processing; with the single broker lock it is genuinely atomic."""
+        with self._lock:
+            grp = self._groups.setdefault(group_id, _Group(group_id))
+            if generation is not None and generation != grp.generation:
+                raise FencedError(
+                    f"transaction from stale generation {generation} "
+                    f"(current {grp.generation})")
+            out = [self.produce(t, v, key=k) for (t, v, k) in produces]
+            for tp, off in offsets.items():
+                grp.committed[tp] = off
+            self._persist_offsets(group_id, offsets)
+            return out
+
+    # -- offset durability -----------------------------------------------------
+
+    def _persist_offsets(self, group_id: str,
+                         offsets: Mapping[TopicPartition, int]) -> None:
+        if not self._offsets_path:
+            return
+        with open(self._offsets_path, "ab") as fh:
+            for tp, off in offsets.items():
+                frame = msgpack.packb(
+                    {"g": group_id, "t": tp.topic, "p": tp.partition, "o": off},
+                    use_bin_type=True)
+                fh.write(_FRAME.pack(len(frame)))
+                fh.write(frame)
+
+    def _replay_offsets(self) -> None:
+        path = self._offsets_path
+        if not path or not os.path.exists(path):
+            return
+        with open(path, "rb") as fh:
+            data = fh.read()
+        pos = 0
+        while pos + _FRAME.size <= len(data):
+            (length,) = _FRAME.unpack_from(data, pos)
+            pos += _FRAME.size
+            if pos + length > len(data):
+                break
+            d = msgpack.unpackb(data[pos:pos + length], raw=False)
+            pos += length
+            grp = self._groups.setdefault(d["g"], _Group(d["g"]))
+            grp.committed[TopicPartition(d["t"], d["p"])] = d["o"]
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            for logs in self._topics.values():
+                for log in logs:
+                    log.close()
+
+    # stats for the MonitorAgent REST API / benchmarks
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "topics": {
+                    t: {str(p): logs[p].end_offset() for p in range(len(logs))}
+                    for t, logs in self._topics.items()
+                },
+                "groups": {
+                    g: {
+                        "members": sorted(grp.members),
+                        "generation": grp.generation,
+                        "committed": {
+                            f"{tp.topic}:{tp.partition}": off
+                            for tp, off in sorted(
+                                grp.committed.items(),
+                                key=lambda kv: (kv[0].topic, kv[0].partition))
+                        },
+                    }
+                    for g, grp in self._groups.items()
+                },
+            }
+
+
+# --------------------------------------------------------------------------
+# kafka-python-shaped clients
+# --------------------------------------------------------------------------
+
+
+class Producer:
+    """API shape of ``kafka.KafkaProducer`` (paper §5 uses kafka-python-ng)."""
+
+    def __init__(self, broker: Broker):
+        self._broker = broker
+        self._dead = False
+
+    def send(self, topic: str, value: Any, key: str | None = None,
+             partition: int | None = None) -> Record | None:
+        if self._dead:  # simulated process death (see AgentBase.crash)
+            return None
+        return self._broker.produce(topic, value, key=key, partition=partition)
+
+    def kill(self) -> None:
+        """Test hook: silently drop all future sends, as a dead process would."""
+        self._dead = True
+
+    def flush(self) -> None:  # embedded log is synchronous; kept for API parity
+        pass
+
+
+class Consumer:
+    """Group consumer with the kafka-python API shape.
+
+    ``semantics`` selects the paper's delivery knob:
+
+    * ``"at_least_once"`` — caller processes records then calls ``commit()``;
+      a crash before commit redelivers (to whichever member owns the partition
+      after the next rebalance).
+    * ``"exactly_once"`` — caller uses :meth:`process_transactionally`, which
+      runs the handler and atomically appends its output records + commits the
+      input offsets under generation fencing.
+    """
+
+    def __init__(self, broker: Broker, topics: Sequence[str], group_id: str,
+                 *, semantics: str = "at_least_once",
+                 max_poll_records: int = 500,
+                 member_id: str | None = None):
+        if semantics not in ("at_least_once", "exactly_once"):
+            raise ValueError(f"unknown semantics: {semantics}")
+        self._broker = broker
+        self._group = group_id
+        self.semantics = semantics
+        self._max_poll = max_poll_records
+        self._topics = tuple(topics)
+        self.member_id, self._generation = broker.join_group(
+            group_id, topics, member_id=member_id)
+        self._positions: dict[TopicPartition, int] = {}
+        self._pending: dict[TopicPartition, int] = {}
+        self._closed = False
+
+    # -- assignment bookkeeping --------------------------------------------
+
+    def _sync_assignment(self) -> list[TopicPartition]:
+        gen = self._broker.heartbeat(self._group, self.member_id)
+        if gen != self._generation:
+            # rebalance happened: drop positions for partitions we lost,
+            # re-seek newly acquired partitions to their committed offset.
+            self._generation = gen
+            self._positions = {}
+            self._pending = {}
+        assignment = self._broker.assignment(self._group, self.member_id)
+        for tp in assignment:
+            if tp not in self._positions:
+                self._positions[tp] = self._broker.committed(self._group, tp)
+        return assignment
+
+    def assignment(self) -> list[TopicPartition]:
+        return self._sync_assignment()
+
+    # -- polling -------------------------------------------------------------
+
+    def poll(self, timeout: float = 0.0,
+             max_records: int | None = None) -> dict[TopicPartition, list[Record]]:
+        if self._closed:
+            raise BrokerError("consumer is closed")
+        deadline = time.time() + timeout
+        max_records = max_records or self._max_poll
+        while True:
+            out: dict[TopicPartition, list[Record]] = {}
+            budget = max_records
+            for tp in self._sync_assignment():
+                if budget <= 0:
+                    break
+                recs = self._broker.fetch(tp, self._positions[tp], budget)
+                if recs:
+                    out[tp] = recs
+                    self._positions[tp] = recs[-1].offset + 1
+                    self._pending[tp] = recs[-1].offset + 1
+                    budget -= len(recs)
+            if out or time.time() >= deadline:
+                return out
+            self._broker.wait_for_data(max(0.0, deadline - time.time()))
+
+    # -- offsets ---------------------------------------------------------------
+
+    def commit(self) -> None:
+        """At-least-once commit of everything returned by previous polls."""
+        if self._pending:
+            self._broker.commit(self._group, dict(self._pending),
+                                member_id=self.member_id,
+                                generation=self._generation)
+            self._pending = {}
+
+    def seek(self, tp: TopicPartition, offset: int) -> None:
+        self._positions[tp] = offset
+
+    def position(self, tp: TopicPartition) -> int:
+        return self._positions.get(tp, self._broker.committed(self._group, tp))
+
+    # -- exactly-once -----------------------------------------------------------
+
+    def process_transactionally(
+        self, handler: Callable[[list[Record]], Iterable[tuple[str, Any, str | None]]],
+        timeout: float = 0.0,
+    ) -> int:
+        """Poll once; run ``handler(records) -> [(topic, value, key), ...]``;
+        atomically append outputs and commit inputs. Returns #records
+        processed. If the handler raises, nothing commits (pure redelivery)."""
+        batches = self.poll(timeout)
+        records = [r for recs in batches.values() for r in recs]
+        if not records:
+            return 0
+        produces = list(handler(records))
+        self._broker.transact(self._group, dict(self._pending), produces,
+                              member_id=self.member_id,
+                              generation=self._generation)
+        self._pending = {}
+        return len(records)
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._broker.leave_group(self._group, self.member_id)

@@ -1,0 +1,198 @@
+"""Message schemas for the KSA control plane.
+
+The paper (kafka-slurm-agent, §3/§5) routes four kinds of messages over four
+Kafka topics:
+
+  ``PREFIX-new``   — task descriptions to be computed,
+  ``PREFIX-jobs``  — task status updates (SUBMITTED, WAITING, RUNNING, DONE, ...),
+  ``PREFIX-done``  — results of finished tasks,
+  ``PREFIX-error`` — error reports.
+
+We keep the same four-topic layout and the same lifecycle, and add the fields
+needed for at-least-once redelivery with attempt fencing (``attempt``) which the
+paper lists as a future extension ("running multiple copies of each task ...
+the current implementation of the status update mechanism is not designed to
+handle this scenario").
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+import uuid
+from typing import Any, Mapping
+
+
+class TaskStatus(str, enum.Enum):
+    """Lifecycle from the paper's ``PREFIX-jobs`` topic (§5), plus the
+    timeout/cancel states implied by the ClusterAgent watchdog (§3)."""
+
+    SUBMITTED = "SUBMITTED"
+    WAITING = "WAITING"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    ERROR = "ERROR"
+    TIMEOUT = "TIMEOUT"
+    CANCELLED = "CANCELLED"
+    # custom statuses may be emitted by computing scripts at any point (§5);
+    # anything not in this enum is passed through verbatim as a string.
+
+
+TERMINAL_STATUSES = frozenset(
+    {TaskStatus.DONE, TaskStatus.ERROR, TaskStatus.CANCELLED}
+)
+
+
+def topic_names(prefix: str) -> Mapping[str, str]:
+    """The paper's default topic layout (§5)."""
+    return {
+        "new": f"{prefix}-new",
+        "jobs": f"{prefix}-jobs",
+        "done": f"{prefix}-done",
+        "error": f"{prefix}-error",
+    }
+
+
+@dataclasses.dataclass
+class Resources:
+    """Resource request serialized with every task (paper §5: GPU, memory,
+    number of CPUs)."""
+
+    cpus: int = 1
+    gpus: int = 0
+    mem_mb: int = 1024
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any] | None) -> "Resources":
+        if d is None:
+            return cls()
+        return cls(**{k: d[k] for k in ("cpus", "gpus", "mem_mb") if k in d})
+
+
+@dataclasses.dataclass
+class TaskMessage:
+    """A unit of work on ``PREFIX-new``.
+
+    ``script`` names the computation (paper: the Python script to run; here:
+    a registered ``ClusterComputing`` subclass or callable kind such as
+    ``"train_chunk"``, ``"knot_batch"``, ``"serve_microbatch"``).
+    ``params`` is the arbitrary JSON-serializable payload the paper passes to
+    the computing script as its configuration.
+    """
+
+    task_id: str
+    script: str
+    params: dict = dataclasses.field(default_factory=dict)
+    resources: Resources = dataclasses.field(default_factory=Resources)
+    attempt: int = 0
+    timeout_s: float | None = None
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["resources"] = self.resources.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TaskMessage":
+        return cls(
+            task_id=d["task_id"],
+            script=d["script"],
+            params=dict(d.get("params", {})),
+            resources=Resources.from_dict(d.get("resources")),
+            attempt=int(d.get("attempt", 0)),
+            timeout_s=d.get("timeout_s"),
+            submitted_at=float(d.get("submitted_at", time.time())),
+        )
+
+    def retry(self) -> "TaskMessage":
+        """A redelivery copy with a bumped attempt counter (fencing token)."""
+        nxt = dataclasses.replace(self, attempt=self.attempt + 1)
+        return nxt
+
+
+@dataclasses.dataclass
+class StatusUpdate:
+    """A record on ``PREFIX-jobs``."""
+
+    task_id: str
+    status: str
+    agent_id: str = ""
+    attempt: int = 0
+    info: dict = dataclasses.field(default_factory=dict)
+    ts: float = dataclasses.field(default_factory=time.time)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "StatusUpdate":
+        return cls(
+            task_id=d["task_id"],
+            status=str(d["status"]),
+            agent_id=d.get("agent_id", ""),
+            attempt=int(d.get("attempt", 0)),
+            info=dict(d.get("info", {})),
+            ts=float(d.get("ts", time.time())),
+        )
+
+
+@dataclasses.dataclass
+class ResultMessage:
+    """A record on ``PREFIX-done``. Bulk outputs stay off-broker (the paper
+    ships structure batches via shared storage); ``result`` carries metrics and
+    *references* (e.g. checkpoint paths)."""
+
+    task_id: str
+    agent_id: str
+    result: dict = dataclasses.field(default_factory=dict)
+    attempt: int = 0
+    elapsed_s: float = 0.0
+    ts: float = dataclasses.field(default_factory=time.time)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ResultMessage":
+        return cls(
+            task_id=d["task_id"],
+            agent_id=d.get("agent_id", ""),
+            result=dict(d.get("result", {})),
+            attempt=int(d.get("attempt", 0)),
+            elapsed_s=float(d.get("elapsed_s", 0.0)),
+            ts=float(d.get("ts", time.time())),
+        )
+
+
+@dataclasses.dataclass
+class ErrorMessage:
+    """A record on ``PREFIX-error``."""
+
+    task_id: str
+    agent_id: str
+    error: str
+    traceback: str = ""
+    attempt: int = 0
+    ts: float = dataclasses.field(default_factory=time.time)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ErrorMessage":
+        return cls(
+            task_id=d["task_id"],
+            agent_id=d.get("agent_id", ""),
+            error=d.get("error", ""),
+            traceback=d.get("traceback", ""),
+            attempt=int(d.get("attempt", 0)),
+            ts=float(d.get("ts", time.time())),
+        )
+
+
+def new_task_id(prefix: str = "task") -> str:
+    return f"{prefix}-{uuid.uuid4().hex[:12]}"

@@ -1,0 +1,329 @@
+"""MonitorAgent — results collection, status tracking, watchdog, REST API.
+
+Paper §3: "The MonitorAgent is, in fact, an optional component. Its main role
+is to collect the results sent by each ClusterAgent and WorkerAgent upon task
+completion. It also monitors the status of each submitted task, including
+managing error messages through a separate flow with a designated topic. To
+simplify user interaction, the MonitorAgent provides a web-based REST API."
+
+Beyond the paper's baseline we implement the extension it names (§3): safe
+handling of multiple concurrent attempts of the same task. Results are
+**deduplicated and attempt-fenced** — the first DONE for a task wins, stale
+attempts are recorded but ignored — which is what makes the watchdog's
+resubmission (straggler mitigation) safe, i.e. exactly-once *effect* on top of
+at-least-once delivery.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import threading
+import time
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any
+
+from .broker import Broker, Consumer
+from .messages import (ErrorMessage, ResultMessage, StatusUpdate, TaskMessage,
+                       TaskStatus, topic_names)
+from .submitter import Submitter
+
+log = logging.getLogger(__name__)
+
+
+@dataclass
+class TaskEntry:
+    task: TaskMessage | None = None
+    status: str = TaskStatus.SUBMITTED.value
+    attempt: int = 0
+    agent_id: str = ""
+    last_update: float = field(default_factory=time.time)
+    result: dict | None = None
+    result_attempt: int | None = None
+    errors: list[dict] = field(default_factory=list)
+    attempts_seen: int = 0
+    duplicate_results: int = 0
+    history: list[tuple[float, str, int]] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def to_dict(self) -> dict:
+        return {
+            "status": self.status,
+            "attempt": self.attempt,
+            "agent_id": self.agent_id,
+            "last_update": self.last_update,
+            "done": self.done,
+            "result": self.result,
+            "result_attempt": self.result_attempt,
+            "errors": self.errors[-3:],
+            "duplicate_results": self.duplicate_results,
+        }
+
+
+class MonitorAgent:
+    """Consumes ``jobs``/``done``/``error`` (and ``new``, to learn task
+    definitions for resubmission) and maintains the task table.
+
+    ``group_id`` semantics follow the paper: give each monitor its own group
+    to broadcast every record to every monitor; share a group to load-balance
+    result handling across monitors.
+    """
+
+    def __init__(self, broker: Broker, prefix: str = "ksa", *,
+                 monitor_id: str = "monitor-0",
+                 group_id: str | None = None,
+                 task_timeout_s: float | None = None,
+                 max_attempts: int = 3,
+                 retry_on_error: bool = True,
+                 retry_on_timeout: bool = True,
+                 poll_interval_s: float = 0.05):
+        self.broker = broker
+        self.prefix = prefix
+        self.topics = topic_names(prefix)
+        self.monitor_id = monitor_id
+        self.task_timeout_s = task_timeout_s
+        self.max_attempts = max_attempts
+        self.retry_on_error = retry_on_error
+        self.retry_on_timeout = retry_on_timeout
+        self.poll_interval_s = poll_interval_s
+        self._submitter = Submitter(broker, prefix)
+        gid = group_id or f"{prefix}-monitor-{monitor_id}"
+        self._consumer = Consumer(
+            broker,
+            [self.topics["new"], self.topics["jobs"], self.topics["done"],
+             self.topics["error"]],
+            group_id=gid, member_id=f"{gid}-{monitor_id}")
+        self._table: dict[str, TaskEntry] = {}
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._http: ThreadingHTTPServer | None = None
+        self.results_handled = 0
+        self.resubmissions = 0
+
+    # -- ingestion --------------------------------------------------------------
+
+    def _entry(self, task_id: str) -> TaskEntry:
+        e = self._table.get(task_id)
+        if e is None:
+            e = TaskEntry()
+            self._table[task_id] = e
+        return e
+
+    def _ingest(self, topic: str, value: dict) -> None:
+        with self._lock:
+            if topic == self.topics["new"]:
+                task = TaskMessage.from_dict(value)
+                e = self._entry(task.task_id)
+                e.task = task
+                e.attempts_seen = max(e.attempts_seen, task.attempt + 1)
+                # a resubmission supersedes older attempts
+                if task.attempt >= e.attempt and not e.done:
+                    e.attempt = task.attempt
+                    e.status = TaskStatus.SUBMITTED.value
+                    e.last_update = time.time()
+            elif topic == self.topics["jobs"]:
+                upd = StatusUpdate.from_dict(value)
+                e = self._entry(upd.task_id)
+                e.history.append((upd.ts, upd.status, upd.attempt))
+                if e.done:
+                    return  # terminal result already accepted
+                if upd.attempt < e.attempt:
+                    return  # fenced: stale attempt
+                e.attempt = upd.attempt
+                e.status = upd.status
+                e.agent_id = upd.agent_id or e.agent_id
+                e.last_update = time.time()
+            elif topic == self.topics["done"]:
+                res = ResultMessage.from_dict(value)
+                e = self._entry(res.task_id)
+                if e.done:
+                    e.duplicate_results += 1  # fenced duplicate (late attempt)
+                    return
+                e.result = res.result
+                e.result_attempt = res.attempt
+                e.status = TaskStatus.DONE.value
+                e.agent_id = res.agent_id
+                e.last_update = time.time()
+                self.results_handled += 1
+            elif topic == self.topics["error"]:
+                err = ErrorMessage.from_dict(value)
+                e = self._entry(err.task_id)
+                e.errors.append({"error": err.error, "attempt": err.attempt,
+                                 "agent_id": err.agent_id})
+                e.last_update = time.time()
+                if not e.done and err.attempt >= e.attempt:
+                    e.status = TaskStatus.ERROR.value
+                    self._maybe_resubmit(e, reason="error")
+
+    # -- watchdog / straggler mitigation --------------------------------------------
+
+    def _maybe_resubmit(self, e: TaskEntry, reason: str) -> None:
+        if e.task is None or e.done:
+            return
+        if reason == "error" and not self.retry_on_error:
+            return
+        if reason in ("timeout", "stale") and not self.retry_on_timeout:
+            return
+        if e.attempts_seen >= self.max_attempts:
+            log.warning("task %s exhausted %d attempts (%s)",
+                        e.task.task_id, e.attempts_seen, reason)
+            return
+        nxt = TaskMessage.from_dict(e.task.to_dict())
+        nxt.attempt = e.attempt
+        self._submitter.resubmit(nxt)
+        e.attempts_seen += 1
+        e.attempt = nxt.attempt + 1
+        e.status = TaskStatus.SUBMITTED.value
+        e.last_update = time.time()
+        self.resubmissions += 1
+        log.info("resubmitted %s (attempt %d, reason=%s)",
+                 e.task.task_id, e.attempt, reason)
+
+    def _watchdog(self) -> None:
+        if self.task_timeout_s is None:
+            return
+        now = time.time()
+        with self._lock:
+            for tid, e in self._table.items():
+                if e.done or e.task is None:
+                    continue
+                if e.status in (TaskStatus.SUBMITTED.value,
+                                TaskStatus.WAITING.value,
+                                TaskStatus.RUNNING.value,
+                                TaskStatus.TIMEOUT.value,
+                                TaskStatus.CANCELLED.value):
+                    # CANCELLED-without-result means the work did not finish
+                    # (graceful agent shutdown mid-task) — recover it too.
+                    stale_for = now - e.last_update
+                    if e.status == TaskStatus.TIMEOUT.value or \
+                            stale_for > self.task_timeout_s:
+                        self._maybe_resubmit(e, reason="timeout")
+
+    # -- main loop -----------------------------------------------------------------
+
+    def start(self) -> "MonitorAgent":
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"{self.monitor_id}-loop",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                batches = self._consumer.poll(timeout=self.poll_interval_s)
+                for tp, recs in batches.items():
+                    for rec in recs:
+                        self._ingest(tp.topic, rec.value)
+                if batches:
+                    self._consumer.commit()
+                self._watchdog()
+                self.broker.evict_expired_members()
+            except Exception:  # pragma: no cover - defensive
+                log.exception("monitor %s loop error", self.monitor_id)
+                time.sleep(self.poll_interval_s)
+        self._consumer.close()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+        self.stop_http()
+
+    # -- queries ----------------------------------------------------------------------
+
+    def task(self, task_id: str) -> TaskEntry | None:
+        with self._lock:
+            return self._table.get(task_id)
+
+    def tasks(self) -> dict[str, TaskEntry]:
+        with self._lock:
+            return dict(self._table)
+
+    def pending(self) -> list[str]:
+        with self._lock:
+            return [t for t, e in self._table.items() if not e.done]
+
+    def all_done(self, task_ids: list[str] | None = None) -> bool:
+        with self._lock:
+            ids = task_ids if task_ids is not None else list(self._table)
+            return all(self._table.get(t) is not None and self._table[t].done
+                       for t in ids)
+
+    def wait_all(self, task_ids: list[str], timeout: float = 60.0,
+                 poll: float = 0.02) -> bool:
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if self.all_done(task_ids):
+                return True
+            time.sleep(poll)
+        return False
+
+    def summary(self) -> dict:
+        with self._lock:
+            by_status: dict[str, int] = {}
+            for e in self._table.values():
+                by_status[e.status] = by_status.get(e.status, 0) + 1
+            return {
+                "tasks": len(self._table),
+                "done": sum(e.done for e in self._table.values()),
+                "by_status": by_status,
+                "results_handled": self.results_handled,
+                "resubmissions": self.resubmissions,
+                "duplicates_fenced": sum(e.duplicate_results
+                                         for e in self._table.values()),
+            }
+
+    # -- REST API (paper §3: "a web-based REST API") ------------------------------------
+
+    def start_http(self, port: int = 0) -> int:
+        mon = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *a: Any) -> None:  # quiet
+                pass
+
+            def _send(self, code: int, payload: Any) -> None:
+                body = json.dumps(payload).encode()
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self) -> None:  # noqa: N802 - http.server API
+                parts = [p for p in self.path.split("/") if p]
+                if parts == ["tasks"]:
+                    with mon._lock:
+                        self._send(200, {t: e.to_dict()
+                                         for t, e in mon._table.items()})
+                elif len(parts) == 2 and parts[0] == "tasks":
+                    e = mon.task(parts[1])
+                    if e is None:
+                        self._send(404, {"error": "unknown task"})
+                    else:
+                        self._send(200, e.to_dict())
+                elif parts == ["summary"]:
+                    self._send(200, mon.summary())
+                elif parts == ["broker"]:
+                    self._send(200, mon.broker.stats())
+                else:
+                    self._send(404, {"error": "unknown endpoint",
+                                     "endpoints": ["/tasks", "/tasks/<id>",
+                                                   "/summary", "/broker"]})
+
+        self._http = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+        t = threading.Thread(target=self._http.serve_forever,
+                             name=f"{self.monitor_id}-http", daemon=True)
+        t.start()
+        return self._http.server_address[1]
+
+    def stop_http(self) -> None:
+        if self._http is not None:
+            self._http.shutdown()
+            self._http.server_close()
+            self._http = None

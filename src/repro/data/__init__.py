@@ -1,0 +1,3 @@
+from .synthetic import SyntheticLMStream, batch_at
+
+__all__ = ["SyntheticLMStream", "batch_at"]

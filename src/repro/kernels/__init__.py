@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each with a jit'd
+dispatch wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+* ``flash_attention`` — causal/sliding-window GQA, online softmax, VMEM
+  block tiling with causal/window block skipping;
+* ``ssd``             — Mamba-2 chunked SSD scan, recurrent state in VMEM
+  scratch across the sequential chunk grid;
+* ``writhe``          — the paper's workload: Gauss-linking writhe map over
+  segment-pair blocks (AlphaKnot's knot screen / knot-core heuristic).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

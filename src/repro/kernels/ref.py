@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+``attention_ref`` / ``ssd_ref`` delegate to the model-stack implementations
+(which are themselves validated against naive math in the model tests), so
+kernels, models, and refs form one consistency triangle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention
+from repro.models.ssd import ssd_chunked
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             kv_chunk=max(int(k.shape[1]), 1))
+
+
+def ssd_ref(x, dt, a, bmat, cmat, *, chunk=64):
+    y, _ = ssd_chunked(x, dt, a, bmat, cmat, chunk=chunk)
+    return y
+
+
+def writhe_map_ref(coords: jax.Array) -> jax.Array:
+    """coords: (B, n, 3) -> (B, n-1, n-1) Gauss-integral writhe map
+    (Klenin–Langowski method 1a), straightforward broadcast implementation."""
+    p1 = coords[:, :-1, None, :]   # (B, i, 1, 3)
+    p2 = coords[:, 1:, None, :]
+    q1 = coords[:, None, :-1, :]   # (B, 1, j, 3)
+    q2 = coords[:, None, 1:, :]
+    r13 = q1 - p1
+    r14 = q2 - p1
+    r23 = q1 - p2
+    r24 = q2 - p2
+
+    def norm(x):
+        return x / jnp.sqrt((x * x).sum(-1, keepdims=True) + 1e-12)
+
+    n1 = norm(jnp.cross(r13, r14))
+    n2 = norm(jnp.cross(r14, r24))
+    n3 = norm(jnp.cross(r24, r23))
+    n4 = norm(jnp.cross(r23, r13))
+
+    def asin_dot(a, b):
+        return jnp.arcsin(jnp.clip((a * b).sum(-1), -1.0, 1.0))
+
+    omega = (asin_dot(n1, n2) + asin_dot(n2, n3) +
+             asin_dot(n3, n4) + asin_dot(n4, n1))
+    sign = jnp.sign((jnp.cross(q2 - q1, p2 - p1) * r13).sum(-1))
+    w = omega * sign / (4.0 * jnp.pi) * 2.0
+    nseg = w.shape[1]
+    ii = jnp.arange(nseg)[:, None]
+    jj = jnp.arange(nseg)[None, :]
+    return jnp.where(jnp.abs(ii - jj) <= 1, 0.0, w)

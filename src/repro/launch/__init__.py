@@ -1,0 +1,7 @@
+"""Launchers: production mesh, per-cell input specs, multi-pod dry-run.
+
+NOTE: do not import dryrun from here — it sets XLA_FLAGS at import time and
+must be the process's first jax-touching import."""
+from .mesh import make_production_mesh, make_smoke_mesh
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]

@@ -1,0 +1,13 @@
+from .config import (FrontendConfig, MLAConfig, ModelConfig, MoEConfig,
+                     RGLRUConfig, SSMConfig)
+from .params import (count_params, init_params, logical_axes, param_shapes,
+                     ParamSpec)
+from .transformer import (block_apply, block_spec, cache_shapes, forward,
+                          init_caches, model_spec)
+
+__all__ = [
+    "FrontendConfig", "MLAConfig", "ModelConfig", "MoEConfig", "ParamSpec",
+    "RGLRUConfig", "SSMConfig", "block_apply", "block_spec", "cache_shapes",
+    "count_params", "forward", "init_caches", "init_params", "logical_axes",
+    "model_spec", "param_shapes",
+]

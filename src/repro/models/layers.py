@@ -1,0 +1,108 @@
+"""Shared layers: RMSNorm, RoPE, gated MLPs, embeddings.
+
+All layers are pure functions over explicit parameter pytrees (declared via
+:class:`~repro.models.params.ParamSpec`), so they can be scanned, rematted,
+and dry-run lowered without a module framework.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+# -- RMSNorm -----------------------------------------------------------------
+
+def rmsnorm_spec(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs  # (S, D/2)
+        ang = ang[None, :, None, :]                           # (1, S, 1, D/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+        ang = ang[:, :, None, :]                                 # (B, S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP ------------------------------------------------------------------------
+
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "ff"), init="lecun"),
+            "w_up": ParamSpec((d, f), ("embed", "ff"), init="lecun"),
+            "w_down": ParamSpec((f, d), ("ff", "embed"), init="lecun"),
+        }
+    return {  # plain gelu MLP (hubert)
+        "w_up": ParamSpec((d, f), ("embed", "ff"), init="lecun"),
+        "w_down": ParamSpec((f, d), ("ff", "embed"), init="lecun"),
+    }
+
+
+def mlp(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda u: jax.nn.gelu(u, approximate=True))
+        g = act(x @ params["w_gate"])
+        u = x @ params["w_up"]
+        return (g * u) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"], approximate=True)
+    return h @ params["w_down"]
+
+
+# -- Embedding / head ---------------------------------------------------------------
+
+def embedding_spec(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab
+    d = {"embedding": ParamSpec((v, cfg.d_model),
+                                ("vocab", "embed"), init="normal", scale=0.02)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamSpec((cfg.d_model, v),
+                                 ("embed", "vocab"), init="lecun")
+    return d
+
+
+def embed(params: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = params["embedding"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype).T
+    else:
+        w = params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", x, w,
+                      preferred_element_type=jnp.dtype(cfg.logit_dtype))

@@ -1,0 +1,106 @@
+"""Parameter-tree machinery: shapes + logical sharding axes, declared once.
+
+Every parameter is declared as a :class:`ParamSpec` (shape, logical axes,
+init). From the spec tree we derive, without ever materializing weights:
+
+* ``init_params(rng)``        — materialized pytree (smoke tests / real runs),
+* ``param_shapes()``          — ``jax.ShapeDtypeStruct`` tree (dry-run),
+* ``logical_axes()``          — pytree of logical-axis tuples, mapped to mesh
+                                ``PartitionSpec``s by ``repro.sharding.rules``.
+
+Logical axis vocabulary (resolved in ``repro/sharding/rules.py``):
+``embed`` (d_model), ``vocab``, ``heads``, ``kv_heads``, ``head_dim``, ``ff``,
+``experts``, ``expert_ff``, ``lora``, ``state``, ``conv``, ``layers``
+(scan-stacked leading axis), ``null`` (never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | lecun | lambda_rglru | dt_bias
+    scale: float | None = None  # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # convention: last axis is the output axis for 2D+ weights
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array, dtype: Any) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "lecun":
+        std = 1.0 / math.sqrt(max(_fan_in(spec.shape), 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "lambda_rglru":
+        # Griffin init: a^2 = uniform in [0.81, 0.9801] => Lambda s.t.
+        # sigmoid-free softplus parameterization lands in that band.
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))  # inverse softplus of -ln(u)/c
+        return lam.astype(dtype)
+    if spec.init == "dt_bias":
+        # mamba dt bias init: softplus^-1 of uniform[1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    if spec.init == "a_log":
+        # mamba2 A in [1, 16], stored as log
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, rng: jax.Array, dtype: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_shapes(specs: Any, dtype: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs, is_leaf=is_spec)
+
+
+def logical_axes(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def count_params(specs: Any) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def stack_specs(spec_tree: Any, n: int) -> Any:
+    """Prepend a scan ``layers`` axis of length ``n`` to every spec — the
+    parameter layout for ``lax.scan`` over a repeated layer period."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, scale=s.scale),
+        spec_tree, is_leaf=is_spec)

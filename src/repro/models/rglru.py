@@ -1,0 +1,142 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence is a gated linear RNN:
+
+    r_t = sigmoid(W_a u_t)                 (recurrence gate)
+    i_t = sigmoid(W_x u_t)                 (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+computed over chunks: sequential ``lax.scan`` across chunks carrying ``h``,
+log-depth ``associative_scan`` within a chunk — O(S·w) memory at chunk
+granularity instead of O(S·w) fp32 live for the whole sequence. Decode is the
+O(1) single-step update; the layer's "KV cache" is just ``(h, conv_state)``
+regardless of context length (this is why RecurrentGemma runs the 500k-token
+cell).
+
+Deviation from Griffin noted in DESIGN.md: gate projections W_a, W_x are full
+``w×w`` matrices rather than block-diagonal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RGLRUConfig
+from .params import ParamSpec
+
+
+def rglru_spec(cfg: ModelConfig) -> dict:
+    r = cfg.rglru or RGLRUConfig()
+    d = cfg.d_model
+    w = r.lru_width or d
+    return {
+        "w_x": ParamSpec((d, w), ("embed", "ff"), init="lecun"),
+        "w_gate_branch": ParamSpec((d, w), ("embed", "ff"), init="lecun"),
+        "conv_w": ParamSpec((r.conv_width, w), ("conv", "ff"), init="lecun"),
+        "conv_b": ParamSpec((w,), ("ff",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("ff", None), init="lecun"),
+        "w_i": ParamSpec((w, w), ("ff", None), init="lecun"),
+        "lam": ParamSpec((w,), ("ff",), init="lambda_rglru"),
+        "w_out": ParamSpec((w, d), ("ff", "embed"), init="lecun"),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. u: (B, S, W); w: (K, W); state: (B, K-1, W).
+    Returns (out, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)           # (B, K-1+S, W)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(k)) + b
+    new_state = ext[:, -(k - 1):] if k > 1 else state
+    return out.astype(u.dtype), new_state
+
+
+def _gates(params: dict, cfg: ModelConfig, u: jax.Array
+           ) -> tuple[jax.Array, jax.Array]:
+    """-> (a (log-space f32), gated input), both (..., W) f32."""
+    r = cfg.rglru or RGLRUConfig()
+    rt = jax.nn.sigmoid(u @ params["w_a"].astype(u.dtype)).astype(jnp.float32)
+    it = jax.nn.sigmoid(u @ params["w_i"].astype(u.dtype)).astype(jnp.float32)
+    log_a = -r.c * jax.nn.softplus(params["lam"].astype(jnp.float32)) * rt
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (it * u.astype(jnp.float32))
+    return a, x_in
+
+
+def rglru_scan(params: dict, cfg: ModelConfig, u: jax.Array, *,
+               h0: jax.Array | None = None, chunk: int = 512
+               ) -> tuple[jax.Array, jax.Array]:
+    """u: (B, S, W) -> (h_seq (B, S, W) in u.dtype, h_final (B, W) f32)."""
+    b, s, w = u.shape
+    a, x_in = _gates(params, cfg, u)
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+    c = min(chunk, s)
+    n = -(-s // c)
+    pad = n * c - s
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0)))
+    a_c = a.reshape(b, n, c, w).transpose(1, 0, 2, 3)
+    x_c = x_in.reshape(b, n, c, w).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, inp):
+        ac, xc = inp
+        # h_t within chunk: prefix-product/sum via associative scan
+        def combine(p, q):
+            (pa, pb), (qa, qb) = p, q
+            return pa * qa, qa * pb + qb
+        aa, bb = jax.lax.associative_scan(combine, (ac, xc), axis=1)
+        hseq = aa * h[:, None, :] + bb
+        return hseq[:, -1, :], hseq
+
+    h_fin, chunks = jax.lax.scan(chunk_body, h0, (a_c, x_c))
+    hs = chunks.transpose(1, 0, 2, 3).reshape(b, n * c, w)[:, :s]
+    return hs.astype(u.dtype), h_fin
+
+
+def rglru_step(params: dict, cfg: ModelConfig, u: jax.Array,
+               h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decode: u (B, 1, W), h (B, W) f32 -> (out (B, 1, W), h_new)."""
+    a, x_in = _gates(params, cfg, u)
+    h_new = a[:, 0] * h + x_in[:, 0]
+    return h_new[:, None, :].astype(u.dtype), h_new
+
+
+def rglru_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
+                cache: dict | None = None
+                ) -> tuple[jax.Array, dict | None]:
+    """Full Griffin recurrent block: in-proj → conv → RG-LRU, gated, out-proj.
+
+    x: (B, S, d). ``cache``: {"h": (B, W) f32, "conv": (B, K-1, W)}.
+    """
+    dt = x.dtype
+    u = x @ params["w_x"].astype(dt)
+    gate = jax.nn.gelu(x @ params["w_gate_branch"].astype(dt), approximate=True)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, params["conv_w"].astype(dt),
+                               params["conv_b"].astype(dt), conv_state)
+    if cache is not None and x.shape[1] == 1:
+        hs, h_new = rglru_step(params, cfg, u, cache["h"])
+    else:
+        h0 = cache["h"] if cache is not None else None
+        hs, h_new = rglru_scan(params, cfg, u, h0=h0)
+    y = (hs * gate) @ params["w_out"].astype(dt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_new, "conv": new_conv}
+    return y, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    r = cfg.rglru or RGLRUConfig()
+    w = r.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,180 @@
+"""Mamba-2 SSD — state-space duality block (arXiv:2405.21060).
+
+The selective state space recurrence
+
+    h_t = exp(dt_t · A) h_{t-1} + dt_t · B_t x_tᵀ        (state: (H, P, N))
+    y_t = C_t h_t + D ⊙ x_t
+
+is computed with the paper's **chunked block decomposition**: within a chunk
+the output is an attention-like (L×L) causal matrix  M_ij = (C_i·B_j) ·
+exp(cum_i − cum_j) · dt_j  applied to X; across chunks a small state (H, P, N)
+is carried sequentially. This keeps everything MXU-shaped (the reason SSD
+exists) and is exactly the structure the Pallas kernel
+(``repro.kernels.ssd``) tiles into VMEM. Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+
+def ssd_spec(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = cfg.ssd_inner
+    nh = cfg.ssd_heads
+    n = s.d_state
+    return {
+        # in_proj: [z (di), x (di), B (n), C (n), dt (nh)]  (n_groups = 1)
+        "w_in": ParamSpec((d, 2 * di + 2 * n + nh), ("embed", "ff"),
+                          init="lecun"),
+        "conv_w": ParamSpec((s.d_conv, di + 2 * n), ("conv", "ff"),
+                            init="lecun"),
+        "conv_b": ParamSpec((di + 2 * n,), ("ff",), init="zeros"),
+        "a_log": ParamSpec((nh,), ("heads",), init="a_log"),
+        "dt_bias": ParamSpec((nh,), ("heads",), init="dt_bias"),
+        "d_skip": ParamSpec((nh,), ("heads",), init="ones"),
+        "norm": {"scale": ParamSpec((di,), ("ff",), init="ones")},
+        "w_out": ParamSpec((di, d), ("ff", "embed"), init="lecun"),
+    }
+
+
+def _split_in(cfg: ModelConfig, proj: jax.Array):
+    di = cfg.ssd_inner
+    n = cfg.ssm.d_state
+    nh = cfg.ssd_heads
+    z, x, bmat, cmat, dt = jnp.split(proj, [di, 2 * di, 2 * di + n,
+                                            2 * di + 2 * n], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                cmat: jax.Array, *, chunk: int,
+                h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H) (post-softplus); a: (H,) negative;
+    bmat/cmat: (B,S,N) (single group). Returns (y (B,S,H,P), h (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sc = nc * c
+    xc = x.reshape(b, nc, c, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, c, h).transpose(1, 0, 2, 3).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(hprev, inp):
+        xk, dtk, bk, ck = inp                       # (B,c,H,P),(B,c,H),(B,c,N)
+        la = dtk * a[None, None, :]                 # log decay per step (B,c,H)
+        cum = jnp.cumsum(la, axis=1)                # (B,c,H)
+        # intra-chunk: M_ij = (C_i·B_j) exp(cum_i - cum_j) dt_j   (i >= j)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk,
+                        preferred_element_type=jnp.float32)      # (B,c,c)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]            # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        m = jnp.where(mask[None, :, :, None], jnp.exp(dec), 0.0)
+        m = m * cb[:, :, :, None] * dtk[:, None, :, :]           # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xk.astype(jnp.float32))
+        # inter-chunk: y += C_i exp(cum_i) h_prev
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", ck.astype(jnp.float32),
+                             hprev, jnp.exp(cum))
+        # state update: h = exp(cum_L) h_prev + sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+        decay_tail = jnp.exp(cum[:, -1, None, :] - cum)          # (B,c,H)
+        h_new = jnp.einsum("bch,bcn,bchp->bhpn",
+                           decay_tail * dtk, bk.astype(jnp.float32),
+                           xk.astype(jnp.float32))
+        h_new = h_new + jnp.exp(cum[:, -1])[:, :, None, None] * hprev
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_fin, ys = jax.lax.scan(body, h0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, sc, h, p)[:, :s]
+    return y, h_fin
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, hprev: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    """Decode: x (B,1,H,P), dt (B,1,H), b/c (B,1,N), h (B,H,P,N)."""
+    dtf = dt[:, 0].astype(jnp.float32)                   # (B,H)
+    decay = jnp.exp(dtf * a[None, :])                    # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dtf, bmat[:, 0].astype(jnp.float32),
+                     x[:, 0].astype(jnp.float32))
+    h = decay[:, :, None, None] * hprev + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h)
+    return y[:, None].astype(x.dtype), h
+
+
+def _rmsnorm_gated(scale: jax.Array, x: jax.Array, z: jax.Array,
+                   eps: float) -> jax.Array:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ssd_block(params: dict, cfg: ModelConfig, x_in: jax.Array, *,
+              cache: dict | None = None
+              ) -> tuple[jax.Array, dict | None]:
+    """Full Mamba-2 block. x_in: (B, S, d).
+    ``cache``: {"h": (B,H,P,N) f32, "conv": (B, d_conv-1, di+2N)}."""
+    s_cfg = cfg.ssm
+    b, s, _ = x_in.shape
+    dt_ = x_in.dtype
+    di = cfg.ssd_inner
+    nh = cfg.ssd_heads
+    p = s_cfg.head_dim
+    proj = x_in @ params["w_in"].astype(dt_)
+    z, xbc_x, bmat, cmat, dtp = _split_in(cfg, proj)
+    # conv over concat(x, B, C)
+    xbc = jnp.concatenate([xbc_x, bmat, cmat], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    k = s_cfg.d_conv
+    if conv_state is None:
+        conv_state = jnp.zeros((b, k - 1, xbc.shape[-1]), dt_)
+    ext = jnp.concatenate([conv_state, xbc], axis=1)
+    conv_w = params["conv_w"].astype(dt_)
+    xbc = sum(ext[:, i:i + s] * conv_w[i] for i in range(k)) + \
+        params["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(xbc)
+    new_conv = ext[:, -(k - 1):] if k > 1 else conv_state
+    xs, bmat, cmat = jnp.split(xbc, [di, di + s_cfg.d_state], axis=-1)
+    xh = xs.reshape(b, s, nh, p)
+    dt_soft = jax.nn.softplus(dtp.astype(jnp.float32) +
+                              params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    if cache is not None and s == 1:
+        y, h_new = ssd_step(xh, dt_soft, a, bmat, cmat, cache["h"])
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_new = ssd_chunked(xh, dt_soft, a, bmat, cmat,
+                               chunk=s_cfg.chunk_size, h0=h0)
+    y = y + params["d_skip"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = _rmsnorm_gated(params["norm"]["scale"], y, z, cfg.rms_eps)
+    out = y @ params["w_out"].astype(dt_)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_new, "conv": new_conv}
+    return out, new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    return {
+        "h": jnp.zeros((batch, cfg.ssd_heads, s.head_dim, s.d_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, cfg.ssd_inner + 2 * s.d_state),
+                          dtype),
+    }

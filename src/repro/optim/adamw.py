@@ -1,0 +1,131 @@
+"""AdamW with the memory policies needed at 671B scale.
+
+* ``moment_dtype`` — bf16 first/second moments (DeepSeek-V3 trains with BF16
+  Adam moments; this is what makes the optimizer state of the 671B config
+  fit the assigned pod, see EXPERIMENTS.md §Dry-run),
+* ``factored_v`` — Adafactor-style factored second moment (row/col means over
+  the trailing two axes) for a further ~4 bytes/param saving,
+* ``master_dtype`` — fp32 master copy when model params are bf16; ``"none"``
+  keeps a single (fp32) copy in ``params``.
+
+Pure pytree functions — no optax dependency — so optimizer state inherits
+parameter shardings (ZeRO: state is sharded exactly like the FSDP'd params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    factored_v: bool = False
+    master_dtype: str = "float32"   # "none" => params are the master copy
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"
+
+
+def _can_factor(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adamw_init(params: Any, cfg: OptimizerConfig) -> dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+    if cfg.factored_v:
+        def make_v(p):
+            if _can_factor(p.shape):
+                return {"row": jnp.zeros(p.shape[:-1], mdt),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt)}
+            return {"full": jnp.zeros(p.shape, mdt)}
+        v = jax.tree.map(make_v, params)
+    else:
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+    state = {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
+    if cfg.master_dtype != "none":
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.master_dtype)), params)
+    return state
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _v_update_and_corr(v_leaf, g2, b2, cfg):
+    """Update (possibly factored) second moment; return (new_v, denom f32)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    if isinstance(v_leaf, dict) and "row" in v_leaf:
+        row = v_leaf["row"].astype(jnp.float32) * b2 + \
+            g2.mean(axis=-1) * (1 - b2)
+        col = v_leaf["col"].astype(jnp.float32) * b2 + \
+            g2.mean(axis=-2) * (1 - b2)
+        # rank-1 reconstruction (adafactor): v ≈ row ⊗ col / mean(row)
+        denom = row[..., None] * col[..., None, :] / jnp.maximum(
+            row.mean(axis=-1, keepdims=True)[..., None], 1e-30)
+        return {"row": row.astype(mdt), "col": col.astype(mdt)}, denom
+    if isinstance(v_leaf, dict):
+        full = v_leaf["full"].astype(jnp.float32) * b2 + g2 * (1 - b2)
+        return {"full": full.astype(mdt)}, full
+    full = v_leaf.astype(jnp.float32) * b2 + g2 * (1 - b2)
+    return full.astype(mdt), full
+
+
+def adamw_update(params: Any, grads: Any, state: dict, cfg: OptimizerConfig,
+                 lr: jnp.ndarray) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, stats)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = jnp.asarray(1.0, jnp.float32)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_master = treedef.flatten_up_to(masters)
+
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_master):
+        gf = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vv, denom = _v_update_and_corr(v, jnp.square(gf), b2, cfg)
+        upd = (mf / bc1) / (jnp.sqrt(denom / bc2) + cfg.eps)
+        wf = w.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * wf
+        wf = wf - lr * upd
+        new_master.append(wf.astype(jnp.dtype(cfg.master_dtype))
+                          if cfg.master_dtype != "none" else wf.astype(p.dtype))
+        new_p.append(wf.astype(p.dtype))
+        new_m.append(mf.astype(mdt))
+        new_v.append(vv)
+
+    params2 = jax.tree.unflatten(treedef, new_p)
+    state2 = {"m": jax.tree.unflatten(treedef, new_m),
+              "v": jax.tree.unflatten(treedef, new_v),
+              "count": count}
+    if cfg.master_dtype != "none":
+        state2["master"] = jax.tree.unflatten(treedef, new_master)
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return params2, state2, stats

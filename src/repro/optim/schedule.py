@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_at_step(step: jnp.ndarray, *, base_lr: float, warmup_steps: int = 0,
+               total_steps: int = 0, schedule: str = "cosine",
+               min_ratio: float = 0.1) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    lr = jnp.asarray(base_lr, jnp.float32)
+    if warmup_steps > 0:
+        lr = lr * jnp.minimum(1.0, (step + 1) / warmup_steps)
+    if schedule == "cosine" and total_steps > warmup_steps:
+        frac = jnp.clip((step - warmup_steps) / (total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        lr = lr * (min_ratio + (1.0 - min_ratio) * cos)
+    return lr

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, ServeRequestComputing
+
+__all__ = ["ServeEngine", "ServeRequestComputing"]

@@ -1,0 +1,167 @@
+"""Serving with continuous batching, driven through the KSA broker.
+
+This is the paper's AlphaKnot-2.0 deployment pattern (§4: "KSA is integrated
+with the application's built-in web service … It manages all user requests
+and performs the necessary computations behind the scenes") applied to LM
+inference: requests arrive on ``PREFIX-new`` (script="serve_request"), a
+serving agent owns the model and runs a **continuous-batching** loop —
+slot-based KV caches, per-slot positions, join-on-arrival / leave-on-EOS —
+and results flow back via ``PREFIX-done``.
+
+The decode step is the same ``make_serve_step`` program the dry-run lowers;
+per-slot positions use the per-batch ``q_offset`` path of chunked attention.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClusterComputing, register_script
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, init_caches
+from repro.train.step import make_serve_step
+
+
+@dataclass
+class _Slot:
+    request_id: str | None = None
+    tokens: list[int] = field(default_factory=list)
+    prompt: list[int] = field(default_factory=list)
+    max_new: int = 16
+    position: int = 0
+    done: bool = True
+
+
+class ServeEngine:
+    """Slot-based continuous batching around a single jitted decode step.
+
+    All slots advance together each step (one ``serve_step`` call); finished
+    slots are refilled from the queue without stalling the others — the
+    property that keeps utilization high under ragged request lengths.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int = 4,
+                 max_len: int = 512, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches = init_caches(cfg, n_slots, max_len, jnp.dtype(cfg.dtype))
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self._serve = jax.jit(make_serve_step(cfg))
+        self._lock = threading.Lock()
+        self.steps = 0
+        self.tokens_out = 0
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def add_request(self, request_id: str, prompt: list[int],
+                    max_new: int = 16) -> bool:
+        """Claim a free slot; False if saturated (caller requeues)."""
+        with self._lock:
+            for i, s in enumerate(self.slots):
+                if s.done:
+                    self.slots[i] = _Slot(request_id=request_id,
+                                          prompt=list(prompt),
+                                          tokens=[], max_new=max_new,
+                                          position=0, done=False)
+                    self._reset_slot_cache(i)
+                    return True
+            return False
+
+    def _reset_slot_cache(self, i: int) -> None:
+        def zero_lane(path, c):
+            keys = [getattr(p, "key", None) for p in path]
+            bdim = 1 if "periods" in keys else 0  # stacked caches lead with L
+            idx = [slice(None)] * c.ndim
+            idx[bdim] = slice(i, i + 1)
+            return c.at[tuple(idx)].set(0)
+        self.caches = jax.tree_util.tree_map_with_path(zero_lane, self.caches)
+
+    def _active(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if not s.done]
+
+    # -- the core loop step -----------------------------------------------------
+
+    def step(self) -> list[tuple[str, list[int]]]:
+        """Advance every active slot by one token (prompt-feeding slots
+        consume their next prompt token; generating slots append). Returns
+        finished (request_id, tokens) pairs."""
+        with self._lock:
+            active = self._active()
+            if not active:
+                return []
+            # assemble the token column + per-slot positions
+            col = np.zeros((self.n_slots, 1), np.int32)
+            pos = np.zeros((self.n_slots,), np.int32)
+            for i, s in enumerate(self.slots):
+                if s.done:
+                    continue
+                if s.position < len(s.prompt):
+                    col[i, 0] = s.prompt[s.position]
+                else:
+                    col[i, 0] = s.tokens[-1] if s.tokens else s.prompt[-1]
+                pos[i] = s.position
+            logits, next_ids, self.caches = self._serve(
+                self.params, jnp.asarray(col), self.caches,
+                jnp.asarray(pos))
+            next_ids = np.asarray(next_ids)
+            self.steps += 1
+            finished = []
+            for i, s in enumerate(self.slots):
+                if s.done:
+                    continue
+                s.position += 1
+                if s.position < len(s.prompt):
+                    continue  # still prefill-feeding
+                tok = int(next_ids[i])
+                s.tokens.append(tok)
+                self.tokens_out += 1
+                if (len(s.tokens) >= s.max_new
+                        or (self.eos_id is not None and tok == self.eos_id)
+                        or s.position >= self.max_len - 1):
+                    s.done = True
+                    finished.append((s.request_id, list(s.tokens)))
+            return finished
+
+    def run_until_drained(self, pending: list[tuple[str, list[int], int]],
+                          max_steps: int = 10_000) -> dict[str, list[int]]:
+        """Continuous batching over a request list: join-on-arrival."""
+        results: dict[str, list[int]] = {}
+        queue = list(pending)
+        for _ in range(max_steps):
+            while queue and self.add_request(*queue[0]):
+                queue.pop(0)
+            done = self.step()
+            for rid, toks in done:
+                results[rid] = toks
+            if not queue and not self._active():
+                break
+        return results
+
+
+@register_script("serve_request")
+class ServeRequestComputing(ClusterComputing):
+    """KSA task wrapper: one task = one generation request batch. Agents that
+    own a ServeEngine process these; used by examples/serve.py."""
+
+    engine: ServeEngine | None = None  # injected per-process
+
+    def run(self) -> Any:
+        if type(self).engine is None:
+            raise RuntimeError("serving agent has no engine attached")
+        reqs = [(r["id"], list(r["prompt"]), int(r.get("max_new", 8)))
+                for r in self.params["requests"]]
+        t0 = time.time()
+        results = type(self).engine.run_until_drained(reqs)
+        dt = time.time() - t0
+        return {"results": {k: v for k, v in results.items()},
+                "tokens_per_s": sum(len(v) for v in results.values()) /
+                                max(dt, 1e-9)}

@@ -1,0 +1,6 @@
+from .context import DistContext
+from .rules import batch_spec, resolve_spec, tree_shardings
+from .state import cache_axes, params_axes, state_axes
+
+__all__ = ["DistContext", "batch_spec", "cache_axes", "params_axes",
+           "resolve_spec", "state_axes", "tree_shardings"]

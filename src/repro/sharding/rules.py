@@ -1,0 +1,96 @@
+"""Logical-axis → mesh-axis resolution with divisibility fallback.
+
+Parameters and activations carry *logical* axis names (see
+``repro.models.params``). This module maps them onto the physical mesh:
+
+* the ``model`` axis carries tensor/expert parallelism — the first logical
+  axis present in ``_MODEL_CANDIDATES`` priority order that is divisible by
+  the axis size wins;
+* the FSDP axes (``('pod', 'data')`` multi-pod, ``('data',)`` single-pod)
+  shard the largest remaining dim (ZeRO-3: parameters, gradients and
+  optimizer state all inherit this);
+* anything indivisible falls back to replicated for that dim (MaxText-style)
+  — e.g. gemma3-1b's 4 q-heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MODEL_CANDIDATES = ("experts", "heads", "kv_heads", "vocab", "ff",
+                     "expert_ff", "lora")
+_FSDP_CANDIDATES = ("embed", "lora", "ff", "expert_ff", "head_dim", "vocab")
+
+
+def _axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def resolve_spec(axes: tuple[str | None, ...], shape: tuple[int, ...],
+                 mesh: Mesh, *, fsdp_axes: tuple[str, ...],
+                 tp_axis: str = "model") -> P:
+    """One tensor: logical axes + shape -> PartitionSpec."""
+    assignment: list[Any] = [None] * len(axes)
+    used_dims: set[int] = set()
+    tp_size = mesh.shape[tp_axis]
+    # 1. model axis
+    for cand in _MODEL_CANDIDATES:
+        hit = False
+        for i, a in enumerate(axes):
+            if a == cand and shape[i] % tp_size == 0 and shape[i] > 0:
+                assignment[i] = tp_axis
+                used_dims.add(i)
+                hit = True
+                break
+        if hit:
+            break
+    # 2. fsdp axes
+    fsdp_size = _axis_size(mesh, fsdp_axes)
+    for cand in _FSDP_CANDIDATES:
+        hit = False
+        for i, a in enumerate(axes):
+            if i in used_dims:
+                continue
+            if a == cand and shape[i] % fsdp_size == 0 and shape[i] > 0:
+                assignment[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                used_dims.add(i)
+                hit = True
+                break
+        if hit:
+            break
+    return P(*assignment)
+
+
+def tree_shardings(shapes_tree: Any, axes_tree: Any, mesh: Mesh, *,
+                   fsdp_axes: tuple[str, ...], tp_axis: str = "model") -> Any:
+    """Map a tree of ShapeDtypeStructs + a matching tree of logical-axis
+    tuples (axes tuples are *leaves* of the axes tree) to NamedShardings."""
+    leaves_s, treedef = jax.tree.flatten(shapes_tree)
+    leaves_a = treedef.flatten_up_to(axes_tree)
+
+    def one(sds, axes):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        spec = resolve_spec(tuple(axes), tuple(sds.shape), mesh,
+                            fsdp_axes=fsdp_axes, tp_axis=tp_axis)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.unflatten(
+        treedef, [one(s, a) for s, a in zip(leaves_s, leaves_a)])
+
+
+def batch_spec(ndim: int, batch_axes: tuple[str, ...], batch_size: int,
+               mesh: Mesh) -> P:
+    """Shard dim 0 (batch) over the data axes, with divisibility fallback."""
+    size = _axis_size(mesh, batch_axes)
+    if batch_size % size == 0:
+        first = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        return P(first, *([None] * (ndim - 1)))
+    # try pod-only / data-only prefixes before giving up
+    for sub in (batch_axes[:1], batch_axes[1:]):
+        if sub and batch_size % _axis_size(mesh, sub) == 0:
+            return P(sub if len(sub) > 1 else sub[0], *([None] * (ndim - 1)))
+    return P(*([None] * ndim))

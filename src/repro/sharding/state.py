@@ -1,0 +1,56 @@
+"""Logical-axis trees for the full TrainState (params + optimizer state) and
+decode caches — ZeRO: optimizer moments/master inherit parameter shardings;
+Adafactor-factored second moments drop the corresponding axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models.params import logical_axes, param_shapes, is_spec
+from repro.models.transformer import model_spec
+from repro.optim import OptimizerConfig
+from repro.optim.adamw import _can_factor
+from repro.train.step import TrainState
+
+
+def params_axes(cfg: ModelConfig) -> Any:
+    return logical_axes(model_spec(cfg))
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def state_axes(cfg: ModelConfig, ocfg: OptimizerConfig) -> TrainState:
+    """Axes tree with the same structure as TrainState."""
+    p_axes = params_axes(cfg)
+    spec_tree = model_spec(cfg)
+
+    def v_axes(spec):
+        axes = spec.axes
+        if ocfg.factored_v and _can_factor(spec.shape):
+            return {"row": axes[:-1], "col": axes[:-2] + axes[-1:]}
+        if ocfg.factored_v:
+            return {"full": axes}
+        return axes
+
+    opt = {
+        "m": p_axes,
+        "v": jax.tree.map(v_axes, spec_tree, is_leaf=is_spec),
+        "count": None,
+    }
+    if ocfg.master_dtype != "none":
+        opt["master"] = p_axes
+    return TrainState(params=p_axes, opt=opt, step=None)
+
+
+def cache_axes(cache_shapes_tree: Any) -> Any:
+    """Decode caches: dim0 is batch everywhere except stacked period caches,
+    where dim0 is layers and dim1 is batch. We mark every dim None here and
+    shard caches with an explicit batch rule in launch/specs.py instead."""
+    return jax.tree.map(lambda s: tuple([None] * len(s.shape)),
+                        cache_shapes_tree)

@@ -1,0 +1,6 @@
+from .loss import lm_loss
+from .step import (TrainState, init_train_state, make_prefill_step,
+                   make_serve_step, make_train_step, train_state_shapes)
+
+__all__ = ["TrainState", "init_train_state", "lm_loss", "make_prefill_step",
+           "make_serve_step", "make_train_step", "train_state_shapes"]

@@ -1,0 +1,28 @@
+"""LM losses. The plain path materializes per-token log-probs with a gather;
+the vocab-parallel path (Megatron-style, used under a mesh) lives in
+``repro.sharding.context`` because it needs axis names."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            weights: jax.Array | None = None,
+            z_weight: float = 1e-4) -> tuple[jax.Array, dict]:
+    """logits: (B, S, V) (any float dtype, upcast here); labels: (B, S) int.
+    ``weights``: optional (B, S) mask. Returns (scalar loss, metrics)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if weights is None:
+        weights = jnp.ones_like(nll)
+    weights = weights.astype(jnp.float32)
+    denom = jnp.maximum(weights.sum(), 1.0)
+    ce = (nll * weights).sum() / denom
+    z = (jnp.square(lse) * weights).sum() / denom
+    loss = ce + z_weight * z
+    return loss, {"ce": ce, "z_loss": z,
+                  "tokens": weights.sum()}

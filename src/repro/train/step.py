@@ -1,0 +1,176 @@
+"""Step builders: train / prefill / serve — shared by smoke tests, the KSA
+trainer tasks, and the multi-pod dry-run.
+
+``dist=None`` gives the single-device path; with a
+:class:`repro.sharding.DistContext` the same builders emit the sharded
+program (vocab-parallel loss, MoE expert-parallel island, activation
+constraints)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import init_params, param_shapes
+from repro.models.transformer import forward, init_caches, model_spec
+from repro.optim import (OptimizerConfig, adamw_init, adamw_update,
+                         lr_at_step)
+from .loss import lm_loss
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jnp.ndarray
+
+    def tree_flatten(self):  # registered below
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda aux, ch: TrainState(*ch))
+
+
+def init_train_state(cfg: ModelConfig, ocfg: OptimizerConfig,
+                     rng: jax.Array) -> TrainState:
+    spec = model_spec(cfg)
+    params = init_params(spec, rng, jnp.dtype(cfg.dtype))
+    return TrainState(params=params, opt=adamw_init(params, ocfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_shapes(cfg: ModelConfig, ocfg: OptimizerConfig) -> TrainState:
+    """abstract TrainState (dry-run input spec, no allocation)."""
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, ocfg, jax.random.PRNGKey(0)))
+
+
+def _loss_fn(params, cfg: ModelConfig, batch: dict, dist, remat: str,
+             aux_weight: float, unroll: int | bool = 1):
+    weights = batch.get("weights")
+    fused = (dist is not None and dist.has("chunked_ce")
+             and cfg.padded_vocab % dist.tp_size == 0)
+    if fused:
+        hidden, _, aux = forward(params, cfg, batch, dist=dist, remat=remat,
+                                 unroll=unroll, return_hidden=True)
+        loss, metrics = dist.fused_ce(hidden, params["embed"],
+                                      cfg.tie_embeddings, batch["labels"],
+                                      weights)
+    else:
+        logits, _, aux = forward(params, cfg, batch, dist=dist, remat=remat,
+                                 unroll=unroll)
+        if dist is not None:
+            loss, metrics = dist.vocab_parallel_loss(logits, batch["labels"],
+                                                     weights)
+        else:
+            loss, metrics = lm_loss(logits, batch["labels"], weights)
+    loss = loss + aux_weight * aux
+    metrics["aux_loss"] = aux
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig, *,
+                    dist: Any = None, remat: str = "none",
+                    microbatch: int | None = None,
+                    accum_dtype: str = "float32",
+                    unroll: int | bool = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch``: split the batch into this many sequential chunks with
+    gradient accumulation (a ``lax.scan``, so HLO stays small).
+    ``accum_dtype``: gradient-accumulator dtype — bf16 halves the accumulator
+    footprint (needed to fit the 671B config on a single pod)."""
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    adt = jnp.dtype(accum_dtype)
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: _loss_fn(p, cfg, b, dist, remat, aux_w, unroll),
+        has_aux=True)
+
+    def compute_grads(params, batch):
+        if not microbatch or microbatch <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        def reshape(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch)
+                             + x.shape[1:])
+        mb = jax.tree.map(reshape, batch)
+
+        def body(carry, b_i):
+            acc, loss_acc = carry
+            (loss, metrics), g = grad_fn(params, b_i)
+            acc = jax.tree.map(lambda a, x: a + x.astype(adt), acc, g)
+            return (acc, loss_acc + loss), metrics
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+        (gacc, loss_sum), ms = jax.lax.scan(body, (zero, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / microbatch, gacc)
+        metrics = jax.tree.map(lambda m: m[-1], ms)
+        return loss_sum / microbatch, metrics, grads
+
+    def train_step(state: TrainState, batch: dict):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        lr = lr_at_step(state.step, base_lr=ocfg.lr,
+                        warmup_steps=ocfg.warmup_steps,
+                        total_steps=ocfg.total_steps, schedule=ocfg.schedule)
+        params, opt, stats = adamw_update(state.params, grads, state.opt,
+                                          ocfg, lr)
+        metrics = dict(metrics, loss=loss, **stats)
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, dist: Any = None,
+                      unroll: int | bool = 1) -> Callable:
+    """prefill(params, batch, caches) -> (last-token logits, caches).
+    Encoder-only models take no caches and return per-frame logits."""
+    if cfg.encoder_only:
+        def prefill_enc(params, batch):
+            logits, _, _ = forward(params, cfg, batch, dist=dist,
+                                   unroll=unroll)
+            return logits
+        return prefill_enc
+
+    def prefill(params, batch, caches):
+        logits, new_caches, _ = forward(
+            params, cfg, batch, caches=caches,
+            cache_index=jnp.zeros((), jnp.int32), dist=dist, unroll=unroll)
+        return logits[:, -1], new_caches
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, *, dist: Any = None,
+                    unroll: int | bool = 1) -> Callable:
+    """serve_step(params, tokens (B,1), caches, cache_index) ->
+    (next-token logits (B, V), new caches). One decode step against the
+    cache; greedy next-token id is returned alongside for convenience."""
+
+    def serve_step(params, tokens, caches, cache_index):
+        batch = {"tokens": tokens}
+        logits, new_caches, _ = forward(params, cfg, batch, caches=caches,
+                                        cache_index=cache_index, dist=dist,
+                                        unroll=unroll)
+        logits = logits[:, -1]
+        if cfg.padded_vocab != cfg.vocab_size:  # mask vocab padding
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask[None, :], -1e30, logits)
+        next_id = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, next_id, new_caches
+
+    return serve_step
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return init_caches(cfg, batch, max_len, jnp.dtype(cfg.dtype))

@@ -1,0 +1,226 @@
+"""End-to-end tests of the KSA control plane: Submitter -> broker ->
+Cluster/Worker agents -> MonitorAgent, including the paper's watchdog,
+oversubscription, and the attempt-fencing extension."""
+import time
+
+import pytest
+
+from repro.core import (Broker, ClusterAgent, MonitorAgent, SimSlurm,
+                        Submitter, TaskStatus, WorkerAgent)
+
+
+@pytest.fixture
+def stack():
+    broker = Broker(default_partitions=4, session_timeout_s=1.0)
+    sub = Submitter(broker, "t")
+    mon = MonitorAgent(broker, "t", task_timeout_s=2.0,
+                       poll_interval_s=0.01).start()
+    agents = []
+    slurms = []
+
+    def add_worker(**kw):
+        a = WorkerAgent(broker, "t", poll_interval_s=0.01, **kw).start()
+        agents.append(a)
+        return a
+
+    def add_cluster(nodes=2, cpus=4, **kw):
+        s = SimSlurm(nodes=nodes, cpus_per_node=cpus)
+        slurms.append(s)
+        a = ClusterAgent(broker, s, "t", poll_interval_s=0.01, **kw).start()
+        agents.append(a)
+        return a
+
+    yield broker, sub, mon, add_worker, add_cluster
+    for a in agents:
+        a.stop()
+    mon.stop()
+    for s in slurms:
+        s.shutdown()
+    broker.close()
+
+
+def test_worker_agent_runs_tasks(stack):
+    broker, sub, mon, add_worker, _ = stack
+    add_worker(slots=4)
+    ids = [sub.submit("sleep", params={"duration": 0.02}) for _ in range(10)]
+    assert mon.wait_all(ids, timeout=10.0)
+    for tid in ids:
+        e = mon.task(tid)
+        assert e.status == TaskStatus.DONE.value
+        assert e.result == {"slept": 0.02}
+
+
+def test_cluster_agent_via_simslurm(stack):
+    broker, sub, mon, _, add_cluster = stack
+    agent = add_cluster(nodes=2, cpus=2)
+    ids = [sub.submit("sleep", params={"duration": 0.02}, cpus=1)
+           for _ in range(12)]
+    assert mon.wait_all(ids, timeout=15.0)
+    assert agent.tasks_completed == 12
+    # all Slurm jobs drained (nodes released between tasks — the anti-Celery
+    # property from paper §2)
+    assert agent.slurm.sinfo()["running"] == 0
+    assert agent.slurm.sinfo()["free_cpus"] == agent.slurm.total_cpus
+
+
+def test_multi_pool_load_balancing(stack):
+    """Tasks spread across two clusters + one workstation (paper §1: run
+    concurrently on multiple Slurm clusters and workstations)."""
+    broker, sub, mon, add_worker, add_cluster = stack
+    w = add_worker(slots=2)
+    c1 = add_cluster(nodes=1, cpus=2)
+    c2 = add_cluster(nodes=1, cpus=2)
+    ids = [sub.submit("sleep", params={"duration": 0.05}) for _ in range(24)]
+    assert mon.wait_all(ids, timeout=20.0)
+    done = [a.tasks_completed for a in (w, c1, c2)]
+    assert sum(done) == 24
+    assert all(d > 0 for d in done)  # every pool contributed
+
+
+def test_error_flow_and_retry(stack):
+    """fail-twice task: ERROR flow routes through PREFIX-error, monitor
+    resubmits, third attempt succeeds."""
+    broker, sub, mon, add_worker, _ = stack
+    add_worker(slots=2)
+    tid = sub.submit("fail", params={"fail_times": 2})
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        e = mon.task(tid)
+        if e is not None and e.done:
+            break
+        time.sleep(0.02)
+    e = mon.task(tid)
+    assert e.done
+    assert e.result == {"succeeded_after": 2}
+    assert len(e.errors) == 2
+    assert mon.resubmissions >= 2
+
+
+def test_watchdog_cancels_hung_task_and_monitor_resubmits(stack):
+    """Paper §3: hung tasks are cancelled on timeout; our monitor extension
+    then resubmits (straggler mitigation)."""
+    broker, sub, mon, add_worker, _ = stack
+    mon.max_attempts = 2
+    add_worker(slots=2, default_timeout_s=0.3)
+    tid = sub.submit("sleep", params={"duration": 0.05}, timeout_s=0.3)
+    tid_hang = sub.submit("hang", timeout_s=0.3)
+    assert mon.wait_all([tid], timeout=5.0)
+    deadline = time.time() + 8
+    while time.time() < deadline:
+        e = mon.task(tid_hang)
+        if e is not None and mon.resubmissions >= 1:
+            break
+        time.sleep(0.02)
+    assert mon.resubmissions >= 1
+    hist = [h[1] for h in mon.task(tid_hang).history]
+    assert TaskStatus.TIMEOUT.value in hist
+
+
+def test_agent_crash_task_redelivered(stack):
+    """Kill an agent mid-task: the monitor's watchdog notices the stale
+    heartbeat and resubmits; a second agent completes the task."""
+    broker, sub, mon, add_worker, _ = stack
+    mon.task_timeout_s = 0.6
+    a1 = add_worker(slots=1, heartbeat_interval_s=0.1)
+    tid = sub.submit("sleep", params={"duration": 60.0})  # long task
+    # wait until a1 picks it up
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        e = mon.task(tid)
+        if e is not None and e.status == TaskStatus.RUNNING.value:
+            break
+        time.sleep(0.02)
+    a1.crash()
+    a2 = add_worker(slots=1, heartbeat_interval_s=0.1)
+    # monitor resubmits after task_timeout_s of silence; a2 runs attempt 1.
+    deadline = time.time() + 15
+    while time.time() < deadline:
+        e = mon.task(tid)
+        if e is not None and e.status == TaskStatus.RUNNING.value and \
+                e.attempt >= 1 and a2.stats()["in_flight"] > 0:
+            break
+        time.sleep(0.02)
+    e = mon.task(tid)
+    assert e.attempt >= 1
+    assert a2.stats()["in_flight"] == 1
+
+
+def test_duplicate_result_fencing(stack):
+    """Two agents complete the same task (redelivery race): exactly one
+    result is accepted, the duplicate is fenced and counted."""
+    broker, sub, mon, add_worker, _ = stack
+    add_worker(slots=2)
+    tid = sub.submit("sleep", params={"duration": 0.02})
+    assert mon.wait_all([tid], timeout=5.0)
+    # simulate the late duplicate from a resurrected attempt
+    from repro.core.messages import ResultMessage
+    from repro.core.broker import Producer
+    p = Producer(broker)
+    p.send(sub.topics["done"],
+           ResultMessage(task_id=tid, agent_id="ghost", attempt=9,
+                         result={"slept": 999}).to_dict(), key=tid)
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        if mon.task(tid).duplicate_results == 1:
+            break
+        time.sleep(0.02)
+    e = mon.task(tid)
+    assert e.duplicate_results == 1
+    assert e.result == {"slept": 0.02}  # first result won
+
+
+def test_oversubscription_keeps_slurm_queue_nonempty(stack):
+    """Paper's ClusterAgent strategy: pending jobs waiting in the queue while
+    all slots are busy."""
+    broker, sub, mon, _, add_cluster = stack
+    agent = add_cluster(nodes=1, cpus=2, oversubscribe=4)
+    ids = [sub.submit("sleep", params={"duration": 0.3}) for _ in range(10)]
+    saw_pending_while_full = False
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        info = agent.slurm.sinfo()
+        if info["running"] == 2 and info["pending"] > 0:
+            saw_pending_while_full = True
+            break
+        time.sleep(0.005)
+    assert saw_pending_while_full
+    assert mon.wait_all(ids, timeout=20.0)
+
+
+def test_monitor_rest_api(stack):
+    import json
+    import urllib.request
+    broker, sub, mon, add_worker, _ = stack
+    add_worker(slots=2)
+    ids = [sub.submit("sleep", params={"duration": 0.02}) for _ in range(3)]
+    assert mon.wait_all(ids, timeout=5.0)
+    port = mon.start_http(0)
+
+    def get(path):
+        with urllib.request.urlopen(f"http://127.0.0.1:{port}{path}") as r:
+            return json.loads(r.read())
+
+    summary = get("/summary")
+    assert summary["done"] == 3
+    tasks = get("/tasks")
+    assert set(ids) <= set(tasks)
+    one = get(f"/tasks/{ids[0]}")
+    assert one["status"] == "DONE"
+    stats = get("/broker")
+    assert "t-new" in stats["topics"]
+
+
+def test_elastic_scale_up_mid_campaign(stack):
+    """Elasticity: an agent joining mid-campaign is absorbed by the consumer-
+    group rebalance and contributes work (paper §3: the broker load-balances
+    across however many agents exist)."""
+    broker, sub, mon, add_worker, _ = stack
+    a1 = add_worker(slots=1)
+    ids = [sub.submit("sleep", params={"duration": 0.08}) for _ in range(16)]
+    time.sleep(0.3)  # campaign under way on one agent
+    a2 = add_worker(slots=1)  # scale up
+    assert mon.wait_all(ids, timeout=30.0)
+    assert a2.tasks_completed > 0, "joined agent never got work"
+    assert a1.tasks_completed + a2.tasks_completed == 16
+    gens = broker.stats()["groups"]["t-agents"]["generation"]
+    assert gens >= 2  # at least one rebalance happened

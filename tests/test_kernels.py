@@ -1,0 +1,177 @@
+"""Per-kernel validation: Pallas (interpret=True, executes the kernel body on
+CPU) vs the pure-jnp ref.py oracle, swept over shapes/dtypes — including
+hypothesis-driven shape sweeps on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd_scan
+from repro.kernels.writhe import writhe_map
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("sq,h,kh,d,win,bq,bk", [
+    (256, 4, 2, 64, None, 64, 64),
+    (256, 4, 1, 64, 96, 64, 64),
+    (192, 2, 2, 32, None, 64, 64),
+    (128, 8, 4, 128, 32, 32, 32),
+    (320, 4, 4, 80, None, 64, 64),   # hubert-style head_dim 80
+    (130, 4, 2, 64, None, 64, 64),   # ragged seq (padding path)
+])
+def test_flash_attention_vs_ref(sq, h, kh, d, win, bq, bk, dtype, tol):
+    rng = np.random.RandomState(hash((sq, h, d)) % 2**31)
+    q = jnp.asarray(rng.randn(2, sq, h, d), dtype)
+    k = jnp.asarray(rng.randn(2, sq, kh, d), dtype)
+    v = jnp.asarray(rng.randn(2, sq, kh, d), dtype)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_bidirectional():
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(1, 128, 4, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 128, 4, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 128, 4, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    sq=st.integers(2, 5).map(lambda e: 2 ** e * 16),   # 64..512
+    g=st.sampled_from([1, 2, 4]),
+    kh=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    win=st.sampled_from([None, 64, 130]),
+)
+def test_flash_attention_property_sweep(sq, g, kh, d, win):
+    h = g * kh
+    rng = np.random.RandomState(sq * h + d)
+    q = jnp.asarray(rng.randn(1, sq, h, d), jnp.float32)
+    k = jnp.asarray(rng.randn(1, sq, kh, d), jnp.float32)
+    v = jnp.asarray(rng.randn(1, sq, kh, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("s,h,p,n,chunk", [
+    (256, 2, 32, 16, 64),
+    (128, 4, 64, 128, 32),
+    (512, 1, 16, 8, 128),
+])
+def test_ssd_kernel_vs_ref(s, h, p, n, chunk, dtype, tol):
+    rng = np.random.RandomState(s + h)
+    x = jnp.asarray(rng.randn(2, s, h, p), dtype)
+    dt = jnp.asarray(np.abs(rng.randn(2, s, h)) * 0.1, jnp.float32)
+    a = -jnp.asarray(np.abs(rng.randn(h)) + 0.5, jnp.float32)
+    bm = jnp.asarray(rng.randn(2, s, n), dtype)
+    cm = jnp.asarray(rng.randn(2, s, n), dtype)
+    out = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x.astype(jnp.float32), dt, a,
+                       bm.astype(jnp.float32), cm.astype(jnp.float32),
+                       chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nc=st.integers(1, 6),
+    chunk=st.sampled_from([32, 64]),
+    h=st.integers(1, 3),
+    p=st.sampled_from([16, 32]),
+)
+def test_ssd_property_chunk_invariance(nc, chunk, h, p):
+    """Kernel output is invariant to the chunk size (state passing exact)."""
+    s = nc * chunk
+    rng = np.random.RandomState(s + h + p)
+    x = jnp.asarray(rng.randn(1, s, h, p), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(1, s, h)) * 0.1, jnp.float32)
+    a = -jnp.asarray(np.abs(rng.randn(h)) + 0.5, jnp.float32)
+    bm = jnp.asarray(rng.randn(1, s, 8), jnp.float32)
+    cm = jnp.asarray(rng.randn(1, s, 8), jnp.float32)
+    o1 = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    o2 = ref.ssd_ref(x, dt, a, bm, cm, chunk=s)  # single chunk ref
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# writhe (the paper's workload)
+# ---------------------------------------------------------------------------
+
+def _trefoil(n=120, noise=0.0, seed=0):
+    t = np.linspace(0, 2 * np.pi, n, endpoint=False)
+    x = np.sin(t) + 2 * np.sin(2 * t)
+    y = np.cos(t) - 2 * np.cos(2 * t)
+    z = -np.sin(3 * t)
+    pts = np.stack([x, y, z], -1)
+    if noise:
+        pts += np.random.RandomState(seed).randn(*pts.shape) * noise
+    return pts
+
+
+def test_writhe_kernel_vs_ref():
+    coords = jnp.asarray(np.stack([_trefoil(100),
+                                   _trefoil(100, noise=0.05)]), jnp.float32)
+    out = writhe_map(coords, block=32, interpret=True)
+    want = ref.writhe_map_ref(coords)
+    # near-planar pairs can round sign() to 0 in one op order: atol covers
+    # those physically-negligible contributions.
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=6e-4, rtol=1e-3)
+
+
+def test_writhe_trefoil_value():
+    """A closed trefoil's writhe is ≈ ±3.41 (knot-theory ground truth); an
+    open random coil is near 0 — this is the knot-likelihood signal the
+    AlphaKnot heuristic thresholds on."""
+    tre = jnp.asarray(_trefoil(160)[None], jnp.float32)
+    w = ref.writhe_map_ref(tre)
+    total = float(np.abs(np.asarray(w).sum() / 2.0))
+    assert 2.8 < total < 4.0, total
+    rng = np.random.RandomState(3)
+    walk = np.cumsum(rng.randn(160, 3) * 0.5, axis=0)
+    ww = ref.writhe_map_ref(jnp.asarray(walk[None], jnp.float32))
+    assert abs(float(np.asarray(ww).sum() / 2.0)) < 1.5
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(34, 140), block=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 5))
+def test_writhe_property_block_invariance(n, block, seed):
+    """Padding/tiling must not change the map; W is symmetric."""
+    rng = np.random.RandomState(seed)
+    coords = jnp.asarray(np.cumsum(rng.randn(1, n, 3), 1), jnp.float32)
+    out = writhe_map(coords, block=block, interpret=True)
+    want = ref.writhe_map_ref(coords)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=6e-4, rtol=1e-3)
+    w = np.asarray(out)[0]
+    # (i,j) and (j,i) blocks evaluate the Gauss integral with different
+    # operand orderings -> f32 round-off asymmetry only.
+    np.testing.assert_allclose(w, w.T, atol=1e-4)

@@ -9,7 +9,7 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_apps, bench_core
+    from . import bench_apps, bench_core, bench_pipeline
 
     suites = [
         ("broker_throughput", bench_core.bench_broker_throughput),
@@ -20,6 +20,9 @@ def main() -> None:
         ("failure_recovery", bench_core.bench_failure_recovery),
         ("writhe_kernel", bench_apps.bench_writhe_kernel),
         ("knot_campaign", bench_apps.bench_knot_campaign),
+        ("pipeline_vs_flat", bench_pipeline.bench_pipeline_vs_flat),
+        ("pipeline_orchestration_overhead",
+         bench_pipeline.bench_pipeline_orchestration_overhead),
         ("train_step", bench_apps.bench_train_step),
         ("serve_continuous_batching",
          bench_apps.bench_serve_continuous_batching),

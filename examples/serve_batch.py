@@ -5,6 +5,11 @@ Requests land on the ``PREFIX-new`` topic; a serving agent owns a
 continuous-batching ServeEngine; generated tokens return via ``PREFIX-done``
 and the monitor REST API.
 
+Part 2 runs the same workload as a repro.pipeline DAG — tokenize (fan-out) →
+generate (serve_request as a map stage) → post-process (join) — proving the
+campaign subsystem is workload-agnostic (ParaFold-style CPU/model stage
+split).
+
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 import time
@@ -16,7 +21,8 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core import Broker, MonitorAgent, Submitter, WorkerAgent
 from repro.models import init_params, model_spec
-from repro.serve import ServeEngine
+from repro.pipeline import run_campaign
+from repro.serve import ServeEngine, serve_pipeline
 from repro.serve.engine import ServeRequestComputing
 
 
@@ -49,6 +55,21 @@ def main() -> None:
           f"({res['tokens_per_s']:.1f} tok/s inside the engine)")
     for rid, toks in sorted(res["results"].items())[:4]:
         print(f"  {rid}: {toks}")
+
+    # -- part 2: the same workload as a 3-stage pipeline --------------------
+    texts = [{"id": f"pipe{i}", "text": f"fold protein number {i}",
+              "max_new": 6} for i in range(8)]
+    spec = serve_pipeline(batch_size=4, vocab_size=cfg.vocab_size, max_new=6)
+    t0 = time.time()
+    camp = run_campaign(spec, texts, broker=broker, prefix="srv",
+                        timeout_s=900.0)
+    agg = camp.final
+    print(f"\npipeline served {agg['n_requests']} requests "
+          f"({agg['total_tokens']} tokens) in {time.time()-t0:.1f}s via "
+          f"{[s.name for s in spec.topological()]}")
+    for rid, r in list(agg["responses"].items())[:4]:
+        print(f"  {rid}: {r['tokens']}")
+    assert agg["n_requests"] == len(texts)
 
     agent.stop()
     mon.stop()

@@ -180,10 +180,54 @@ def classify(wr: float) -> str:
 # the KSA task (paper Fig. 3 pattern)
 # ---------------------------------------------------------------------------
 
+def _screen_batch(ids: list[int], n_points: int, use_pallas: bool
+                  ) -> tuple[list[int], list[int], dict[str, float], float]:
+    """Quality-filter + writhe/ACN screen one batch of structure ids.
+    -> (kept_ids, knotted_ids, writhe per knotted id, mean ACN over kept)."""
+    q = quality_score(ids)
+    keep = q >= QUALITY_THRESHOLD
+    kept_ids = [i for i, k in zip(ids, keep) if k]
+    if not kept_ids:
+        return [], [], {}, 0.0
+    coords, _ = synthesize_batch(kept_ids, n_points)
+    wr, acn, _ = writhe_and_acn(jnp.asarray(coords), use_pallas=use_pallas,
+                                interpret=use_pallas)
+    wr = np.asarray(wr)
+    knotted = [int(i) for i, w in zip(kept_ids, wr)
+               if abs(float(w)) >= WRITHE_KNOT_THRESHOLD]
+    wr_by_id = {str(i): float(w) for i, w in zip(kept_ids, wr)
+                if int(i) in set(knotted)}
+    return kept_ids, knotted, wr_by_id, float(np.asarray(acn).mean())
+
+
+def _localize_cores(survivors: list[int], n_points: int, use_pallas: bool,
+                    check_cancel=None) -> dict[str, list[int]]:
+    """Knot-core localization for screen survivors. Shared by the flat
+    ``knot_batch`` task and the pipeline ``knot_localize`` stage so the two
+    paths cannot drift apart (flat-vs-campaign parity is asserted in tests
+    and examples)."""
+    cores: dict[str, list[int]] = {}
+    if not survivors:
+        return cores
+    coords, _ = synthesize_batch(survivors, n_points)
+    _, _, wmap = writhe_and_acn(jnp.asarray(coords), use_pallas=use_pallas,
+                                interpret=use_pallas)
+    wmap_np = np.asarray(wmap)
+    for k, i in enumerate(survivors):
+        core = knot_core(wmap_np[k])
+        if core is not None:
+            cores[str(i)] = list(core)
+        if check_cancel is not None:
+            check_cancel()
+    return cores
+
+
 @register_script("knot_batch")
 class KnotBatchComputing(ClusterComputing):
     """params: batch (list of structure ids), n_points, stage2 (bool),
-    use_pallas. One task = one batch of structures (paper: 4000/batch)."""
+    use_pallas. One task = one batch of structures (paper: 4000/batch).
+    Flat single-stage baseline: screen + localize fused in one task, built
+    on the same helpers the pipeline stages use."""
 
     def run(self) -> Any:
         ids = list(self.params["batch"])
@@ -191,40 +235,129 @@ class KnotBatchComputing(ClusterComputing):
         stage2 = bool(self.params.get("stage2", True))
         use_pallas = bool(self.params.get("use_pallas", False))
 
-        q = quality_score(ids)
-        keep = q >= QUALITY_THRESHOLD
-        kept_ids = [i for i, k in zip(ids, keep) if k]
+        kept_ids, knotted, _, mean_acn = _screen_batch(ids, n_points,
+                                                       use_pallas)
         self.send_status("RUNNING", stage="screen", kept=len(kept_ids),
-                         dropped=int((~keep).sum()))
-        if not kept_ids:
-            return {"processed": len(ids), "kept": 0, "knotted": [],
-                    "cores": {}}
-
-        coords, _ = synthesize_batch(kept_ids, n_points)
-        wr, acn, wmap = writhe_and_acn(jnp.asarray(coords),
-                                       use_pallas=use_pallas,
-                                       interpret=use_pallas)
-        wr = np.asarray(wr)
-        acn = np.asarray(acn)
-        knotted = [int(i) for i, w in zip(kept_ids, wr)
-                   if abs(float(w)) >= WRITHE_KNOT_THRESHOLD]
+                         dropped=len(ids) - len(kept_ids))
         self.check_cancel()
 
-        cores = {}
+        cores: dict[str, list[int]] = {}
         if stage2 and knotted:
             self.send_status("RUNNING", stage="knot_core",
                              candidates=len(knotted))
-            wmap_np = np.asarray(wmap)
-            for i in knotted:
-                k = kept_ids.index(i)
-                core = knot_core(wmap_np[k])
-                if core is not None:
-                    cores[str(i)] = list(core)
-                self.check_cancel()
+            cores = _localize_cores(knotted, n_points, use_pallas,
+                                    self.check_cancel)
         return {
             "processed": len(ids),
             "kept": len(kept_ids),
             "knotted": knotted,
             "cores": cores,
-            "mean_acn": float(acn.mean()),
+            "mean_acn": mean_acn,
         }
+
+
+# ---------------------------------------------------------------------------
+# the campaign as a 3-stage DAG (repro.pipeline)
+# ---------------------------------------------------------------------------
+#
+# The same workload as ``knot_batch``, decomposed the way the paper's
+# production deployment is (§4): a cheap screening stage fans out over
+# batches, an expensive localization stage runs only on the survivors, and a
+# join barrier aggregates the campaign. Stage results are numerically
+# identical to the flat baseline because structure synthesis is deterministic
+# per id.
+
+@register_script("knot_screen")
+class KnotScreenComputing(ClusterComputing):
+    """Stage 1 (source, fan-out): generate + quality-filter + writhe/ACN
+    screen one batch. params: batch (ids), n_points, use_pallas."""
+
+    def run(self) -> Any:
+        ids = list(self.params["batch"])
+        n_points = int(self.params.get("n_points", 128))
+        use_pallas = bool(self.params.get("use_pallas", False))
+        kept_ids, knotted, wr_by_id, mean_acn = _screen_batch(
+            ids, n_points, use_pallas)
+        self.send_status("RUNNING", stage="screen", kept=len(kept_ids),
+                         survivors=len(knotted))
+        self.check_cancel()
+        return {
+            "processed": len(ids),
+            "kept": len(kept_ids),
+            "knotted": knotted,
+            "wr": wr_by_id,
+            "mean_acn": mean_acn,
+        }
+
+
+@register_script("knot_localize")
+class KnotLocalizeComputing(ClusterComputing):
+    """Stage 2 (map, 1:1 with screen tasks): knot-core localization on the
+    survivors of one screen batch. The upstream screen result arrives as
+    ``params["upstream"]``; coordinates are re-synthesized for survivors only
+    (the paper ships structures via shared storage, not the broker)."""
+
+    def run(self) -> Any:
+        upstream = dict(self.params.get("upstream") or {})
+        survivors = [int(i) for i in upstream.get("knotted", [])]
+        n_points = int(self.params.get("n_points", 128))
+        use_pallas = bool(self.params.get("use_pallas", False))
+        cores = _localize_cores(survivors, n_points, use_pallas,
+                                self.check_cancel)
+        return {"candidates": len(survivors), "cores": cores}
+
+
+@register_script("knot_aggregate")
+class KnotAggregateComputing(ClusterComputing):
+    """Stage 3 (join barrier): aggregate every screen + localize result into
+    the campaign-level report. Fires exactly once per campaign."""
+
+    def run(self) -> Any:
+        upstream = dict(self.params.get("upstream") or {})
+        screens = [r for r in upstream.get("screen", []) if r]
+        locs = [r for r in upstream.get("localize", []) if r]
+        processed = sum(int(r.get("processed", 0)) for r in screens)
+        kept = sum(int(r.get("kept", 0)) for r in screens)
+        knotted = sorted({int(i) for r in screens
+                          for i in r.get("knotted", [])})
+        cores: dict[str, list[int]] = {}
+        for r in locs:
+            cores.update(r.get("cores", {}))
+        acn_num = sum(float(r.get("mean_acn", 0.0)) * int(r.get("kept", 0))
+                      for r in screens)
+        return {
+            "processed": processed,
+            "kept": kept,
+            "knotted": knotted,
+            "cores": cores,
+            "mean_acn": acn_num / kept if kept else 0.0,
+            "batches": len(screens),
+        }
+
+
+def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
+                   use_pallas: bool = False,
+                   max_in_flight: int | None = None,
+                   max_attempts: int = 4,
+                   task_timeout_s: float | None = None):
+    """The AlphaKnot campaign as a declarative 3-stage DAG:
+    screen (fan-out) → localize (map over survivors) → aggregate (join).
+
+    Screen runs on cheap 1-CPU slots; localize requests more CPU (the
+    heterogeneous-stage routing of ParaFold: different resource profiles per
+    stage); aggregate is a single barrier task."""
+    from repro.pipeline import PipelineSpec, RetryPolicy, Stage
+    from repro.core import Resources
+
+    retry = RetryPolicy(max_attempts=max_attempts, timeout_s=task_timeout_s)
+    common = {"n_points": n_points, "use_pallas": use_pallas}
+    return PipelineSpec("alphaknot", [
+        Stage("screen", "knot_screen", fan_out=batch_size, params=common,
+              resources=Resources(cpus=1), max_in_flight=max_in_flight,
+              retry=retry),
+        Stage("localize", "knot_localize", depends_on=("screen",),
+              params=common, resources=Resources(cpus=2),
+              max_in_flight=max_in_flight, retry=retry),
+        Stage("aggregate", "knot_aggregate",
+              depends_on=("screen", "localize"), join=True, retry=retry),
+    ])

@@ -29,9 +29,43 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # container may lack zstandard: fall back to zlib.
+    zstandard = None
 
 _SHARD_TARGET_BYTES = 128 * 1024 * 1024
+
+
+class _Codec:
+    """Shard compression, selected per checkpoint and recorded in the
+    manifest so restores pick the matching decompressor regardless of which
+    codec the writing process had available."""
+
+    def __init__(self, name: str, level: int = 3):
+        if name == "zstd" and zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd but the zstandard module "
+                "is not installed; re-save with the zlib codec or install "
+                "zstandard")
+        self.name = name
+        self._level = level
+
+    @classmethod
+    def preferred(cls) -> "_Codec":
+        return cls("zstd" if zstandard is not None else "zlib")
+
+    def compress(self, data: bytes) -> bytes:
+        if self.name == "zstd":
+            return zstandard.ZstdCompressor(level=self._level).compress(data)
+        return zlib.compress(data, self._level)
+
+    def decompress(self, data: bytes) -> bytes:
+        if self.name == "zstd":
+            return zstandard.ZstdDecompressor().decompress(
+                data, max_output_size=2 ** 34)
+        return zlib.decompress(data)
 
 
 def _tree_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -50,9 +84,9 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
     tmp.mkdir(parents=True)
 
     leaves = _tree_paths(tree)
+    cctx = _Codec.preferred()
     manifest: dict = {"step": int(step), "extra": extra or {}, "leaves": [],
-                      "format": 1}
-    cctx = zstandard.ZstdCompressor(level=3)
+                      "format": 1, "codec": cctx.name}
     shard_idx = 0
     shard_buf: list[bytes] = []
     shard_bytes = 0
@@ -97,14 +131,13 @@ def restore_checkpoint(path: str | os.PathLike, tree_like: Any
     path = Path(path)
     manifest = json.loads((path / "manifest.json").read_text())
     by_name = {e["name"]: e for e in manifest["leaves"]}
-    dctx = zstandard.ZstdDecompressor()
+    dctx = _Codec(manifest.get("codec", "zstd"))
     shards: dict[int, bytes] = {}
 
     def shard(i: int) -> bytes:
         if i not in shards:
             shards[i] = dctx.decompress(
-                (path / f"shard_{i:05d}.bin.zst").read_bytes(),
-                max_output_size=2 ** 34)
+                (path / f"shard_{i:05d}.bin.zst").read_bytes())
         return shards[i]
 
     names_like = _tree_paths(tree_like)

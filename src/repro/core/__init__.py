@@ -9,14 +9,16 @@ from .broker import (Broker, BrokerError, Consumer, FencedError, Producer,
 from .computing import (ClusterComputing, TaskCancelled, register_script,
                         registered_scripts, resolve_script)
 from .agents import AgentBase, ClusterAgent, WorkerAgent
-from .messages import (ErrorMessage, Resources, ResultMessage, StatusUpdate,
-                       TaskMessage, TaskStatus, new_task_id, topic_names)
+from .messages import (CampaignEvent, ErrorMessage, Resources, ResultMessage,
+                       StatusUpdate, TaskMessage, TaskStatus, new_task_id,
+                       topic_names)
 from .monitor import MonitorAgent, TaskEntry
 from .simslurm import SimSlurm
 from .submitter import Submitter
 
 __all__ = [
-    "AgentBase", "Broker", "BrokerError", "ClusterAgent", "ClusterComputing",
+    "AgentBase", "Broker", "BrokerError", "CampaignEvent", "ClusterAgent",
+    "ClusterComputing",
     "Consumer", "ErrorMessage", "FencedError", "MonitorAgent", "Producer",
     "Record", "Resources", "ResultMessage", "SimSlurm", "StatusUpdate",
     "Submitter", "TaskCancelled", "TaskEntry", "TaskMessage", "TaskStatus",

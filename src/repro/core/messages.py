@@ -44,12 +44,15 @@ TERMINAL_STATUSES = frozenset(
 
 
 def topic_names(prefix: str) -> Mapping[str, str]:
-    """The paper's default topic layout (§5)."""
+    """The paper's default topic layout (§5), plus the ``-campaigns`` topic
+    carrying :class:`CampaignEvent` progress snapshots from pipeline agents
+    (the repro.pipeline extension of the paper's single-topic task bag)."""
     return {
         "new": f"{prefix}-new",
         "jobs": f"{prefix}-jobs",
         "done": f"{prefix}-done",
         "error": f"{prefix}-error",
+        "campaigns": f"{prefix}-campaigns",
     }
 
 
@@ -90,6 +93,12 @@ class TaskMessage:
     attempt: int = 0
     timeout_s: float | None = None
     submitted_at: float = dataclasses.field(default_factory=time.time)
+    # campaign metadata (repro.pipeline): which campaign/stage this task
+    # belongs to and which upstream task_ids it consumed. Flat tasks leave
+    # these unset — the control plane treats them identically either way.
+    campaign_id: str | None = None
+    stage: str | None = None
+    dep_ids: list = dataclasses.field(default_factory=list)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -106,6 +115,9 @@ class TaskMessage:
             attempt=int(d.get("attempt", 0)),
             timeout_s=d.get("timeout_s"),
             submitted_at=float(d.get("submitted_at", time.time())),
+            campaign_id=d.get("campaign_id"),
+            stage=d.get("stage"),
+            dep_ids=list(d.get("dep_ids", [])),
         )
 
     def retry(self) -> "TaskMessage":
@@ -190,6 +202,36 @@ class ErrorMessage:
             error=d.get("error", ""),
             traceback=d.get("traceback", ""),
             attempt=int(d.get("attempt", 0)),
+            ts=float(d.get("ts", time.time())),
+        )
+
+
+@dataclasses.dataclass
+class CampaignEvent:
+    """A record on ``PREFIX-campaigns``: a progress snapshot for one campaign,
+    published by a pipeline agent on every state transition. The MonitorAgent
+    mirrors the latest snapshot per campaign into its ``/campaigns`` REST
+    endpoint, so observability works across processes exactly like the
+    paper's task-status flow (§3)."""
+
+    campaign_id: str
+    pipeline: str
+    state: str  # RUNNING | COMPLETED | FAILED
+    agent_id: str = ""
+    stages: dict = dataclasses.field(default_factory=dict)
+    ts: float = dataclasses.field(default_factory=time.time)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "CampaignEvent":
+        return cls(
+            campaign_id=d["campaign_id"],
+            pipeline=d.get("pipeline", ""),
+            state=str(d.get("state", "RUNNING")),
+            agent_id=d.get("agent_id", ""),
+            stages=dict(d.get("stages", {})),
             ts=float(d.get("ts", time.time())),
         )
 

@@ -24,8 +24,8 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any
 
 from .broker import Broker, Consumer
-from .messages import (ErrorMessage, ResultMessage, StatusUpdate, TaskMessage,
-                       TaskStatus, topic_names)
+from .messages import (CampaignEvent, ErrorMessage, ResultMessage,
+                       StatusUpdate, TaskMessage, TaskStatus, topic_names)
 from .submitter import Submitter
 
 log = logging.getLogger(__name__)
@@ -79,6 +79,7 @@ class MonitorAgent:
                  max_attempts: int = 3,
                  retry_on_error: bool = True,
                  retry_on_timeout: bool = True,
+                 resubmit_campaign_tasks: bool = False,
                  poll_interval_s: float = 0.05):
         self.broker = broker
         self.prefix = prefix
@@ -88,15 +89,22 @@ class MonitorAgent:
         self.max_attempts = max_attempts
         self.retry_on_error = retry_on_error
         self.retry_on_timeout = retry_on_timeout
+        # pipeline-tagged tasks are retried by their PipelineAgent (which
+        # enforces the stage RetryPolicy); a monitor resubmitting them too
+        # would double every attempt. Opt in only for monitor-only setups.
+        self.resubmit_campaign_tasks = resubmit_campaign_tasks
         self.poll_interval_s = poll_interval_s
         self._submitter = Submitter(broker, prefix)
         gid = group_id or f"{prefix}-monitor-{monitor_id}"
         self._consumer = Consumer(
             broker,
             [self.topics["new"], self.topics["jobs"], self.topics["done"],
-             self.topics["error"]],
+             self.topics["error"], self.topics["campaigns"]],
             group_id=gid, member_id=f"{gid}-{monitor_id}")
         self._table: dict[str, TaskEntry] = {}
+        # latest CampaignEvent snapshot per campaign (repro.pipeline agents
+        # publish these on PREFIX-campaigns; mirrored into /campaigns).
+        self._campaigns: dict[str, dict] = {}
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -149,6 +157,11 @@ class MonitorAgent:
                 e.agent_id = res.agent_id
                 e.last_update = time.time()
                 self.results_handled += 1
+            elif topic == self.topics["campaigns"]:
+                ev = CampaignEvent.from_dict(value)
+                prev = self._campaigns.get(ev.campaign_id)
+                if prev is None or ev.ts >= prev.get("ts", 0.0):
+                    self._campaigns[ev.campaign_id] = ev.to_dict()
             elif topic == self.topics["error"]:
                 err = ErrorMessage.from_dict(value)
                 e = self._entry(err.task_id)
@@ -164,6 +177,8 @@ class MonitorAgent:
     def _maybe_resubmit(self, e: TaskEntry, reason: str) -> None:
         if e.task is None or e.done:
             return
+        if e.task.campaign_id and not self.resubmit_campaign_tasks:
+            return  # the owning PipelineAgent handles campaign-task retries
         if reason == "error" and not self.retry_on_error:
             return
         if reason in ("timeout", "stale") and not self.retry_on_timeout:
@@ -263,6 +278,16 @@ class MonitorAgent:
             time.sleep(poll)
         return False
 
+    def campaigns(self) -> dict[str, dict]:
+        """Latest per-campaign progress snapshots (per-stage done/in-flight/
+        failed counters published by pipeline agents)."""
+        with self._lock:
+            return dict(self._campaigns)
+
+    def campaign(self, campaign_id: str) -> dict | None:
+        with self._lock:
+            return self._campaigns.get(campaign_id)
+
     def summary(self) -> dict:
         with self._lock:
             by_status: dict[str, int] = {}
@@ -276,6 +301,7 @@ class MonitorAgent:
                 "resubmissions": self.resubmissions,
                 "duplicates_fenced": sum(e.duplicate_results
                                          for e in self._table.values()),
+                "campaigns": len(self._campaigns),
             }
 
     # -- REST API (paper §3: "a web-based REST API") ------------------------------------
@@ -307,6 +333,14 @@ class MonitorAgent:
                         self._send(404, {"error": "unknown task"})
                     else:
                         self._send(200, e.to_dict())
+                elif parts == ["campaigns"]:
+                    self._send(200, mon.campaigns())
+                elif len(parts) == 2 and parts[0] == "campaigns":
+                    c = mon.campaign(parts[1])
+                    if c is None:
+                        self._send(404, {"error": "unknown campaign"})
+                    else:
+                        self._send(200, c)
                 elif parts == ["summary"]:
                     self._send(200, mon.summary())
                 elif parts == ["broker"]:
@@ -314,6 +348,8 @@ class MonitorAgent:
                 else:
                     self._send(404, {"error": "unknown endpoint",
                                      "endpoints": ["/tasks", "/tasks/<id>",
+                                                   "/campaigns",
+                                                   "/campaigns/<id>",
                                                    "/summary", "/broker"]})
 
         self._http = ThreadingHTTPServer(("127.0.0.1", port), Handler)

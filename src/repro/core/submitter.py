@@ -27,17 +27,29 @@ class Submitter:
     def submit(self, script: str, task_id: str | None = None, *,
                params: dict | None = None, cpus: int = 1, gpus: int = 0,
                mem_mb: int = 1024, timeout_s: float | None = None,
-               attempt: int = 0) -> str:
+               attempt: int = 0, resources: Resources | None = None,
+               campaign_id: str | None = None, stage: str | None = None,
+               dep_ids: list | None = None) -> str:
         """Submit one task (paper §5: script name, task ID, resources, and any
-        number of extra parameters)."""
+        number of extra parameters). ``campaign_id``/``stage``/``dep_ids``
+        tag tasks emitted by the repro.pipeline DAG orchestrator."""
         task = TaskMessage(
             task_id=task_id or new_task_id(script),
             script=script,
             params=dict(params or {}),
-            resources=Resources(cpus=cpus, gpus=gpus, mem_mb=mem_mb),
+            resources=resources or Resources(cpus=cpus, gpus=gpus,
+                                             mem_mb=mem_mb),
             timeout_s=timeout_s,
             attempt=attempt,
+            campaign_id=campaign_id,
+            stage=stage,
+            dep_ids=list(dep_ids or []),
         )
+        return self.submit_task(task)
+
+    def submit_task(self, task: TaskMessage) -> str:
+        """Submit a fully-built :class:`TaskMessage` (used by the pipeline
+        agent, which constructs stage tasks itself)."""
         self._producer.send(self.topics["new"], task.to_dict(), key=task.task_id)
         self._producer.send(
             self.topics["jobs"],

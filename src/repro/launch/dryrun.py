@@ -120,6 +120,8 @@ def _compile_cell(arch, shape, multi_pod, overrides, costing_periods=None):
 
 def _costs_of(compiled) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # jax < 0.6 returns [dict] per computation
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,43 @@
+"""repro.pipeline — DAG campaign orchestration over the KSA control plane.
+
+The paper's production workloads are multi-stage *campaigns*, not flat task
+bags: AlphaKnot 2.0 (§4) runs structure ingest → HOMFLY-PT screening → knot
+localization over millions of AlphaFold models, with each stage exhibiting a
+different resource profile. This subsystem turns the broker/agent machinery
+of §3 into a campaign engine, following the heterogeneous-stage split of
+ParaFold (arXiv:2111.06340, CPU featurize vs GPU predict) and the
+fan-out/fan-in orchestration of the Summit proteome-scale deployment
+(arXiv:2201.10024).
+
+Class → paper mapping:
+
+* :class:`~repro.pipeline.spec.Stage` / :class:`~repro.pipeline.spec.PipelineSpec`
+  — declarative DAG of registered ``ClusterComputing`` scripts (§5, Fig. 3),
+  with per-stage ``Resources`` (§5's CPU/GPU/memory request, used here to
+  route stages to differently-equipped pools), fan-out batching (§4's
+  "batches of 4,000 structures"), join barriers, and retry/timeout policy.
+* :class:`~repro.pipeline.spec.RetryPolicy` — bounds the at-least-once
+  resubmission loop (§3's watchdog + the safe-multiple-attempts extension
+  the paper lists as future work).
+* :class:`~repro.pipeline.agent.PipelineAgent` — a peer of the MonitorAgent
+  (§3): subscribes to ``PREFIX-done``/``PREFIX-error``, advances the DAG when
+  dependencies complete, fences duplicate results by first-wins per task so a
+  barrier never double-fires, enforces per-stage ``max_in_flight``
+  backpressure, and publishes progress on ``PREFIX-campaigns``.
+* :class:`~repro.pipeline.status.CampaignStatus` /
+  :class:`~repro.pipeline.status.StageStatus` — the campaign-level analogue of
+  §3's task status table, surfaced via the MonitorAgent REST API
+  (``/campaigns``).
+* :func:`~repro.pipeline.driver.run_campaign` — the synchronous submit-and-wait
+  front-end matching the paper's §5 submission scripts.
+"""
+from .agent import PipelineAgent, PipelineError
+from .driver import CampaignResult, run_campaign
+from .spec import PipelineSpec, RetryPolicy, SpecError, Stage
+from .status import CampaignState, CampaignStatus, StageStatus
+
+__all__ = [
+    "CampaignResult", "CampaignState", "CampaignStatus", "PipelineAgent",
+    "PipelineError", "PipelineSpec", "RetryPolicy", "SpecError", "Stage",
+    "StageStatus", "run_campaign",
+]

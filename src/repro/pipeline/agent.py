@@ -1,0 +1,424 @@
+"""PipelineAgent — advances DAG campaigns over the KSA control plane.
+
+The agent is a *peer* of the MonitorAgent (§3): it subscribes to the
+``PREFIX-done`` / ``PREFIX-error`` topics in its own consumer group (broadcast
+copy — monitors and pipeline agents each see every record) and drives the
+campaign state machine:
+
+* when an upstream task completes, emit next-stage ``TaskMessage``\\ s (map
+  stages 1:1, join stages exactly once per barrier),
+* **duplicate-result fencing**: the first result per task wins; late results
+  from re-attempted tasks are counted and dropped, so a barrier can never
+  double-fire (the safe-multiple-attempts extension the paper names as future
+  work),
+* **backpressure**: per-stage ``max_in_flight`` bounds how many tasks of a
+  stage are on the ``-new`` topic at once; the rest wait in a ready queue,
+* **watchdog**: a task with no result after ``RetryPolicy.timeout_s`` is
+  resubmitted with a bumped attempt (the monitor's straggler mitigation,
+  scoped per stage); ``max_attempts`` exhaustion fails the campaign,
+* progress snapshots are published on ``PREFIX-campaigns`` for the
+  MonitorAgent's ``/campaigns`` REST endpoint.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping
+
+from repro.core.broker import Broker, Consumer, Producer
+from repro.core.messages import (CampaignEvent, ErrorMessage, ResultMessage,
+                                 TaskMessage, new_task_id, topic_names)
+from repro.core.submitter import Submitter
+
+from .spec import PipelineSpec, Stage
+from .status import CampaignState, CampaignStatus, StageStatus
+
+log = logging.getLogger(__name__)
+
+
+class PipelineError(RuntimeError):
+    pass
+
+
+@dataclass
+class _PTask:
+    """One planned task of one stage (all attempts share this record)."""
+
+    stage: str
+    task: TaskMessage                 # message of the latest attempt
+    index: int                        # creation order within the stage
+    attempts: int = 0                 # submissions so far
+    last_submit: float = 0.0
+    done: bool = False
+    failed: bool = False
+    result: dict | None = None
+
+
+class _CampaignRun:
+    def __init__(self, campaign_id: str, spec: PipelineSpec,
+                 items: list, params: dict):
+        self.campaign_id = campaign_id
+        self.spec = spec
+        self.items = items
+        self.params = params
+        self.status = CampaignStatus(campaign_id=campaign_id,
+                                     pipeline=spec.name)
+        expected = spec.expected_counts(len(items))
+        for st in spec.topological():
+            self.status.stages[st.name] = StageStatus(
+                name=st.name, script=st.script, expected=expected[st.name])
+        self.tasks: dict[str, _PTask] = {}
+        self.by_stage: dict[str, list[str]] = {n: [] for n in spec.stages}
+        self.ready: dict[str, deque[str]] = {n: deque() for n in spec.stages}
+        self.joins_fired: set[str] = set()
+        self.completion = threading.Event()
+        self.last_publish = 0.0
+
+    def stage_complete(self, name: str) -> bool:
+        return self.status.stages[name].complete
+
+
+class PipelineAgent:
+    """Subscribes to ``-done``/``-error`` and advances registered campaigns.
+
+    Multiple campaigns (even over different :class:`PipelineSpec`\\ s) can run
+    concurrently through one agent; tasks from campaigns this agent does not
+    own are ignored (unknown task_id), so several pipeline agents can share a
+    prefix the way several MonitorAgents can (§3).
+    """
+
+    def __init__(self, broker: Broker, prefix: str = "ksa", *,
+                 agent_id: str | None = None,
+                 poll_interval_s: float = 0.02,
+                 default_task_timeout_s: float | None = None,
+                 publish_interval_s: float = 0.25,
+                 retain_finished: int | None = 32):
+        self.broker = broker
+        self.prefix = prefix
+        self.topics = topic_names(prefix)
+        self.agent_id = agent_id or f"pipeline-{id(self) & 0xffff:04x}"
+        self.poll_interval_s = poll_interval_s
+        self.default_task_timeout_s = default_task_timeout_s
+        self.publish_interval_s = publish_interval_s
+        # long-lived agents serve a stream of campaigns; keep only the most
+        # recent `retain_finished` finished runs (None = keep all).
+        self.retain_finished = retain_finished
+        self._submitter = Submitter(broker, prefix)
+        self._producer = Producer(broker)
+        gid = f"{prefix}-pipeline-{self.agent_id}"
+        self._consumer = Consumer(
+            broker, [self.topics["done"], self.topics["error"]],
+            group_id=gid, member_id=f"{gid}-member")
+        self._campaigns: dict[str, _CampaignRun] = {}
+        self._task_index: dict[str, str] = {}  # task_id -> campaign_id
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -- campaign submission -------------------------------------------------
+
+    def submit_campaign(self, spec: PipelineSpec, items: Iterable | None = None,
+                        *, params: Mapping[str, Any] | None = None,
+                        campaign_id: str | None = None) -> str:
+        """Plan a campaign and submit its source-stage tasks. Returns the
+        campaign id; progress via :meth:`status`, blocking via :meth:`wait`."""
+        items = list(items) if items is not None else []
+        cid = campaign_id or new_task_id(f"camp-{spec.name}")
+        with self._lock:
+            if cid in self._campaigns:
+                raise PipelineError(f"campaign {cid!r} already exists")
+            run = _CampaignRun(cid, spec, items, dict(params or {}))
+            self._campaigns[cid] = run
+            for st in spec.sources():
+                if st.fan_out is None:
+                    batches = [items]
+                else:
+                    batches = [items[i:i + st.fan_out]
+                               for i in range(0, len(items), st.fan_out)] \
+                        or [[]]
+                for bi, batch in enumerate(batches):
+                    self._plan_task(run, st, {"batch": list(batch),
+                                              "batch_index": bi}, [])
+            self._pump(run)
+            self._publish(run, force=True)
+        return cid
+
+    def _plan_task(self, run: _CampaignRun, st: Stage,
+                   extra: Mapping[str, Any], dep_ids: list) -> None:
+        idx = len(run.by_stage[st.name])
+        task = TaskMessage(
+            task_id=f"{run.campaign_id}-{st.name}-{idx:05d}",
+            script=st.script,
+            params={**run.params, **dict(st.params), **dict(extra)},
+            resources=st.resources,
+            timeout_s=st.timeout_s,
+            campaign_id=run.campaign_id,
+            stage=st.name,
+            dep_ids=list(dep_ids),
+        )
+        pt = _PTask(stage=st.name, task=task, index=idx)
+        run.tasks[task.task_id] = pt
+        run.by_stage[st.name].append(task.task_id)
+        run.ready[st.name].append(task.task_id)
+        self._task_index[task.task_id] = run.campaign_id
+
+    # -- backpressure pump ----------------------------------------------------
+
+    def _pump(self, run: _CampaignRun) -> None:
+        """Submit ready tasks up to each stage's ``max_in_flight`` bound."""
+        for st in run.spec.topological():
+            q = run.ready[st.name]
+            ss = run.status.stages[st.name]
+            bound = st.max_in_flight
+            while q and (bound is None or ss.in_flight < bound):
+                tid = q.popleft()
+                pt = run.tasks[tid]
+                pt.attempts += 1
+                pt.last_submit = time.time()
+                ss.submitted += 1
+                self._submitter.submit_task(pt.task)
+
+    # -- ingestion -------------------------------------------------------------
+
+    def _ingest(self, topic: str, value: dict) -> None:
+        if topic == self.topics["done"]:
+            res = ResultMessage.from_dict(value)
+            self._on_result(res)
+        elif topic == self.topics["error"]:
+            err = ErrorMessage.from_dict(value)
+            self._on_error(err)
+
+    def _on_result(self, res: ResultMessage) -> None:
+        with self._lock:
+            cid = self._task_index.get(res.task_id)
+            if cid is None:
+                return  # not one of ours (flat task or another agent's)
+            run = self._campaigns[cid]
+            pt = run.tasks[res.task_id]
+            ss = run.status.stages[pt.stage]
+            if pt.done or pt.failed or run.status.done:
+                # fencing: duplicate results, late results for retry-exhausted
+                # tasks, and stragglers of an already-failed campaign never
+                # advance the DAG (a FAILED verdict must stay final).
+                ss.duplicates += 1
+                return
+            pt.done = True
+            pt.result = res.result
+            ss.done += 1
+            self._advance(run, pt)
+            self._pump(run)
+            self._check_complete(run)
+            self._publish(run)
+
+    def _advance(self, run: _CampaignRun, pt: _PTask) -> None:
+        for ds in run.spec.downstream(pt.stage):
+            if not ds.join:
+                self._plan_task(run, ds,
+                                {"upstream": pt.result,
+                                 "dep_index": pt.index},
+                                [pt.task.task_id])
+            elif ds.name not in run.joins_fired and \
+                    all(run.stage_complete(d) for d in ds.depends_on):
+                run.joins_fired.add(ds.name)
+                upstream: dict[str, list] = {}
+                dep_ids: list[str] = []
+                for dep in ds.depends_on:
+                    tids = run.by_stage[dep]
+                    upstream[dep] = [run.tasks[t].result for t in tids]
+                    dep_ids.extend(tids)
+                self._plan_task(run, ds, {"upstream": upstream}, dep_ids)
+
+    def _on_error(self, err: ErrorMessage) -> None:
+        with self._lock:
+            cid = self._task_index.get(err.task_id)
+            if cid is None:
+                return
+            run = self._campaigns[cid]
+            pt = run.tasks[err.task_id]
+            if pt.done or pt.failed:
+                return
+            if err.attempt < pt.task.attempt:
+                return  # fenced: an older attempt failing after a resubmit
+            run.status.stages[pt.stage].errors += 1
+            self._retry_or_fail(run, pt, reason=f"error: {err.error}")
+
+    # -- watchdog / retries ------------------------------------------------------
+
+    def _retry_or_fail(self, run: _CampaignRun, pt: _PTask,
+                       reason: str) -> None:
+        st = run.spec.stages[pt.stage]
+        ss = run.status.stages[pt.stage]
+        if pt.attempts < st.retry.max_attempts:
+            pt.task = pt.task.retry()
+            pt.attempts += 1
+            pt.last_submit = time.time()
+            ss.retried += 1
+            self._submitter.submit_task(pt.task)
+            log.info("campaign %s: resubmitted %s (attempt %d, %s)",
+                     run.campaign_id, pt.task.task_id, pt.task.attempt,
+                     reason)
+        else:
+            pt.failed = True
+            ss.failed += 1
+            run.status.state = CampaignState.FAILED
+            run.status.failure = (f"stage {pt.stage!r} task "
+                                  f"{pt.task.task_id} exhausted "
+                                  f"{st.retry.max_attempts} attempts "
+                                  f"({reason})")
+            run.status.finished_at = time.time()
+            run.completion.set()
+            self._publish(run, force=True)
+            log.warning("campaign %s FAILED: %s",
+                        run.campaign_id, run.status.failure)
+            self._evict_finished()
+
+    def _watchdog(self) -> None:
+        now = time.time()
+        with self._lock:
+            for run in self._campaigns.values():
+                if run.status.done:
+                    continue
+                for st in run.spec.topological():
+                    timeout = st.retry.timeout_s or self.default_task_timeout_s
+                    if timeout is None:
+                        continue
+                    for tid in run.by_stage[st.name]:
+                        pt = run.tasks[tid]
+                        if pt.done or pt.failed or pt.attempts == 0:
+                            continue
+                        if now - pt.last_submit > timeout:
+                            self._retry_or_fail(
+                                run, pt,
+                                reason=f"no result after {timeout:.1f}s")
+                        if run.status.done:
+                            return
+
+    def _check_complete(self, run: _CampaignRun) -> None:
+        if run.status.done:
+            return
+        if all(run.stage_complete(n) for n in run.spec.stages):
+            run.status.state = CampaignState.COMPLETED
+            run.status.finished_at = time.time()
+            run.completion.set()
+            self._publish(run, force=True)
+            self._evict_finished()
+
+    def _evict_finished(self) -> None:
+        """Drop the oldest finished campaigns beyond ``retain_finished`` so a
+        resident agent serving a campaign stream doesn't grow without bound.
+        Callers must fetch results before the run ages out of the window."""
+        if self.retain_finished is None:
+            return
+        finished = sorted((r for r in self._campaigns.values()
+                           if r.status.done),
+                          key=lambda r: r.status.finished_at or 0.0)
+        for run in finished[:max(0, len(finished) - self.retain_finished)]:
+            self.forget(run.campaign_id)
+
+    def forget(self, campaign_id: str) -> None:
+        """Release a finished campaign's task table and results."""
+        with self._lock:
+            run = self._campaigns.get(campaign_id)
+            if run is None or not run.status.done:
+                return
+            for tid in run.tasks:
+                self._task_index.pop(tid, None)
+            del self._campaigns[campaign_id]
+
+    # -- progress publishing (PREFIX-campaigns) -----------------------------------
+
+    def _publish(self, run: _CampaignRun, force: bool = False) -> None:
+        now = time.time()
+        if not force and now - run.last_publish < self.publish_interval_s:
+            return
+        run.last_publish = now
+        ev = CampaignEvent(
+            campaign_id=run.campaign_id, pipeline=run.spec.name,
+            state=run.status.state, agent_id=self.agent_id,
+            stages={n: s.to_dict() for n, s in run.status.stages.items()})
+        self._producer.send(self.topics["campaigns"], ev.to_dict(),
+                            key=run.campaign_id)
+
+    # -- queries -----------------------------------------------------------------
+
+    def status(self, campaign_id: str) -> CampaignStatus:
+        with self._lock:
+            return self._campaigns[campaign_id].status
+
+    def campaigns(self) -> dict[str, CampaignStatus]:
+        with self._lock:
+            return {c: r.status for c, r in self._campaigns.items()}
+
+    def wait(self, campaign_id: str, timeout: float = 60.0) -> CampaignStatus:
+        with self._lock:
+            run = self._campaigns[campaign_id]
+        run.completion.wait(timeout)
+        return run.status
+
+    def results(self, campaign_id: str) -> dict[str, list]:
+        """Per-stage results in task-creation order (completed tasks only)."""
+        with self._lock:
+            run = self._campaigns[campaign_id]
+            return {
+                n: [run.tasks[t].result for t in tids
+                    if run.tasks[t].result is not None]
+                for n, tids in run.by_stage.items()
+            }
+
+    def final_result(self, campaign_id: str) -> Any:
+        """The joined result: for a single-task terminal stage (the usual
+        join barrier) the result dict itself, else {stage: [results...]}."""
+        with self._lock:
+            run = self._campaigns[campaign_id]
+            terms = run.spec.terminals()
+            if len(terms) == 1 and len(run.by_stage[terms[0].name]) == 1:
+                tid = run.by_stage[terms[0].name][0]
+                return run.tasks[tid].result
+            return {t.name: [run.tasks[tid].result
+                             for tid in run.by_stage[t.name]]
+                    for t in terms}
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "agent_id": self.agent_id,
+                "campaigns": len(self._campaigns),
+                "running": sum(1 for r in self._campaigns.values()
+                               if not r.status.done),
+            }
+
+    # -- main loop ------------------------------------------------------------------
+
+    def start(self) -> "PipelineAgent":
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"{self.agent_id}-loop",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                batches = self._consumer.poll(timeout=self.poll_interval_s)
+                for tp, recs in batches.items():
+                    for rec in recs:
+                        self._ingest(tp.topic, rec.value)
+                if batches:
+                    self._consumer.commit()
+                self._watchdog()
+                with self._lock:
+                    for run in self._campaigns.values():
+                        if not run.status.done:
+                            self._pump(run)
+            except Exception:  # pragma: no cover - defensive
+                log.exception("pipeline agent %s loop error", self.agent_id)
+                time.sleep(self.poll_interval_s)
+        self._consumer.close()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)

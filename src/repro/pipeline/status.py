@@ -1,0 +1,107 @@
+"""Per-campaign / per-stage progress state.
+
+These counters are the campaign-level analogue of the paper's per-task status
+table (§3): the :class:`~repro.pipeline.agent.PipelineAgent` maintains them
+locally, publishes snapshots on the ``PREFIX-campaigns`` topic, and the
+MonitorAgent mirrors the latest snapshot per campaign into its REST API
+(``/campaigns``), so dashboards see DAG progress without talking to the
+pipeline agent directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping
+
+
+class CampaignState:
+    RUNNING = "RUNNING"
+    COMPLETED = "COMPLETED"
+    FAILED = "FAILED"
+
+
+@dataclasses.dataclass
+class StageStatus:
+    """Progress counters for one stage of one campaign.
+
+    ``expected`` is fixed at submit time (source = #batches, map = 1:1 with
+    upstream, join = 1); ``submitted``/``done``/``failed`` advance as the DAG
+    executes; ``retried`` counts watchdog/error resubmissions and
+    ``duplicates`` counts fenced duplicate results (late attempts)."""
+
+    name: str
+    script: str
+    expected: int = 0
+    submitted: int = 0
+    done: int = 0
+    failed: int = 0
+    retried: int = 0
+    duplicates: int = 0
+    errors: int = 0
+
+    @property
+    def in_flight(self) -> int:
+        return max(0, self.submitted - self.done - self.failed)
+
+    @property
+    def complete(self) -> bool:
+        return self.expected > 0 and self.done >= self.expected
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["in_flight"] = self.in_flight
+        d["complete"] = self.complete
+        return d
+
+
+@dataclasses.dataclass
+class CampaignStatus:
+    campaign_id: str
+    pipeline: str
+    state: str = CampaignState.RUNNING
+    stages: dict[str, StageStatus] = dataclasses.field(default_factory=dict)
+    started_at: float = dataclasses.field(default_factory=time.time)
+    finished_at: float | None = None
+    failure: str | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.state in (CampaignState.COMPLETED, CampaignState.FAILED)
+
+    def progress(self) -> float:
+        total = sum(s.expected for s in self.stages.values())
+        if total == 0:
+            return 0.0
+        return sum(s.done for s in self.stages.values()) / total
+
+    def elapsed_s(self) -> float:
+        end = self.finished_at if self.finished_at is not None else time.time()
+        return end - self.started_at
+
+    def to_dict(self) -> dict:
+        return {
+            "campaign_id": self.campaign_id,
+            "pipeline": self.pipeline,
+            "state": self.state,
+            "progress": round(self.progress(), 4),
+            "elapsed_s": round(self.elapsed_s(), 3),
+            "failure": self.failure,
+            "stages": {n: s.to_dict() for n, s in self.stages.items()},
+        }
+
+    @classmethod
+    def from_snapshot(cls, d: Mapping[str, Any]) -> "CampaignStatus":
+        """Rebuild from a ``to_dict`` snapshot (monitor-side mirroring)."""
+        st = cls(campaign_id=d["campaign_id"], pipeline=d.get("pipeline", ""),
+                 state=d.get("state", CampaignState.RUNNING))
+        for name, sd in d.get("stages", {}).items():
+            st.stages[name] = StageStatus(
+                name=name, script=sd.get("script", ""),
+                expected=int(sd.get("expected", 0)),
+                submitted=int(sd.get("submitted", 0)),
+                done=int(sd.get("done", 0)),
+                failed=int(sd.get("failed", 0)),
+                retried=int(sd.get("retried", 0)),
+                duplicates=int(sd.get("duplicates", 0)),
+                errors=int(sd.get("errors", 0)))
+        return st

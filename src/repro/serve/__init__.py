@@ -1,3 +1,7 @@
-from .engine import ServeEngine, ServeRequestComputing
+from .engine import (ServeEngine, ServePostprocessComputing,
+                     ServeRequestComputing, ServeTokenizeComputing,
+                     serve_pipeline)
 
-__all__ = ["ServeEngine", "ServeRequestComputing"]
+__all__ = ["ServeEngine", "ServePostprocessComputing",
+           "ServeRequestComputing", "ServeTokenizeComputing",
+           "serve_pipeline"]

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -135,10 +136,10 @@ class ServeEngine:
                           max_steps: int = 10_000) -> dict[str, list[int]]:
         """Continuous batching over a request list: join-on-arrival."""
         results: dict[str, list[int]] = {}
-        queue = list(pending)
-        for _ in range(max_steps):
+        queue = deque(pending)  # popleft is O(1); list.pop(0) was O(n) per
+        for _ in range(max_steps):  # admit, O(n²) over a long request log
             while queue and self.add_request(*queue[0]):
-                queue.pop(0)
+                queue.popleft()
             done = self.step()
             for rid, toks in done:
                 results[rid] = toks
@@ -150,18 +151,99 @@ class ServeEngine:
 @register_script("serve_request")
 class ServeRequestComputing(ClusterComputing):
     """KSA task wrapper: one task = one generation request batch. Agents that
-    own a ServeEngine process these; used by examples/serve.py."""
+    own a ServeEngine process these; used by examples/serve_batch.py.
+
+    Doubles as the *generate* stage of the serving pipeline: when run as a
+    map stage, the tokenize stage's result arrives as ``params["upstream"]``
+    and carries the request list."""
 
     engine: ServeEngine | None = None  # injected per-process
 
     def run(self) -> Any:
         if type(self).engine is None:
             raise RuntimeError("serving agent has no engine attached")
+        requests = self.params.get("requests")
+        if requests is None:
+            requests = (self.params.get("upstream") or {}).get("requests", [])
         reqs = [(r["id"], list(r["prompt"]), int(r.get("max_new", 8)))
-                for r in self.params["requests"]]
+                for r in requests]
         t0 = time.time()
         results = type(self).engine.run_until_drained(reqs)
         dt = time.time() - t0
         return {"results": {k: v for k, v in results.items()},
                 "tokens_per_s": sum(len(v) for v in results.values()) /
                                 max(dt, 1e-9)}
+
+
+# ---------------------------------------------------------------------------
+# serving as a pipeline: tokenize → generate → post-process
+# ---------------------------------------------------------------------------
+#
+# The same workload-agnostic DAG machinery that runs the knot campaign runs
+# the serving path: raw texts fan out into tokenize batches (pure CPU), each
+# tokenized batch maps 1:1 onto a generate task (the model-owning stage), and
+# a join barrier assembles the response set. This is the AlphaKnot web-service
+# pattern (§4) with the ParaFold-style CPU/accelerator stage split.
+
+@register_script("serve_tokenize")
+class ServeTokenizeComputing(ClusterComputing):
+    """Pipeline stage 1 (source, fan-out): byte-level toy tokenizer.
+    params: batch = [{"id", "text", "max_new"?}], vocab_size, max_new."""
+
+    def run(self) -> Any:
+        vocab = int(self.params.get("vocab_size", 256))
+        default_max_new = int(self.params.get("max_new", 8))
+        requests = []
+        for r in self.params.get("batch", []):
+            text = str(r.get("text", ""))
+            prompt = [ord(c) % vocab for c in text] or [0]
+            requests.append({"id": r["id"], "prompt": prompt,
+                             "max_new": int(r.get("max_new",
+                                                  default_max_new))})
+        self.check_cancel()
+        return {"requests": requests,
+                "prompt_tokens": sum(len(r["prompt"]) for r in requests)}
+
+
+@register_script("serve_postprocess")
+class ServePostprocessComputing(ClusterComputing):
+    """Pipeline stage 3 (join): merge every generate result into one
+    response set with campaign-level throughput stats."""
+
+    def run(self) -> Any:
+        upstream = dict(self.params.get("upstream") or {})
+        merged: dict[str, list[int]] = {}
+        for r in upstream.get("generate", []):
+            if r:
+                merged.update(r.get("results", {}))
+        self.check_cancel()
+        return {
+            "responses": {rid: {"tokens": toks, "n_tokens": len(toks)}
+                          for rid, toks in sorted(merged.items())},
+            "n_requests": len(merged),
+            "total_tokens": sum(len(t) for t in merged.values()),
+        }
+
+
+def serve_pipeline(batch_size: int = 4, *, vocab_size: int = 256,
+                   max_new: int = 8, max_in_flight: int | None = 1,
+                   max_attempts: int = 3,
+                   task_timeout_s: float | None = None):
+    """Serving as a 3-stage DAG over raw-text items:
+    tokenize (fan-out) → generate (map, model-owning pool) → post-process
+    (join). ``max_in_flight`` defaults to 1 on generate so a single engine
+    is never oversubscribed (backpressure at the stage level)."""
+    from repro.core import Resources
+    from repro.pipeline import PipelineSpec, RetryPolicy, Stage
+
+    retry = RetryPolicy(max_attempts=max_attempts, timeout_s=task_timeout_s)
+    return PipelineSpec("serve", [
+        Stage("tokenize", "serve_tokenize", fan_out=batch_size,
+              params={"vocab_size": vocab_size, "max_new": max_new},
+              resources=Resources(cpus=1), retry=retry),
+        Stage("generate", "serve_request", depends_on=("tokenize",),
+              resources=Resources(cpus=2, gpus=1, mem_mb=4096),
+              max_in_flight=max_in_flight, retry=retry),
+        Stage("postprocess", "serve_postprocess", depends_on=("generate",),
+              join=True, retry=retry),
+    ])

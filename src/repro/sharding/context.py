@@ -29,6 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # promoted out of experimental in jax 0.6
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+
 from repro.models.config import ModelConfig
 from repro.models.moe import moe_capacity, shared_expert
 from .rules import batch_spec, resolve_spec, tree_shardings
@@ -153,7 +158,7 @@ class DistContext:
 
         # w_down: (E, f, d) — d is axis 2
         wd_spec = P(expert_sh, None, d_sh)
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             island, mesh=self.mesh,
             in_specs=(P(None, None), w_spec, w_spec, wd_spec,
                       P(bax, None, None)),
@@ -256,7 +261,7 @@ class DistContext:
 
         w_spec = P(expert_sh, d_sh, None)
         wd_spec = P(expert_sh, None, d_sh)
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             island, mesh=self.mesh,
             in_specs=(P(None, None), w_spec, w_spec, wd_spec,
                       P(bax, None, None)),
@@ -305,7 +310,7 @@ class DistContext:
                 jnp.full((b,), q_offset, jnp.int32))
         if qoff.ndim == 0:
             qoff = jnp.broadcast_to(qoff[None], (b,))
-        return jax.shard_map(
+        return shard_map(
             island, mesh=self.mesh,
             in_specs=(P(bax, None, None, None), P(bax, tp, None, None),
                       P(bax, tp, None, None), P(bax, tp), P(bax, tp),
@@ -393,7 +398,7 @@ class DistContext:
 
         w_spec = P(fsdp if len(fsdp) > 1 else fsdp[0], tp) if d_sharded \
             else P(None, tp)
-        ce, z, denom = jax.shard_map(
+        ce, z, denom = shard_map(
             island, mesh=self.mesh,
             in_specs=(P(bax, None, None), w_spec, P(bax, None), P(bax, None)),
             out_specs=(P(), P(), P()),
@@ -442,7 +447,7 @@ class DistContext:
             z = jax.lax.psum((jnp.square(lse) * wt).sum(), bax) / denom
             return ce, z, denom
 
-        ce, z, denom = jax.shard_map(
+        ce, z, denom = shard_map(
             island, mesh=self.mesh,
             in_specs=(P(bax, None, tp), P(bax, None), P(bax, None)),
             out_specs=(P(), P(), P()),

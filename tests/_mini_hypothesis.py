@@ -1,0 +1,71 @@
+"""Deterministic stand-in for the `hypothesis` property-testing API.
+
+The container this repo targets does not ship `hypothesis` (and the no-new-
+dependencies rule forbids installing it). Property tests still run: this
+module implements the tiny subset the test-suite uses — ``given`` /
+``settings`` / ``strategies.integers|sampled_from|lists`` with ``.map`` —
+drawing examples from a fixed-seed RNG so runs are reproducible. When real
+hypothesis is available the tests import it instead (see the try/except at
+each call site); this fallback trades shrinking and coverage-guided search
+for determinism, not correctness.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def example_draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module name
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        elems = list(elements)
+        return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [elem.example_draw(rng)
+                         for _ in range(rng.randint(min_size, max_size))])
+
+
+def settings(max_examples: int = 20, deadline: Any = None,
+             **_ignored: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._mini_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        def wrapper() -> None:
+            cfg = getattr(wrapper, "_mini_settings", None) or \
+                getattr(fn, "_mini_settings", {})
+            rng = random.Random(_SEED)
+            for _ in range(cfg.get("max_examples", 20)):
+                pos = [s.example_draw(rng) for s in arg_strategies]
+                kws = {k: s.example_draw(rng)
+                       for k, s in kw_strategies.items()}
+                fn(*pos, **kws)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

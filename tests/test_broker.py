@@ -3,7 +3,11 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: deterministic fallback
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.core.broker import (Broker, Consumer, FencedError, Producer,
                                TopicPartition)

@@ -1,0 +1,419 @@
+"""Pipeline semantics: spec validation, fan-out → map → join execution,
+duplicate-result fencing at the barrier, backpressure, watchdog recovery
+from a mid-campaign agent kill, and the /campaigns REST mirror."""
+import json
+import time
+import urllib.request
+
+import pytest
+
+from repro.core import (Broker, ClusterComputing, MonitorAgent, Submitter,
+                        WorkerAgent, register_script)
+from repro.core.broker import Producer
+from repro.core.messages import ResultMessage, topic_names
+from repro.pipeline import (PipelineAgent, PipelineError, PipelineSpec,
+                            RetryPolicy, SpecError, Stage, run_campaign)
+
+
+# ---------------------------------------------------------------------------
+# tiny deterministic stage scripts
+# ---------------------------------------------------------------------------
+
+@register_script("pl_double")
+class _Double(ClusterComputing):
+    def run(self):
+        return {"values": [v * 2 for v in self.params["batch"]]}
+
+
+@register_script("pl_pass")
+class _Pass(ClusterComputing):
+    def run(self):
+        up = self.params["upstream"]
+        return {"values": list(up["values"]), "dep_index": self.params["dep_index"]}
+
+
+@register_script("pl_sum")
+class _Sum(ClusterComputing):
+    def run(self):
+        up = self.params["upstream"]
+        total = sum(v for r in up["fwd"] for v in r["values"])
+        return {"total": total, "n_src": len(up["src"]),
+                "n_fwd": len(up["fwd"])}
+
+
+@register_script("pl_slow")
+class _Slow(ClusterComputing):
+    def run(self):
+        deadline = time.time() + float(self.params.get("duration", 0.1))
+        while time.time() < deadline:
+            self.check_cancel()
+            time.sleep(0.005)
+        return {"batch": list(self.params["batch"])}
+
+
+def _three_stage(fan_out=3, **stage_kw) -> PipelineSpec:
+    return PipelineSpec("t3", [
+        Stage("src", "pl_double", fan_out=fan_out, **stage_kw),
+        Stage("fwd", "pl_pass", depends_on=("src",), **stage_kw),
+        Stage("agg", "pl_sum", depends_on=("src", "fwd"), join=True),
+    ])
+
+
+def _wait(cond, timeout=10.0, interval=0.01):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_cycles_and_bad_deps():
+    with pytest.raises(SpecError):
+        PipelineSpec("c", [Stage("a", "pl_pass", depends_on=("b",)),
+                           Stage("b", "pl_pass", depends_on=("a",))])
+    with pytest.raises(SpecError):
+        PipelineSpec("u", [Stage("a", "pl_double", depends_on=("ghost",))])
+    with pytest.raises(SpecError):  # map stages take exactly one dependency
+        PipelineSpec("m", [Stage("a", "pl_double"), Stage("b", "pl_double"),
+                           Stage("c", "pl_pass", depends_on=("a", "b"))])
+    with pytest.raises(SpecError):  # fan_out only on sources
+        Stage("x", "pl_pass", depends_on=("a",), fan_out=4)
+    with pytest.raises(SpecError):  # joins need upstream stages
+        Stage("j", "pl_sum", join=True)
+
+
+def test_expected_counts_source_map_join():
+    spec = _three_stage(fan_out=4)
+    assert spec.expected_counts(10) == {"src": 3, "fwd": 3, "agg": 1}
+    assert spec.expected_counts(0) == {"src": 1, "fwd": 1, "agg": 1}
+    assert [s.name for s in spec.terminals()] == ["agg"]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end DAG execution
+# ---------------------------------------------------------------------------
+
+def test_fanout_map_join_end_to_end():
+    broker = Broker(default_partitions=4)
+    w = WorkerAgent(broker, "p1", slots=2, poll_interval_s=0.01).start()
+    try:
+        res = run_campaign(_three_stage(fan_out=3), list(range(10)),
+                           broker=broker, prefix="p1", timeout_s=60.0)
+        assert res.final["total"] == sum(v * 2 for v in range(10))
+        assert res.final["n_src"] == 4  # ceil(10/3) fan-out batches
+        st = res.status
+        assert st.state == "COMPLETED"
+        assert {n: s.done for n, s in st.stages.items()} == \
+            {"src": 4, "fwd": 4, "agg": 1}
+        assert st.stages["agg"].submitted == 1
+        # every map task carries campaign metadata + its upstream dep
+        assert all(len(r["values"]) > 0 for r in res.results["fwd"])
+    finally:
+        w.stop()
+        broker.close()
+
+
+def test_join_fires_exactly_once_despite_duplicate_upstream_results():
+    """The barrier invariant from the ISSUE: duplicate (re-attempted)
+    upstream results must not double-trigger the join. Results are driven by
+    hand (no worker agents) so the interleaving is deterministic."""
+    broker = Broker(default_partitions=2)
+    pipe = PipelineAgent(broker, "p2", poll_interval_s=0.005).start()
+    prod = Producer(broker)
+    topics = topic_names("p2")
+    try:
+        cid = pipe.submit_campaign(_three_stage(fan_out=2), [1, 2, 3, 4],
+                                   campaign_id="camp-dup")
+        src0, src1 = "camp-dup-src-00000", "camp-dup-src-00001"
+
+        def done(tid, result, attempt=0):
+            prod.send(topics["done"],
+                      ResultMessage(task_id=tid, agent_id="hand",
+                                    result=result, attempt=attempt).to_dict(),
+                      key=tid)
+
+        done(src0, {"values": [2, 4]})
+        done(src0, {"values": [2, 4]}, attempt=1)   # duplicate: late attempt
+        done(src0, {"values": [999]}, attempt=2)    # duplicate with bad data
+        done(src1, {"values": [6, 8]})
+        # map tasks appear 1:1 as upstream completes, despite the duplicates
+        assert _wait(lambda: pipe.status(cid).stages["fwd"].submitted == 2)
+        assert pipe.status(cid).stages["fwd"].submitted == 2
+        done("camp-dup-fwd-00000", {"values": [2, 4]})
+        done("camp-dup-fwd-00000", {"values": [2, 4]}, attempt=1)  # dup
+        done("camp-dup-fwd-00001", {"values": [6, 8]})
+        # the join barrier fires exactly once
+        assert _wait(lambda: pipe.status(cid).stages["agg"].submitted == 1)
+        time.sleep(0.1)  # give a double-fire the chance to happen
+        st = pipe.status(cid)
+        assert st.stages["agg"].submitted == 1
+        assert st.stages["src"].duplicates == 2
+        assert st.stages["fwd"].duplicates == 1
+        done("camp-dup-agg-00000", {"total": 20, "n_src": 2, "n_fwd": 2})
+        assert _wait(lambda: pipe.status(cid).done)
+        assert pipe.status(cid).state == "COMPLETED"
+        # the fenced duplicate's payload never reached the join
+        assert pipe.final_result(cid)["total"] == 20
+        assert pipe.results(cid)["src"][0] == {"values": [2, 4]}
+    finally:
+        pipe.stop()
+        broker.close()
+
+
+def test_backpressure_bounds_in_flight_tasks():
+    """max_in_flight=2 with a 4-slot worker: the stage never has more than
+    two tasks outstanding, yet the campaign drains completely."""
+    broker = Broker(default_partitions=4)
+    spec = PipelineSpec("bp", [
+        Stage("work", "pl_slow", fan_out=1, params={"duration": 0.1},
+              max_in_flight=2),
+    ])
+    w = WorkerAgent(broker, "p3", slots=4, poll_interval_s=0.005).start()
+    pipe = PipelineAgent(broker, "p3", poll_interval_s=0.005).start()
+    try:
+        cid = pipe.submit_campaign(spec, list(range(8)))
+        seen_max = 0
+        deadline = time.time() + 30.0
+        while time.time() < deadline:
+            st = pipe.status(cid)
+            seen_max = max(seen_max, st.stages["work"].in_flight)
+            if st.done:
+                break
+            time.sleep(0.005)
+        st = pipe.status(cid)
+        assert st.state == "COMPLETED"
+        assert st.stages["work"].done == 8
+        assert 0 < seen_max <= 2, seen_max
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_mid_campaign_agent_kill_redelivers_and_completes():
+    """Crash a worker holding an in-flight stage task: the pipeline watchdog
+    resubmits after RetryPolicy.timeout_s and the survivor finishes the
+    campaign (at-least-once end-to-end, duplicates fenced)."""
+    broker = Broker(default_partitions=4, session_timeout_s=0.5)
+    retry = RetryPolicy(max_attempts=5, timeout_s=1.0)
+    spec = PipelineSpec("kill", [
+        Stage("work", "pl_slow", fan_out=1, params={"duration": 0.3},
+              retry=retry),
+        Stage("agg", "pl_sum_batches", depends_on=("work",), join=True),
+    ])
+    a1 = WorkerAgent(broker, "p4", slots=1, poll_interval_s=0.01).start()
+    a2 = WorkerAgent(broker, "p4", slots=1, poll_interval_s=0.01).start()
+    pipe = PipelineAgent(broker, "p4", poll_interval_s=0.01).start()
+    try:
+        cid = pipe.submit_campaign(spec, list(range(6)))
+        assert _wait(lambda: a1.stats()["in_flight"] > 0
+                     or pipe.status(cid).stages["work"].done >= 2)
+        a1.crash()
+        st = pipe.wait(cid, timeout=60.0)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["work"].done == 6
+        # all six input items survived the crash (no task lost, none doubled)
+        batches = sorted(v for r in pipe.results(cid)["work"]
+                         for v in r["batch"])
+        assert batches == list(range(6))
+        assert pipe.final_result(cid)["n_batches"] == 6
+    finally:
+        pipe.stop()
+        a1.stop()
+        a2.stop()
+        broker.close()
+
+
+@register_script("pl_sum_batches")
+class _SumBatches(ClusterComputing):
+    def run(self):
+        up = self.params["upstream"]
+        items = [v for r in up["work"] for v in r["batch"]]
+        return {"n_batches": len(up["work"]), "items": sorted(items)}
+
+
+def test_error_retry_then_success():
+    """A stage task that fails once is resubmitted by the pipeline's error
+    handler (bounded by RetryPolicy.max_attempts) and the campaign
+    completes."""
+    broker = Broker(default_partitions=2)
+    spec = PipelineSpec("err", [
+        Stage("flaky", "fail", fan_out=None,
+              params={"fail_times": 1},
+              retry=RetryPolicy(max_attempts=3)),
+    ])
+    w = WorkerAgent(broker, "p5", slots=1, poll_interval_s=0.01).start()
+    pipe = PipelineAgent(broker, "p5", poll_interval_s=0.01).start()
+    try:
+        cid = pipe.submit_campaign(spec, [])
+        st = pipe.wait(cid, timeout=30.0)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["flaky"].errors >= 1
+        assert st.stages["flaky"].retried >= 1
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_late_result_cannot_resurrect_failed_campaign():
+    """A result arriving after a task exhausted its retry budget must be
+    fenced: the FAILED verdict is final and no downstream (ghost) tasks are
+    emitted."""
+    broker = Broker(default_partitions=2)
+    pipe = PipelineAgent(broker, "p8", poll_interval_s=0.005).start()
+    prod = Producer(broker)
+    topics = topic_names("p8")
+    spec = PipelineSpec("late", [
+        Stage("src", "pl_double", fan_out=4,
+              retry=RetryPolicy(max_attempts=1, timeout_s=0.2)),
+        Stage("fwd", "pl_pass", depends_on=("src",)),
+    ])
+    try:
+        cid = pipe.submit_campaign(spec, [1, 2], campaign_id="camp-late")
+        # no workers: the watchdog exhausts the single attempt and fails
+        assert _wait(lambda: pipe.status(cid).state == "FAILED", timeout=10.0)
+        # the straggler's result finally lands
+        prod.send(topics["done"],
+                  ResultMessage(task_id="camp-late-src-00000", agent_id="gh",
+                                result={"values": [2, 4]}).to_dict(),
+                  key="camp-late-src-00000")
+        time.sleep(0.2)
+        st = pipe.status(cid)
+        assert st.state == "FAILED"
+        assert st.stages["src"].done == 0
+        assert st.stages["fwd"].submitted == 0  # no ghost downstream task
+        assert st.stages["src"].duplicates == 1  # fenced, counted
+    finally:
+        pipe.stop()
+        broker.close()
+
+
+def test_finished_campaigns_are_evicted_beyond_retention():
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "p9", slots=2, poll_interval_s=0.005).start()
+    pipe = PipelineAgent(broker, "p9", poll_interval_s=0.005,
+                         retain_finished=2).start()
+    spec = PipelineSpec("tiny", [Stage("src", "pl_double", fan_out=4)])
+    try:
+        cids = []
+        for i in range(4):  # sequentially, so eviction order is determinate
+            c = pipe.submit_campaign(spec, [i])
+            assert pipe.wait(c, 30.0).done
+            cids.append(c)
+        assert sorted(pipe.campaigns()) == sorted(cids[-2:])
+        with pytest.raises(KeyError):
+            pipe.status(cids[0])  # oldest evicted
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_retry_exhaustion_fails_campaign():
+    broker = Broker(default_partitions=2)
+    spec = PipelineSpec("doom", [
+        Stage("hopeless", "fail", params={"fail_times": 99},
+              retry=RetryPolicy(max_attempts=2)),
+    ])
+    w = WorkerAgent(broker, "p6", slots=1, poll_interval_s=0.01).start()
+    try:
+        with pytest.raises(PipelineError, match="exhausted"):
+            run_campaign(spec, [], broker=broker, prefix="p6",
+                         timeout_s=30.0)
+    finally:
+        w.stop()
+        broker.close()
+
+
+# ---------------------------------------------------------------------------
+# knots campaign parity + /campaigns REST
+# ---------------------------------------------------------------------------
+
+def test_knots_pipeline_matches_flat_baseline():
+    """The 3-stage knots campaign reports identical knot counts and cores to
+    the flat single-stage submission (acceptance criterion)."""
+    from repro.apps import knots
+    broker = Broker(default_partitions=4)
+    ids = list(range(24))
+    sub = Submitter(broker, "kf")
+    mon = MonitorAgent(broker, "kf", poll_interval_s=0.01).start()
+    ws = [WorkerAgent(broker, "kf", slots=1, poll_interval_s=0.01).start()
+          for _ in range(2)]
+    try:
+        tids = sub.submit_batches("knot_batch", ids, batch_size=8,
+                                  params={"n_points": 64, "stage2": True})
+        assert mon.wait_all(tids, timeout=240.0)
+        flat_knotted, flat_cores = set(), {}
+        for t in tids:
+            r = mon.task(t).result
+            flat_knotted.update(r["knotted"])
+            flat_cores.update(r["cores"])
+
+        spec = knots.knots_pipeline(8, n_points=64)
+        res = run_campaign(spec, ids, broker=broker, prefix="kf",
+                           timeout_s=240.0)
+        assert res.final["knotted"] == sorted(flat_knotted)
+        assert res.final["cores"] == flat_cores
+        assert res.final["processed"] == len(ids)
+        assert res.status.stages["screen"].done == 3
+        assert res.status.stages["localize"].done == 3
+    finally:
+        for w in ws:
+            w.stop()
+        mon.stop()
+        broker.close()
+
+
+def test_monitor_campaigns_rest_endpoint():
+    """PipelineAgent snapshots on PREFIX-campaigns surface through the
+    MonitorAgent REST API (satellite: /campaigns endpoint)."""
+    broker = Broker(default_partitions=2)
+    mon = MonitorAgent(broker, "p7", poll_interval_s=0.01).start()
+    w = WorkerAgent(broker, "p7", slots=2, poll_interval_s=0.01).start()
+    try:
+        res = run_campaign(_three_stage(fan_out=2), [1, 2, 3],
+                           broker=broker, prefix="p7", timeout_s=60.0)
+        cid = res.campaign_id
+        assert _wait(lambda: mon.campaign(cid) is not None and
+                     mon.campaign(cid)["state"] == "COMPLETED")
+        port = mon.start_http(0)
+
+        def get(path):
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}{path}") as r:
+                return json.loads(r.read())
+
+        camps = get("/campaigns")
+        assert cid in camps
+        one = get(f"/campaigns/{cid}")
+        assert one["state"] == "COMPLETED"
+        assert one["pipeline"] == "t3"
+        stages = one["stages"]
+        assert stages["src"]["done"] == stages["src"]["expected"] == 2
+        assert stages["agg"]["done"] == 1
+        assert stages["agg"]["in_flight"] == 0
+        assert get("/summary")["campaigns"] >= 1
+    finally:
+        w.stop()
+        mon.stop()
+        broker.close()
+
+
+def test_serve_pipeline_spec_shape():
+    """The serving DAG wires serve_request as a map stage between tokenize
+    fan-out and the post-process join (workload-agnostic subsystem)."""
+    from repro.serve import serve_pipeline
+    spec = serve_pipeline(batch_size=4)
+    names = [s.name for s in spec.topological()]
+    assert names == ["tokenize", "generate", "postprocess"]
+    assert spec.stages["generate"].script == "serve_request"
+    assert spec.stages["generate"].max_in_flight == 1
+    assert spec.stages["postprocess"].join
+    assert spec.expected_counts(10) == \
+        {"tokenize": 3, "generate": 3, "postprocess": 1}

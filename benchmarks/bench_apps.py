@@ -9,8 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import knots
+from repro.cluster import KsaCluster
 from repro.configs import smoke_config
-from repro.core import Broker, MonitorAgent, Submitter, WorkerAgent
 from repro.kernels import ref as kref
 from repro.kernels.writhe import writhe_map
 from repro.models import init_params, model_spec
@@ -49,22 +49,16 @@ def bench_knot_campaign(n_structures: int = 96, batch_size: int = 16
                         ) -> list[tuple[str, float, str]]:
     """Mini AlphaKnot campaign (paper: 160M structures / batches of 4000 /
     3 clusters): here scaled down, 2 agents, makespan + throughput."""
-    b = Broker(default_partitions=4)
-    sub = Submitter(b, "kc")
-    mon = MonitorAgent(b, "kc", poll_interval_s=0.005).start()
-    agents = [WorkerAgent(b, "kc", slots=1, poll_interval_s=0.005).start()
-              for _ in range(2)]
-    ids = list(range(n_structures))
-    t0 = time.perf_counter()
-    tids = sub.submit_batches("knot_batch", ids, batch_size=batch_size,
-                              params={"n_points": 96, "stage2": True})
-    ok = mon.wait_all(tids, timeout=600.0)
-    dt = time.perf_counter() - t0
-    knotted = sum(len(mon.task(t).result["knotted"]) for t in tids)
-    for a in agents:
-        a.stop()
-    mon.stop()
-    b.close()
+    with KsaCluster(prefix="kc", poll_interval_s=0.005) as c:
+        for _ in range(2):
+            c.add_worker(slots=1)
+        ids = list(range(n_structures))
+        t0 = time.perf_counter()
+        tids = c.submit_batches("knot_batch", ids, batch_size=batch_size,
+                                params={"n_points": 96, "stage2": True})
+        ok = c.wait_all(tids, timeout=600.0)
+        dt = time.perf_counter() - t0
+        knotted = sum(len(c.result(t)["knotted"]) for t in tids)
     return [("knot_campaign", dt / n_structures * 1e6,
              f"{'ok' if ok else 'FAIL'}: {n_structures} structures "
              f"in {dt:.1f} s ({n_structures/dt:.1f}/s), {knotted} knotted")]

@@ -6,8 +6,8 @@ import queue
 import threading
 import time
 
-from repro.core import (Broker, ClusterAgent, Consumer, MonitorAgent,
-                        Producer, SimSlurm, Submitter, WorkerAgent)
+from repro.cluster import KsaCluster
+from repro.core import Broker, Consumer, Producer, SimSlurm
 
 
 def bench_broker_throughput(n_msgs: int = 20_000) -> list[tuple[str, float, str]]:
@@ -40,19 +40,14 @@ def bench_submit_latency() -> list[tuple[str, float, str]]:
     """§6: submission -> execution delay vs agent polling interval."""
     rows = []
     for poll_s in (0.001, 0.02, 0.1):
-        b = Broker()
-        sub = Submitter(b, "lat")
-        mon = MonitorAgent(b, "lat", poll_interval_s=0.001).start()
-        ag = WorkerAgent(b, "lat", slots=2, poll_interval_s=poll_s).start()
-        lats = []
-        for _ in range(20):
-            t0 = time.perf_counter()
-            tid = sub.submit("sleep", params={"duration": 0.0})
-            mon.wait_all([tid], timeout=10.0, poll=0.0005)
-            lats.append(time.perf_counter() - t0)
-        ag.stop()
-        mon.stop()
-        b.close()
+        with KsaCluster(prefix="lat", poll_interval_s=0.001) as c:
+            c.add_worker(slots=2, poll_interval_s=poll_s)
+            lats = []
+            for _ in range(20):
+                t0 = time.perf_counter()
+                tid = c.submit("sleep", params={"duration": 0.0})
+                c.wait_all([tid], timeout=10.0, poll=0.0005)
+                lats.append(time.perf_counter() - t0)
         lats.sort()
         med = lats[len(lats) // 2]
         rows.append((f"submit_latency_poll{int(poll_s*1000)}ms",
@@ -101,28 +96,23 @@ def bench_oversubscription_vs_celery(n_tasks: int = 60,
 
     # --- KSA ClusterAgent path ---
     slurm = SimSlurm(nodes=2, cpus_per_node=2)
-    b = Broker()
-    sub = Submitter(b, "ov")
-    mon = MonitorAgent(b, "ov", poll_interval_s=0.005).start()
-    agent = ClusterAgent(b, slurm, "ov", poll_interval_s=0.005,
-                         oversubscribe=4).start()
-    ids = [sub.submit("sleep", params={"duration": task_s}, cpus=1)
-           for _ in range(n_tasks)]
-    time.sleep(task_s * 4)
     ext_wait = {}
 
     def ext_job(cancel_event=None):
         ext_wait["run"] = time.perf_counter()
 
-    t_sub = time.perf_counter()
-    slurm.sbatch(ext_job, name="external-user", cpus=1, user="someone_else")
-    mon.wait_all(ids, timeout=120.0)
-    t_all = time.perf_counter() - t_sub
-    wait_ksa = ext_wait["run"] - t_sub
-    agent.stop()
-    mon.stop()
+    with KsaCluster(prefix="ov", poll_interval_s=0.005) as c:
+        c.add_slurm(slurm, oversubscribe=4)
+        ids = [c.submit("sleep", params={"duration": task_s}, cpus=1)
+               for _ in range(n_tasks)]
+        time.sleep(task_s * 4)
+        t_sub = time.perf_counter()
+        slurm.sbatch(ext_job, name="external-user", cpus=1,
+                     user="someone_else")
+        c.wait_all(ids, timeout=120.0)
+        t_all = time.perf_counter() - t_sub
+        wait_ksa = ext_wait["run"] - t_sub
     slurm.shutdown()
-    b.close()
     rows.append(("external_wait_ksa", wait_ksa * 1e6,
                  f"external user waited {wait_ksa*1e3:.0f} ms"))
     rows.append(("campaign_ksa", t_all * 1e6,
@@ -161,17 +151,16 @@ def bench_startup_sync() -> list[tuple[str, float, str]]:
     rows = []
     for n in (1_000, 10_000, 50_000):
         b = Broker()
-        sub = Submitter(b, "st")
         p = Producer(b)
         for i in range(n):
             p.send("st-jobs", {"task_id": f"t{i}", "status": "DONE",
                                "attempt": 0}, key=f"t{i}")
         t0 = time.perf_counter()
-        mon = MonitorAgent(b, "st", poll_interval_s=0.001).start()
-        while mon.summary()["tasks"] < n:
-            time.sleep(0.002)
-        dt = time.perf_counter() - t0
-        mon.stop()
+        with KsaCluster(prefix="st", broker=b,
+                        poll_interval_s=0.001) as c:
+            while c.monitor.summary()["tasks"] < n:
+                time.sleep(0.002)
+            dt = time.perf_counter() - t0
         b.close()
         rows.append((f"monitor_startup_{n}_statuses", dt / n * 1e6,
                      f"{dt:.2f} s to sync {n} statuses"))
@@ -181,23 +170,17 @@ def bench_startup_sync() -> list[tuple[str, float, str]]:
 def bench_failure_recovery() -> list[tuple[str, float, str]]:
     """Watchdog redelivery latency: agent dies mid-task -> replacement
     completes; reports the added makespan."""
-    b = Broker(session_timeout_s=0.5)
-    sub = Submitter(b, "fr")
-    mon = MonitorAgent(b, "fr", task_timeout_s=0.4,
-                       poll_interval_s=0.005).start()
-    a1 = WorkerAgent(b, "fr", slots=1, poll_interval_s=0.005,
-                     heartbeat_interval_s=0.1).start()
-    t0 = time.perf_counter()
-    tid = sub.submit("sleep", params={"duration": 0.2})
-    time.sleep(0.05)
-    a1.crash()
-    a2 = WorkerAgent(b, "fr", slots=1, poll_interval_s=0.005,
-                     heartbeat_interval_s=0.1).start()
-    ok = mon.wait_all([tid], timeout=30.0)
-    dt = time.perf_counter() - t0
-    a2.stop()
-    mon.stop()
-    b.close()
+    with KsaCluster(prefix="fr", session_timeout_s=0.5, task_timeout_s=0.4,
+                    poll_interval_s=0.005,
+                    agent_kw=dict(heartbeat_interval_s=0.1)) as c:
+        a1 = c.add_worker(slots=1)
+        t0 = time.perf_counter()
+        tid = c.submit("sleep", params={"duration": 0.2})
+        time.sleep(0.05)
+        a1.crash()
+        c.add_worker(slots=1)
+        ok = c.wait_all([tid], timeout=30.0)
+        dt = time.perf_counter() - t0
     return [("failure_recovery_e2e", dt * 1e6,
              f"{'ok' if ok else 'FAILED'}: 0.2s task survived agent kill "
              f"in {dt:.2f} s")]

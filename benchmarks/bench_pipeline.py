@@ -2,14 +2,13 @@
 3-stage knots DAG vs the flat single-stage baseline on the same workload
 (ISSUE satellite). The pipeline pays an orchestration hop per stage but only
 runs knot-core localization on screen survivors — the ParaFold argument for
-heterogeneous stage splits."""
+heterogeneous stage splits. All wiring goes through the KsaCluster facade."""
 from __future__ import annotations
 
 import time
 
 from repro.apps import knots
-from repro.core import Broker, MonitorAgent, Submitter, WorkerAgent
-from repro.pipeline import run_campaign
+from repro.cluster import KsaCluster
 
 
 def bench_pipeline_vs_flat(n_structures: int = 96, batch_size: int = 16,
@@ -19,34 +18,31 @@ def bench_pipeline_vs_flat(n_structures: int = 96, batch_size: int = 16,
     ids = list(range(n_structures))
 
     # -- flat baseline: one bag of knot_batch tasks -------------------------
-    b = Broker(default_partitions=4)
-    sub = Submitter(b, "bpf")
-    mon = MonitorAgent(b, "bpf", poll_interval_s=0.005).start()
-    agents = [WorkerAgent(b, "bpf", slots=1, poll_interval_s=0.005).start()
-              for _ in range(2)]
-    t0 = time.perf_counter()
-    tids = sub.submit_batches("knot_batch", ids, batch_size=batch_size,
-                              params={"n_points": n_points, "stage2": True})
-    ok = mon.wait_all(tids, timeout=600.0)
-    dt_flat = time.perf_counter() - t0
-    flat_knotted = sorted({i for t in tids
-                           for i in mon.task(t).result["knotted"]})
-    for a in agents:
-        a.stop()
-    mon.stop()
+    with KsaCluster(prefix="bpf", poll_interval_s=0.005) as c:
+        for _ in range(2):
+            c.add_worker(slots=1)
+        t0 = time.perf_counter()
+        tids = c.submit_batches("knot_batch", ids, batch_size=batch_size,
+                                params={"n_points": n_points,
+                                        "stage2": True})
+        ok = c.wait_all(tids, timeout=600.0)
+        dt_flat = time.perf_counter() - t0
+        flat_knotted = sorted({i for t in tids
+                               for i in c.result(t)["knotted"]})
 
     rows.append(("campaign_flat", dt_flat / n_structures * 1e6,
                  f"{'ok' if ok else 'FAIL'}: {n_structures} structures in "
                  f"{dt_flat:.1f} s ({n_structures/dt_flat:.1f}/s), "
                  f"{len(flat_knotted)} knotted"))
 
-    # -- 3-stage DAG campaign over the same broker pattern ------------------
-    agents = [WorkerAgent(b, "bpp", slots=1, poll_interval_s=0.005).start()
-              for _ in range(2)]
-    spec = knots.knots_pipeline(batch_size, n_points=n_points)
-    t0 = time.perf_counter()
-    res = run_campaign(spec, ids, broker=b, prefix="bpp", timeout_s=600.0)
-    dt_pipe = time.perf_counter() - t0
+    # -- 3-stage DAG campaign through the facade ----------------------------
+    with KsaCluster(prefix="bpp", poll_interval_s=0.005) as c:
+        for _ in range(2):
+            c.add_worker(slots=1)
+        spec = knots.knots_pipeline(batch_size, n_points=n_points)
+        t0 = time.perf_counter()
+        res = c.run_campaign(spec, ids, timeout_s=600.0)
+        dt_pipe = time.perf_counter() - t0
     match = res.final["knotted"] == flat_knotted
     rows.append(("campaign_pipeline_3stage", dt_pipe / n_structures * 1e6,
                  f"{n_structures} structures in {dt_pipe:.1f} s "
@@ -58,10 +54,8 @@ def bench_pipeline_vs_flat(n_structures: int = 96, batch_size: int = 16,
         per_task = res.elapsed_s / max(ss.done, 1)
         rows.append((f"campaign_stage_{name}", per_task * 1e6,
                      f"{ss.done}/{ss.expected} tasks, "
-                     f"{ss.retried} retried, {ss.duplicates} dup-fenced"))
-    for a in agents:
-        a.stop()
-    b.close()
+                     f"{ss.retried} retried, {ss.duplicates} dup-fenced, "
+                     f"{ss.skipped} skipped"))
     return rows
 
 
@@ -72,28 +66,21 @@ def bench_pipeline_orchestration_overhead(n_tasks: int = 64
     orchestration hop (result ingest + downstream emit)."""
     from repro.pipeline import PipelineSpec, Stage
 
-    b = Broker(default_partitions=4)
-    w = WorkerAgent(b, "bpo", slots=4, poll_interval_s=0.002).start()
+    with KsaCluster(prefix="bpo", poll_interval_s=0.002) as c:
+        c.add_worker(slots=4)
+        t0 = time.perf_counter()
+        tids = [c.submit("sleep", params={"duration": 0.0})
+                for _ in range(n_tasks)]
+        c.wait_all(tids, timeout=120.0)
+        dt_flat = time.perf_counter() - t0
 
-    sub = Submitter(b, "bpo")
-    mon = MonitorAgent(b, "bpo", poll_interval_s=0.002).start()
-    t0 = time.perf_counter()
-    tids = [sub.submit("sleep", params={"duration": 0.0})
-            for _ in range(n_tasks)]
-    mon.wait_all(tids, timeout=120.0)
-    dt_flat = time.perf_counter() - t0
-    mon.stop()
-
-    spec = PipelineSpec("noop", [
-        Stage("a", "sleep", fan_out=1, params={"duration": 0.0}),
-        Stage("b", "sleep", depends_on=("a",), params={"duration": 0.0}),
-    ])
-    t0 = time.perf_counter()
-    run_campaign(spec, list(range(n_tasks // 2)), broker=b, prefix="bpo",
-                 timeout_s=120.0)
-    dt_pipe = time.perf_counter() - t0
-    w.stop()
-    b.close()
+        spec = PipelineSpec("noop", [
+            Stage("a", "sleep", fan_out=1, params={"duration": 0.0}),
+            Stage("b", "sleep", depends_on=("a",), params={"duration": 0.0}),
+        ])
+        t0 = time.perf_counter()
+        c.run_campaign(spec, list(range(n_tasks // 2)), timeout_s=120.0)
+        dt_pipe = time.perf_counter() - t0
     return [
         ("orchestration_flat", dt_flat / n_tasks * 1e6,
          f"{n_tasks} no-op tasks in {dt_flat*1e3:.0f} ms"),

@@ -1,0 +1,100 @@
+"""Routing & fairness benchmarks (ISSUE satellite).
+
+1. ``bench_resource_routing`` — a mixed CPU/GPU workload on a heterogeneous
+   pool: with the paper's flat shared topic every agent leases every task, so
+   GPU work queues behind the CPU backlog (and can land on nodes that, on
+   real hardware, could not run it at all); with resource-aware routing the
+   GPU class topic feeds the GPU pool directly. Reports the GPU batch's
+   completion latency and any misplaced executions under each policy.
+
+2. ``bench_fair_share`` — two concurrent campaigns on one worker: under FIFO
+   leasing the late small campaign drains only after the big one (tail
+   latency ≈ the whole makespan); under FairShare weighted round-robin it
+   interleaves proportionally.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.cluster import KsaCluster
+from repro.core import (FairShare, FifoLease, ResourceClassPolicy,
+                        ResourceProfile, SingleTopicPolicy)
+from repro.pipeline import PipelineSpec, RetryPolicy, Stage
+
+
+def _mixed_run(placement, routed: bool, n_cpu: int, n_gpu: int,
+               task_s: float) -> tuple[float, float, int]:
+    """-> (gpu batch latency, total makespan, gpu tasks run off-pool)."""
+    with KsaCluster(prefix="rt", placement=placement,
+                    poll_interval_s=0.002) as c:
+        for _ in range(2):
+            c.add_worker(slots=1, profile=None if not routed
+                         else ResourceProfile(cpus=1))
+        gpu_agent = c.add_worker(
+            slots=1, profile=None if not routed
+            else ResourceProfile(cpus=1, gpus=1))
+        t0 = time.perf_counter()
+        cpu_ids = [c.submit("sleep", params={"duration": task_s}, cpus=1)
+                   for _ in range(n_cpu)]
+        gpu_ids = [c.submit("sleep", params={"duration": task_s}, gpus=1)
+                   for _ in range(n_gpu)]
+        assert c.wait_all(gpu_ids, timeout=120.0)
+        dt_gpu = time.perf_counter() - t0
+        assert c.wait_all(cpu_ids, timeout=120.0)
+        dt_all = time.perf_counter() - t0
+        misplaced = sum(1 for t in gpu_ids
+                        if c.task(t).agent_id != gpu_agent.agent_id)
+    return dt_gpu, dt_all, misplaced
+
+
+def bench_resource_routing(n_cpu: int = 40, n_gpu: int = 4,
+                           task_s: float = 0.05
+                           ) -> list[tuple[str, float, str]]:
+    flat_gpu, flat_all, flat_misplaced = _mixed_run(
+        SingleTopicPolicy(), False, n_cpu, n_gpu, task_s)
+    # dedicated GPU pool (gpu_takes_cpu=False): the ParaFold split — the GPU
+    # stage never waits behind CPU work the pool happened to lease.
+    routed_gpu, routed_all, routed_misplaced = _mixed_run(
+        ResourceClassPolicy(gpu_takes_cpu=False), True, n_cpu, n_gpu, task_s)
+    return [
+        ("routing_flat_gpu_latency", flat_gpu * 1e6,
+         f"{n_gpu} GPU tasks done after {flat_gpu*1e3:.0f} ms behind a "
+         f"{n_cpu}-task CPU backlog; {flat_misplaced} ran off the GPU pool"),
+        ("routing_classed_gpu_latency", routed_gpu * 1e6,
+         f"{n_gpu} GPU tasks done after {routed_gpu*1e3:.0f} ms "
+         f"({flat_gpu/max(routed_gpu, 1e-9):.1f}x faster than flat); "
+         f"{routed_misplaced} misplaced (must be 0)"),
+        ("routing_flat_makespan", flat_all * 1e6,
+         f"mixed campaign {flat_all:.2f} s on the shared topic"),
+        ("routing_classed_makespan", routed_all * 1e6,
+         f"mixed campaign {routed_all:.2f} s with cpu/gpu class topics"),
+    ]
+
+
+def bench_fair_share(n_big: int = 24, n_small: int = 6, task_s: float = 0.02
+                     ) -> list[tuple[str, float, str]]:
+    rows = []
+    # FIFO baseline = the pre-lease behaviour: no backpressure bound, every
+    # task hits the topic at submit time and drains first-come. FairShare
+    # keeps ready queues (max_in_flight) and interleaves them by weight.
+    for name, lease, bound in (("fifo", FifoLease(), None),
+                               ("fair_share", FairShare(), 2)):
+        spec = PipelineSpec("fs", [
+            Stage("work", "sleep", fan_out=1, params={"duration": task_s},
+                  max_in_flight=bound, retry=RetryPolicy(max_attempts=2)),
+        ])
+        with KsaCluster(prefix=f"fs{name[:2]}", lease=lease,
+                        poll_interval_s=0.002) as c:
+            c.add_worker(slots=1)
+            t0 = time.perf_counter()
+            big = c.submit_campaign(spec, list(range(n_big)), weight=1.0)
+            small = c.submit_campaign(spec, list(range(n_small)), weight=1.0)
+            c.wait_campaign(small, timeout=120.0)
+            dt_small = time.perf_counter() - t0
+            c.wait_campaign(big, timeout=120.0)
+            dt_all = time.perf_counter() - t0
+        rows.append((f"fairshare_{name}_small_tail", dt_small * 1e6,
+                     f"{n_small}-task campaign (behind a {n_big}-task peer) "
+                     f"finished at {dt_small*1e3:.0f} ms of a "
+                     f"{dt_all*1e3:.0f} ms makespan under {name}"))
+    return rows

@@ -9,7 +9,7 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_apps, bench_core, bench_pipeline
+    from . import bench_apps, bench_core, bench_pipeline, bench_routing
 
     suites = [
         ("broker_throughput", bench_core.bench_broker_throughput),
@@ -18,6 +18,8 @@ def main() -> None:
          bench_core.bench_oversubscription_vs_celery),
         ("startup_sync", bench_core.bench_startup_sync),
         ("failure_recovery", bench_core.bench_failure_recovery),
+        ("resource_routing", bench_routing.bench_resource_routing),
+        ("fair_share", bench_routing.bench_fair_share),
         ("writhe_kernel", bench_apps.bench_writhe_kernel),
         ("knot_campaign", bench_apps.bench_knot_campaign),
         ("pipeline_vs_flat", bench_pipeline.bench_pipeline_vs_flat),

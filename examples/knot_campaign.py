@@ -5,9 +5,10 @@ redelivery in action) and a flat-baseline parity check.
 
 Stage 1 fans structures out into screening batches (paper §4: batches of 4000
 across 3 clusters; here scaled to the container), stage 2 localizes knot
-cores on the survivors of each batch, stage 3 is a join barrier aggregating
-the campaign — all orchestrated by a PipelineAgent over the same broker the
-flat bag-of-tasks submission uses.
+cores on the survivors of each batch — skipped entirely for batches with no
+survivors (conditional edge), stage 3 is a join barrier aggregating the
+campaign. Both the campaign and the flat baseline run through the
+:class:`~repro.cluster.KsaCluster` facade on one shared broker.
 
 Run:  PYTHONPATH=src python examples/knot_campaign.py [--structures 128]
 """
@@ -19,33 +20,28 @@ import urllib.error
 import urllib.request
 
 from repro.apps import knots  # registers knot_* scripts
-from repro.core import Broker, ClusterAgent, MonitorAgent, SimSlurm, \
-    Submitter, WorkerAgent
-from repro.pipeline import PipelineAgent, run_campaign
+from repro.cluster import KsaCluster
+from repro.core import Broker
 
 
 def flat_baseline(broker: Broker, structures: int, batch_size: int,
                   n_points: int) -> dict:
     """The pre-pipeline flat submission (one bag of knot_batch tasks),
     used to check the campaign reports identical knot counts."""
-    sub = Submitter(broker, "flat")
-    mon = MonitorAgent(broker, "flat", poll_interval_s=0.01).start()
-    agents = [WorkerAgent(broker, "flat", slots=1,
-                          poll_interval_s=0.01).start() for _ in range(2)]
-    ids = list(range(structures))
-    t0 = time.time()
-    tids = sub.submit_batches("knot_batch", ids, batch_size=batch_size,
-                              params={"n_points": n_points, "stage2": True})
-    assert mon.wait_all(tids, timeout=900.0), "flat baseline stalled"
-    dt = time.time() - t0
-    knotted, cores = set(), {}
-    for t in tids:
-        r = mon.task(t).result
-        knotted.update(r["knotted"])
-        cores.update(r["cores"])
-    for a in agents:
-        a.stop()
-    mon.stop()
+    with KsaCluster(prefix="flat", broker=broker) as c:
+        for _ in range(2):
+            c.add_worker(slots=1)
+        ids = list(range(structures))
+        t0 = time.time()
+        tids = c.submit_batches("knot_batch", ids, batch_size=batch_size,
+                                params={"n_points": n_points, "stage2": True})
+        assert c.wait_all(tids, timeout=900.0), "flat baseline stalled"
+        dt = time.time() - t0
+        knotted, cores = set(), {}
+        for t in tids:
+            r = c.result(t)
+            knotted.update(r["knotted"])
+            cores.update(r["cores"])
     return {"knotted": sorted(knotted), "cores": cores, "elapsed_s": dt}
 
 
@@ -57,92 +53,80 @@ def main() -> None:
     ap.add_argument("--skip-baseline", action="store_true")
     args = ap.parse_args()
 
-    broker = Broker(default_partitions=4, session_timeout_s=2.0)
+    # -- execution pools: one simulated cluster + one workstation -----------
+    cluster = KsaCluster(prefix="alphaknot", session_timeout_s=2.0,
+                         slurm=dict(nodes=2, cpus_per_node=2,
+                                    oversubscribe=2),
+                         pipeline_task_timeout_s=20.0, http=True)
+    with cluster as c:
+        workstation = c.add_worker(slots=1, heartbeat_interval_s=0.2,
+                                   profile=None)
 
-    # -- execution pools: one simulated cluster + two workstations ----------
-    mon = MonitorAgent(broker, "alphaknot", poll_interval_s=0.01).start()
-    slurm = SimSlurm(nodes=2, cpus_per_node=2)
-    agents = [
-        ClusterAgent(broker, slurm, "alphaknot", oversubscribe=2,
-                     poll_interval_s=0.01).start(),
-        WorkerAgent(broker, "alphaknot", slots=1, poll_interval_s=0.01,
-                    heartbeat_interval_s=0.2).start(),
-    ]
-    port = mon.start_http(0)
+        spec = knots.knots_pipeline(args.batch_size, n_points=args.n_points,
+                                    task_timeout_s=20.0)
+        ids = list(range(args.structures))
+        print(f"campaign: {len(ids)} structures through 3-stage pipeline "
+              f"{[s.name for s in spec.topological()]}")
 
-    spec = knots.knots_pipeline(args.batch_size, n_points=args.n_points,
-                                task_timeout_s=20.0)
-    ids = list(range(args.structures))
-    print(f"campaign: {len(ids)} structures through 3-stage pipeline "
-          f"{[s.name for s in spec.topological()]}")
+        # inject a failure once the campaign is under way (paper-motivating
+        # scenario: a node dies mid-campaign; the watchdog redelivers)
+        def killer() -> None:
+            time.sleep(1.0)
+            print("!! killing the workstation agent mid-campaign")
+            workstation.crash()
+        threading.Thread(target=killer, daemon=True).start()
 
-    # inject a failure once the campaign is under way (paper-motivating
-    # scenario: a node dies mid-campaign; the pipeline watchdog redelivers)
-    def killer() -> None:
-        time.sleep(1.0)
-        print("!! killing the workstation agent mid-campaign")
-        agents[1].crash()
-    threading.Thread(target=killer, daemon=True).start()
+        last = [0.0]
 
-    pipe = PipelineAgent(broker, "alphaknot",
-                         default_task_timeout_s=20.0).start()
-    last = [0.0]
+        def progress(st) -> None:
+            if st.progress() - last[0] >= 0.25 or st.done:
+                last[0] = st.progress()
+                counters = {n: f"{s.done}/{s.expected}"
+                            for n, s in st.stages.items()}
+                print(f"  progress {st.progress():5.0%}  {counters}")
 
-    def progress(st) -> None:
-        if st.progress() - last[0] >= 0.25 or st.done:
-            last[0] = st.progress()
-            counters = {n: f"{s.done}/{s.expected}"
-                        for n, s in st.stages.items()}
-            print(f"  progress {st.progress():5.0%}  {counters}")
+        res = c.run_campaign(spec, ids, progress=progress, timeout_s=900.0)
+        agg = res.final
+        print(f"\nprocessed {agg['processed']} structures in "
+              f"{res.elapsed_s:.1f}s ({agg['processed']/res.elapsed_s:.1f}/s) "
+              f"despite the failure")
+        print(f"knotted: {len(agg['knotted'])} "
+              f"(expected ~{int(args.structures * 0.75 * 0.85)} — 3 of 4 "
+              f"families are knotted, minus pLDDT-style drops)")
+        for sid, (a, b) in list(agg["cores"].items())[:5]:
+            print(f"  structure {sid}: knot core ≈ residues [{a}, {b})")
+        retried = sum(s.retried for s in res.status.stages.values())
+        fenced = sum(s.duplicates for s in res.status.stages.values())
+        skipped = sum(s.skipped for s in res.status.stages.values())
+        print(f"pipeline: {retried} watchdog resubmissions, "
+              f"{fenced} duplicate results fenced, "
+              f"{skipped} empty localize tasks skipped")
+        snap, deadline = None, time.time() + 5.0
+        while time.time() < deadline:  # monitor ingests the snapshot async
+            try:
+                with urllib.request.urlopen(
+                        f"http://127.0.0.1:{c.http_port}/campaigns/"
+                        f"{res.campaign_id}") as r:
+                    snap = json.loads(r.read())
+                if snap["state"] != "RUNNING":
+                    break
+            except urllib.error.HTTPError:
+                pass
+            time.sleep(0.05)
+        stages = ", ".join(f"{n}: {s['done']}/{s['expected']}"
+                           for n, s in snap["stages"].items())
+        print(f"monitor GET /campaigns/{res.campaign_id}: "
+              f"state={snap['state']} stages={{{stages}}}")
 
-    res = run_campaign(spec, ids, broker=broker, prefix="alphaknot",
-                       agent=pipe, progress=progress, timeout_s=900.0)
-    agg = res.final
-    print(f"\nprocessed {agg['processed']} structures in "
-          f"{res.elapsed_s:.1f}s ({agg['processed']/res.elapsed_s:.1f}/s) "
-          f"despite the failure")
-    print(f"knotted: {len(agg['knotted'])} "
-          f"(expected ~{int(args.structures * 0.75 * 0.85)} — 3 of 4 "
-          f"families are knotted, minus pLDDT-style drops)")
-    for sid, (a, b) in list(agg["cores"].items())[:5]:
-        print(f"  structure {sid}: knot core ≈ residues [{a}, {b})")
-    retried = sum(s.retried for s in res.status.stages.values())
-    fenced = sum(s.duplicates for s in res.status.stages.values())
-    print(f"pipeline: {retried} watchdog resubmissions, "
-          f"{fenced} duplicate results fenced")
-    snap, deadline = None, time.time() + 5.0
-    while time.time() < deadline:  # monitor ingests the final snapshot async
-        try:
-            with urllib.request.urlopen(
-                    f"http://127.0.0.1:{port}/campaigns/"
-                    f"{res.campaign_id}") as r:
-                snap = json.loads(r.read())
-            if snap["state"] != "RUNNING":
-                break
-        except urllib.error.HTTPError:
-            pass
-        time.sleep(0.05)
-    stages = ", ".join(f"{n}: {s['done']}/{s['expected']}"
-                       for n, s in snap["stages"].items())
-    print(f"monitor GET /campaigns/{res.campaign_id}: "
-          f"state={snap['state']} stages={{{stages}}}")
-
-    if not args.skip_baseline:
-        base = flat_baseline(broker, args.structures, args.batch_size,
-                             args.n_points)
-        match = base["knotted"] == agg["knotted"]
-        print(f"flat baseline: {len(base['knotted'])} knotted in "
-              f"{base['elapsed_s']:.1f}s — counts "
-              f"{'MATCH' if match else 'MISMATCH'}")
-        assert match, (base["knotted"], agg["knotted"])
-        assert set(base["cores"]) == set(agg["cores"])
-
-    pipe.stop()
-    for a in agents:
-        a.stop()
-    mon.stop()
-    slurm.shutdown()
-    broker.close()
+        if not args.skip_baseline:
+            base = flat_baseline(c.broker, args.structures, args.batch_size,
+                                 args.n_points)
+            match = base["knotted"] == agg["knotted"]
+            print(f"flat baseline: {len(base['knotted'])} knotted in "
+                  f"{base['elapsed_s']:.1f}s — counts "
+                  f"{'MATCH' if match else 'MISMATCH'}")
+            assert match, (base["knotted"], agg["knotted"])
+            assert set(base["cores"]) == set(agg["cores"])
     print("OK")
 
 

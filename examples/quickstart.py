@@ -1,20 +1,20 @@
 """Quickstart — the paper's Fig. 3 example, end to end in one process.
 
 A user-defined ``MatrixComputing`` task (extends ``ClusterComputing``)
-computes eigenvalues of random matrices. Tasks flow Submitter → broker →
-one ClusterAgent (simulated Slurm cluster) + one WorkerAgent (workstation)
-→ MonitorAgent, which also serves the REST API.
+computes eigenvalues of random matrices. Tasks flow through a
+:class:`~repro.cluster.KsaCluster` — the facade that owns the broker, a
+simulated Slurm cluster, a workstation worker, and the MonitorAgent with its
+REST API (everything the paper wires by hand in §3).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import json
-import time
 import urllib.request
 
 import numpy as np
 
-from repro.core import (Broker, ClusterAgent, ClusterComputing, MonitorAgent,
-                        SimSlurm, Submitter, WorkerAgent, register_script)
+from repro.cluster import KsaCluster
+from repro.core import ClusterComputing, register_script
 
 
 @register_script("matrix")
@@ -35,35 +35,27 @@ class MatrixComputing(ClusterComputing):
 
 
 def main() -> None:
-    broker = Broker(default_partitions=4)
-    submitter = Submitter(broker, "demo")
-    monitor = MonitorAgent(broker, "demo", task_timeout_s=30.0).start()
-    port = monitor.start_http(0)
+    # one "cluster" (2 nodes x 2 cpus, simulated Slurm, queue kept full via
+    # oversubscription) + one 2-slot workstation worker + monitor REST API
+    with KsaCluster(prefix="demo", workers=1, worker_slots=2,
+                    slurm=dict(nodes=2, cpus_per_node=2, oversubscribe=4),
+                    task_timeout_s=30.0, http=True) as c:
+        task_ids = [c.submit("matrix", params={"n": 96, "seed": s},
+                             cpus=1, timeout_s=60.0)
+                    for s in range(12)]
+        print(f"submitted {len(task_ids)} tasks; "
+              f"monitor REST on :{c.http_port}")
 
-    # one "cluster" (2 nodes x 2 cpus, simulated Slurm) + one workstation
-    slurm = SimSlurm(nodes=2, cpus_per_node=2)
-    cluster = ClusterAgent(broker, slurm, "demo", oversubscribe=4).start()
-    worker = WorkerAgent(broker, "demo", slots=2).start()
+        assert c.wait_all(task_ids, timeout=120.0), "tasks did not finish"
+        for tid in task_ids[:3]:
+            print(tid, "->", c.result(tid))
 
-    task_ids = [submitter.submit("matrix", params={"n": 96, "seed": s},
-                                 cpus=1, timeout_s=60.0)
-                for s in range(12)]
-    print(f"submitted {len(task_ids)} tasks; monitor REST on :{port}")
-
-    assert monitor.wait_all(task_ids, timeout=120.0), "tasks did not finish"
-    for tid in task_ids[:3]:
-        print(tid, "->", monitor.task(tid).result)
-
-    with urllib.request.urlopen(f"http://127.0.0.1:{port}/summary") as r:
-        print("REST /summary:", json.loads(r.read()))
-    print("cluster agent completed:", cluster.tasks_completed,
-          "| worker completed:", worker.tasks_completed)
-
-    worker.stop()
-    cluster.stop()
-    monitor.stop()
-    slurm.shutdown()
-    broker.close()
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{c.http_port}/summary") as r:
+            print("REST /summary:", json.loads(r.read()))
+        for a in c.status()["agents"]:
+            print(f"{a['kind']} agent {a['agent_id']} completed:",
+                  a["completed"])
     print("OK")
 
 

@@ -1,14 +1,14 @@
 """Serving a small model with batched requests through the KSA broker —
 the AlphaKnot-2.0 web-service pattern (paper §4) applied to LM inference.
 
-Requests land on the ``PREFIX-new`` topic; a serving agent owns a
-continuous-batching ServeEngine; generated tokens return via ``PREFIX-done``
-and the monitor REST API.
+Requests are routed by resource class: ``serve_request`` tasks declare
+``gpus=1`` and land only on the engine-owning (GPU-profiled) worker, while
+tokenize/post-process stages run on the CPU pool — the ParaFold stage split,
+wired end to end through one :class:`~repro.cluster.KsaCluster`.
 
 Part 2 runs the same workload as a repro.pipeline DAG — tokenize (fan-out) →
 generate (serve_request as a map stage) → post-process (join) — proving the
-campaign subsystem is workload-agnostic (ParaFold-style CPU/model stage
-split).
+campaign subsystem is workload-agnostic.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
@@ -18,10 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import KsaCluster
 from repro.configs import smoke_config
-from repro.core import Broker, MonitorAgent, Submitter, WorkerAgent
+from repro.core import ResourceProfile
 from repro.models import init_params, model_spec
-from repro.pipeline import run_campaign
 from repro.serve import ServeEngine, serve_pipeline
 from repro.serve.engine import ServeRequestComputing
 
@@ -29,51 +29,47 @@ from repro.serve.engine import ServeRequestComputing
 def main() -> None:
     cfg = smoke_config("stablelm_1_6b")
     params = init_params(model_spec(cfg), jax.random.PRNGKey(0),
-                         jnp.dtype(cfg.dtype))
+                        jnp.dtype(cfg.dtype))
     # attach the engine to the serving task class (one engine per process)
     ServeRequestComputing.engine = ServeEngine(cfg, params, n_slots=4,
                                                max_len=96)
 
-    broker = Broker(default_partitions=2)
-    sub = Submitter(broker, "srv")
-    mon = MonitorAgent(broker, "srv", poll_interval_s=0.01).start()
-    agent = WorkerAgent(broker, "srv", slots=1, poll_interval_s=0.01).start()
+    with KsaCluster(prefix="srv", workers=1, default_partitions=2) as c:
+        # the model-owning pool: one GPU-profiled slot, so generate tasks
+        # queue here and never oversubscribe the single engine
+        c.add_worker(slots=1, profile=ResourceProfile(cpus=2, gpus=1))
 
-    rng = np.random.RandomState(0)
-    reqs = [{"id": f"user{i}",
-             "prompt": [int(t) for t in rng.randint(0, cfg.vocab_size,
-                                                    4 + i % 4)],
-             "max_new": 8}
-            for i in range(8)]
-    t0 = time.time()
-    tid = sub.submit("serve_request", params={"requests": reqs},
-                     timeout_s=600.0)
-    assert mon.wait_all([tid], timeout=900.0)
-    res = mon.task(tid).result
-    dt = time.time() - t0
-    print(f"served {len(res['results'])} requests in {dt:.1f}s "
-          f"({res['tokens_per_s']:.1f} tok/s inside the engine)")
-    for rid, toks in sorted(res["results"].items())[:4]:
-        print(f"  {rid}: {toks}")
+        rng = np.random.RandomState(0)
+        reqs = [{"id": f"user{i}",
+                 "prompt": [int(t) for t in rng.randint(0, cfg.vocab_size,
+                                                        4 + i % 4)],
+                 "max_new": 8}
+                for i in range(8)]
+        t0 = time.time()
+        tid = c.submit("serve_request", params={"requests": reqs},
+                       gpus=1, timeout_s=600.0)
+        assert c.wait_all([tid], timeout=900.0)
+        res = c.result(tid)
+        dt = time.time() - t0
+        print(f"served {len(res['results'])} requests in {dt:.1f}s "
+              f"({res['tokens_per_s']:.1f} tok/s inside the engine)")
+        for rid, toks in sorted(res["results"].items())[:4]:
+            print(f"  {rid}: {toks}")
 
-    # -- part 2: the same workload as a 3-stage pipeline --------------------
-    texts = [{"id": f"pipe{i}", "text": f"fold protein number {i}",
-              "max_new": 6} for i in range(8)]
-    spec = serve_pipeline(batch_size=4, vocab_size=cfg.vocab_size, max_new=6)
-    t0 = time.time()
-    camp = run_campaign(spec, texts, broker=broker, prefix="srv",
-                        timeout_s=900.0)
-    agg = camp.final
-    print(f"\npipeline served {agg['n_requests']} requests "
-          f"({agg['total_tokens']} tokens) in {time.time()-t0:.1f}s via "
-          f"{[s.name for s in spec.topological()]}")
-    for rid, r in list(agg["responses"].items())[:4]:
-        print(f"  {rid}: {r['tokens']}")
-    assert agg["n_requests"] == len(texts)
-
-    agent.stop()
-    mon.stop()
-    broker.close()
+        # -- part 2: the same workload as a 3-stage pipeline ----------------
+        texts = [{"id": f"pipe{i}", "text": f"fold protein number {i}",
+                  "max_new": 6} for i in range(8)]
+        spec = serve_pipeline(batch_size=4, vocab_size=cfg.vocab_size,
+                              max_new=6)
+        t0 = time.time()
+        camp = c.run_campaign(spec, texts, timeout_s=900.0)
+        agg = camp.final
+        print(f"\npipeline served {agg['n_requests']} requests "
+              f"({agg['total_tokens']} tokens) in {time.time()-t0:.1f}s via "
+              f"{[s.name for s in spec.topological()]}")
+        for rid, r in list(agg["responses"].items())[:4]:
+            print(f"  {rid}: {r['tokens']}")
+        assert agg["n_requests"] == len(texts)
     print("OK")
 
 

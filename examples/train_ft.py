@@ -4,7 +4,7 @@ A training run is a chain of idempotent step-chunk tasks (checkpoint →
 n steps → checkpoint) distributed over agents; killing an agent mid-chunk
 loses nothing: the monitor's watchdog resubmits and a surviving agent resumes
 from the last checkpoint with bit-identical data (deterministic offset-
-addressable stream).
+addressable stream). All wiring goes through the KsaCluster facade.
 
 Run:  PYTHONPATH=src python examples/train_ft.py                # smoke scale
       PYTHONPATH=src python examples/train_ft.py --preset 130m  # mamba2-130m
@@ -14,8 +14,8 @@ import tempfile
 import threading
 import time
 
-from repro.core import Broker, MonitorAgent, Submitter, WorkerAgent
-from repro.train import trainer  # registers "train_chunk"
+from repro.cluster import KsaCluster
+from repro.train import trainer  # noqa: F401 - registers "train_chunk"
 from repro.train.trainer import TrainCampaign
 
 
@@ -28,46 +28,39 @@ def main() -> None:
     ap.add_argument("--kill-agent", action="store_true", default=True)
     args = ap.parse_args()
 
-    broker = Broker(default_partitions=2, session_timeout_s=1.0)
-    sub = Submitter(broker, "tr")
-    mon = MonitorAgent(broker, "tr", task_timeout_s=120.0,
-                       poll_interval_s=0.01, max_attempts=4).start()
-    a1 = WorkerAgent(broker, "tr", slots=1, poll_interval_s=0.01,
-                     heartbeat_interval_s=0.2).start()
-    a2 = WorkerAgent(broker, "tr", slots=1, poll_interval_s=0.01,
-                     heartbeat_interval_s=0.2).start()
+    with KsaCluster(prefix="tr", task_timeout_s=120.0, max_attempts=4,
+                    session_timeout_s=1.0, default_partitions=2,
+                    agent_kw=dict(heartbeat_interval_s=0.2)) as c:
+        a1 = c.add_worker(slots=1)
+        c.add_worker(slots=1)
 
-    ckpt_dir = tempfile.mkdtemp(prefix="ksa_train_")
-    campaign = TrainCampaign(
-        broker, sub, mon, arch=args.arch, ckpt_dir=ckpt_dir,
-        total_steps=args.steps, chunk_steps=args.chunk,
-        batch=4, seq=64, timeout_s=600.0)
-    # smoke preset uses the reduced config; 130m uses the full assigned one
-    if args.preset == "130m":
-        # full mamba2-130m: slower on CPU; fewer, bigger chunks
-        campaign.chunk_steps = max(args.chunk // 2, 2)
+        ckpt_dir = tempfile.mkdtemp(prefix="ksa_train_")
+        campaign = TrainCampaign(
+            c.broker, c.submitter, c.monitor, arch=args.arch,
+            ckpt_dir=ckpt_dir, total_steps=args.steps,
+            chunk_steps=args.chunk, batch=4, seq=64, timeout_s=600.0)
+        # smoke preset uses the reduced config; 130m uses the full one
+        if args.preset == "130m":
+            # full mamba2-130m: slower on CPU; fewer, bigger chunks
+            campaign.chunk_steps = max(args.chunk // 2, 2)
 
-    if args.kill_agent:
-        def assassin():
-            time.sleep(3.0)
-            print("!! killing agent 1 mid-campaign")
-            a1.crash()
-        threading.Thread(target=assassin, daemon=True).start()
+        if args.kill_agent:
+            def assassin():
+                time.sleep(3.0)
+                print("!! killing agent 1 mid-campaign")
+                a1.crash()
+            threading.Thread(target=assassin, daemon=True).start()
 
-    t0 = time.time()
-    out = campaign.run(wait_timeout=1800.0)
-    dt = time.time() - t0
-    print(f"\ntrained to step {out['final_step']} in {dt:.1f}s "
-          f"across {out['chunks']} chunks; final loss {out['final_loss']:.4f}")
-    print("losses by chunk:", [round(r["loss"], 4)
-                               for r in campaign.chunk_results])
-    print("monitor summary:", mon.summary())
-    print(f"checkpoints in {ckpt_dir}")
-
-    a1.stop()
-    a2.stop()
-    mon.stop()
-    broker.close()
+        t0 = time.time()
+        out = campaign.run(wait_timeout=1800.0)
+        dt = time.time() - t0
+        print(f"\ntrained to step {out['final_step']} in {dt:.1f}s "
+              f"across {out['chunks']} chunks; "
+              f"final loss {out['final_loss']:.4f}")
+        print("losses by chunk:", [round(r["loss"], 4)
+                                   for r in campaign.chunk_results])
+        print("monitor summary:", c.monitor.summary())
+        print(f"checkpoints in {ckpt_dir}")
     print("OK")
 
 

@@ -335,17 +335,27 @@ class KnotAggregateComputing(ClusterComputing):
         }
 
 
+def _no_survivors(screen_result: Any) -> bool:
+    """Conditional-edge predicate: a screen batch with no knot candidates has
+    nothing to localize."""
+    return not screen_result.get("knotted")
+
+
 def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
                    use_pallas: bool = False,
                    max_in_flight: int | None = None,
                    max_attempts: int = 4,
-                   task_timeout_s: float | None = None):
+                   task_timeout_s: float | None = None,
+                   skip_empty: bool = True):
     """The AlphaKnot campaign as a declarative 3-stage DAG:
     screen (fan-out) → localize (map over survivors) → aggregate (join).
 
     Screen runs on cheap 1-CPU slots; localize requests more CPU (the
     heterogeneous-stage routing of ParaFold: different resource profiles per
-    stage); aggregate is a single barrier task."""
+    stage); aggregate is a single barrier task. With ``skip_empty`` (default)
+    localize tasks are *skipped* for screen batches with zero survivors — the
+    ROADMAP's conditional-edge early exit; the campaign still completes, and
+    the aggregate sees one result per non-empty batch."""
     from repro.pipeline import PipelineSpec, RetryPolicy, Stage
     from repro.core import Resources
 
@@ -357,7 +367,8 @@ def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
               retry=retry),
         Stage("localize", "knot_localize", depends_on=("screen",),
               params=common, resources=Resources(cpus=2),
-              max_in_flight=max_in_flight, retry=retry),
+              max_in_flight=max_in_flight, retry=retry,
+              skip_when=_no_survivors if skip_empty else None),
         Stage("aggregate", "knot_aggregate",
               depends_on=("screen", "localize"), join=True, retry=retry),
     ])

@@ -1,0 +1,340 @@
+"""KsaCluster — the public facade over the KSA control plane.
+
+Every example and benchmark used to hand-wire five components (Broker +
+Submitter + Worker/Cluster agents + MonitorAgent + PipelineAgent) and had to
+keep their prefixes, poll intervals, and placement policies consistent by
+convention. ``KsaCluster`` owns that wiring: one object builds the broker and
+topics, starts the agent pools (CPU workers, GPU workers, simulated Slurm
+clusters), runs the monitor (+ optional REST API) and a lazily-started
+pipeline agent, and tears everything down in reverse order on exit::
+
+    from repro.cluster import KsaCluster
+
+    with KsaCluster(workers=2, gpu_workers=1,
+                    slurm=dict(nodes=2, cpus_per_node=4)) as c:
+        tid = c.submit("matrix", params={"n": 96}, timeout_s=60.0)
+        c.wait_all([tid])
+        print(c.result(tid))
+        res = c.run_campaign(spec, items)       # DAG campaigns too
+        print(c.status())                       # one aggregated snapshot
+
+Placement is wired once: the facade passes the same
+:class:`~repro.core.scheduling.PlacementPolicy` to the submitter, every
+agent, the monitor, and the pipeline agent, so GPU stages route to the GPU
+pool end to end (the ParaFold split). Direct component wiring remains
+available for tests and embedders, but is considered internal API.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Iterable, Mapping
+
+from repro.core.broker import Broker
+from repro.core.agents import AgentBase, ClusterAgent, WorkerAgent
+from repro.core.monitor import MonitorAgent, TaskEntry
+from repro.core.scheduling import (LeasePolicy, PlacementPolicy,
+                                   ResourceClassPolicy, ResourceProfile)
+from repro.core.simslurm import SimSlurm
+from repro.core.submitter import Submitter
+
+_SLURM_KEYS = ("nodes", "cpus_per_node", "gpus_per_node",
+               "scheduler_interval_s")
+
+_CPU_DEFAULT = object()  # add_worker sentinel: "cpu-only profile sized to slots"
+
+
+class KsaCluster:
+    """Context-managed KSA deployment: broker, agent pools, monitor,
+    pipeline orchestration, and one placement policy wired through all of
+    them.
+
+    Declarative pools: ``workers`` CPU-only workers (``worker_slots`` each),
+    ``gpu_workers`` GPU-capable workers (``gpu_slots`` each), and ``slurm`` —
+    a :class:`SimSlurm`, or a dict of SimSlurm kwargs (plus ClusterAgent
+    kwargs such as ``oversubscribe``), or ``None``. More pools can be added
+    after :meth:`start` with :meth:`add_worker` / :meth:`add_slurm`.
+
+    ``broker=None`` creates (and owns, i.e. closes) an embedded broker;
+    passing one shares it and leaves its lifecycle to the caller.
+    """
+
+    def __init__(self, *, prefix: str = "ksa",
+                 broker: Broker | None = None,
+                 placement: PlacementPolicy | None = None,
+                 lease: LeasePolicy | None = None,
+                 workers: int = 0, worker_slots: int = 2,
+                 gpu_workers: int = 0, gpu_slots: int = 1,
+                 slurm: SimSlurm | Mapping[str, Any] | None = None,
+                 monitor: bool = True,
+                 http: bool = False,
+                 task_timeout_s: float | None = None,
+                 max_attempts: int = 3,
+                 pipeline_task_timeout_s: float | None = None,
+                 max_in_flight_total: int | None = None,
+                 poll_interval_s: float = 0.01,
+                 session_timeout_s: float | None = None,
+                 default_partitions: int = 4,
+                 agent_kw: Mapping[str, Any] | None = None,
+                 monitor_kw: Mapping[str, Any] | None = None):
+        self.prefix = prefix
+        self.placement = placement or ResourceClassPolicy()
+        self._lease = lease
+        self._spec = dict(workers=workers, worker_slots=worker_slots,
+                          gpu_workers=gpu_workers, gpu_slots=gpu_slots,
+                          slurm=slurm)
+        self._monitor_enabled = monitor
+        self._http = http
+        self.task_timeout_s = task_timeout_s
+        self.max_attempts = max_attempts
+        self.pipeline_task_timeout_s = pipeline_task_timeout_s
+        self.max_in_flight_total = max_in_flight_total
+        self.poll_interval_s = poll_interval_s
+        self._agent_kw = dict(agent_kw or {})
+        self._monitor_kw = dict(monitor_kw or {})
+
+        self._owns_broker = broker is None
+        if broker is None:
+            broker_kw: dict[str, Any] = {"default_partitions": default_partitions}
+            if session_timeout_s is not None:
+                broker_kw["session_timeout_s"] = session_timeout_s
+            broker = Broker(**broker_kw)
+        self.broker = broker
+
+        self.agents: list[AgentBase] = []
+        self._slurms: list[SimSlurm] = []     # owned simulated clusters
+        self.monitor: MonitorAgent | None = None
+        self.submitter: Submitter | None = None
+        self._pipeline = None                 # lazy PipelineAgent
+        self._http_port: int | None = None
+        self._lock = threading.RLock()
+        self._started = False
+        self._stopped = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "KsaCluster":
+        """Build and start every owned component. Raises on double-start —
+        one facade is one deployment; make a second KsaCluster (sharing the
+        broker) for a second deployment."""
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError(
+                    f"KsaCluster(prefix={self.prefix!r}) was stopped; "
+                    f"create a new instance")
+            if self._started:
+                raise RuntimeError(
+                    f"KsaCluster(prefix={self.prefix!r}) already started")
+            self._started = True
+            try:
+                self.submitter = Submitter(self.broker, self.prefix,
+                                           placement=self.placement)
+                if self._monitor_enabled:
+                    kw = dict(task_timeout_s=self.task_timeout_s,
+                              max_attempts=self.max_attempts,
+                              poll_interval_s=self.poll_interval_s,
+                              placement=self.placement)
+                    kw.update(self._monitor_kw)
+                    self.monitor = MonitorAgent(self.broker, self.prefix,
+                                                **kw).start()
+                    if self._http:
+                        self._http_port = self.monitor.start_http(0)
+                for _ in range(self._spec["workers"]):
+                    self.add_worker(slots=self._spec["worker_slots"])
+                for _ in range(self._spec["gpu_workers"]):
+                    self.add_worker(slots=self._spec["gpu_slots"],
+                                    profile=ResourceProfile(
+                                        cpus=self._spec["gpu_slots"], gpus=1))
+                if self._spec["slurm"] is not None:
+                    self.add_slurm(self._spec["slurm"])
+            except BaseException:
+                # unwind whatever already started (threads, owned broker) —
+                # a failed __enter__ never reaches __exit__
+                self.stop()
+                raise
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Graceful, idempotent teardown in reverse dependency order:
+        pipeline agent first (stop emitting tasks), then the agent pools
+        (drain in-flight work so it is redelivered), monitor, owned Slurm
+        simulators, and finally the broker if this facade created it."""
+        with self._lock:
+            if not self._started or self._stopped:
+                self._stopped = True
+                return
+            self._stopped = True
+            pipeline, agents = self._pipeline, list(self.agents)
+            monitor, slurms = self.monitor, list(self._slurms)
+        if pipeline is not None:
+            pipeline.stop(timeout=timeout)
+        for a in agents:
+            a.stop(timeout=timeout)
+        if monitor is not None:
+            monitor.stop(timeout=timeout)
+        for s in slurms:
+            s.shutdown()
+        if self._owns_broker:
+            self.broker.close()
+
+    def __enter__(self) -> "KsaCluster":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    @property
+    def started(self) -> bool:
+        return self._started and not self._stopped
+
+    def _require_started(self) -> None:
+        if not self.started:
+            raise RuntimeError(
+                f"KsaCluster(prefix={self.prefix!r}) is not running — use "
+                f"`with KsaCluster(...) as c:` or call start()")
+
+    # -- agent pools -----------------------------------------------------------
+
+    def add_worker(self, *, profile: ResourceProfile | None = _CPU_DEFAULT,
+                   slots: int = 2, **kw: Any) -> WorkerAgent:
+        """Start one in-process worker. By default the worker is CPU-only
+        (GPU stages never route to it); pass a GPU-capable
+        :class:`ResourceProfile` for a model-owning pool, or ``profile=None``
+        for a legacy universal worker that leases every class."""
+        self._require_started()
+        if profile is _CPU_DEFAULT:
+            profile = ResourceProfile(cpus=slots)
+        merged = dict(poll_interval_s=self.poll_interval_s, **self._agent_kw)
+        merged.update(kw)
+        agent = WorkerAgent(self.broker, self.prefix, slots=slots,
+                            profile=profile, placement=self.placement,
+                            **merged).start()
+        with self._lock:
+            self.agents.append(agent)
+        return agent
+
+    def add_slurm(self, slurm: SimSlurm | Mapping[str, Any] | None = None,
+                  **kw: Any) -> ClusterAgent:
+        """Attach a (simulated) Slurm cluster behind a ClusterAgent. Accepts
+        a live :class:`SimSlurm` or a kwargs mapping — SimSlurm keys build the
+        simulator (owned, shut down on exit); everything else (e.g.
+        ``oversubscribe``) goes to the agent. The agent's resource profile is
+        derived from the cluster hardware."""
+        self._require_started()
+        if slurm is None:
+            slurm = {}
+        if isinstance(slurm, Mapping):
+            cfg = dict(slurm)
+            cfg.update(kw)
+            sim_kw = {k: cfg.pop(k) for k in _SLURM_KEYS if k in cfg}
+            sim = SimSlurm(**sim_kw)
+            with self._lock:
+                self._slurms.append(sim)
+            kw = cfg
+        else:
+            sim = slurm
+        merged = dict(poll_interval_s=self.poll_interval_s, **self._agent_kw)
+        merged.update(kw)
+        agent = ClusterAgent(self.broker, sim, self.prefix,
+                             placement=self.placement, **merged).start()
+        with self._lock:
+            self.agents.append(agent)
+        return agent
+
+    # -- flat task API ---------------------------------------------------------
+
+    def submit(self, script: str, **kw: Any) -> str:
+        self._require_started()
+        return self.submitter.submit(script, **kw)
+
+    def submit_batches(self, script: str, items: Any, **kw: Any) -> list[str]:
+        self._require_started()
+        return self.submitter.submit_batches(script, items, **kw)
+
+    def wait_all(self, task_ids: list[str], timeout: float = 60.0,
+                 poll: float = 0.02) -> bool:
+        self._require_started()
+        if self.monitor is None:
+            raise RuntimeError("KsaCluster was built with monitor=False")
+        return self.monitor.wait_all(task_ids, timeout=timeout, poll=poll)
+
+    def task(self, task_id: str) -> TaskEntry | None:
+        self._require_started()
+        if self.monitor is None:
+            raise RuntimeError("KsaCluster was built with monitor=False")
+        return self.monitor.task(task_id)
+
+    def result(self, task_id: str) -> dict | None:
+        e = self.task(task_id)
+        return None if e is None else e.result
+
+    # -- campaigns (repro.pipeline) --------------------------------------------
+
+    @property
+    def pipeline(self):
+        """The facade's PipelineAgent, started on first use (campaigns are
+        optional; flat deployments never pay for the extra consumer)."""
+        self._require_started()
+        with self._lock:
+            if self._pipeline is None:
+                from repro.pipeline import PipelineAgent
+                self._pipeline = PipelineAgent(
+                    self.broker, self.prefix,
+                    poll_interval_s=self.poll_interval_s,
+                    default_task_timeout_s=self.pipeline_task_timeout_s,
+                    placement=self.placement, lease=self._lease,
+                    max_in_flight_total=self.max_in_flight_total).start()
+            return self._pipeline
+
+    def submit_campaign(self, spec: Any, items: Iterable | None = None, *,
+                        params: Mapping[str, Any] | None = None,
+                        campaign_id: str | None = None,
+                        weight: float = 1.0) -> str:
+        return self.pipeline.submit_campaign(spec, items, params=params,
+                                             campaign_id=campaign_id,
+                                             weight=weight)
+
+    def run_campaign(self, spec: Any, items: Iterable | None = None, *,
+                     params: Mapping[str, Any] | None = None,
+                     weight: float = 1.0,
+                     progress: Callable[[Any], None] | None = None,
+                     timeout_s: float = 600.0):
+        """Submit a campaign and block until its DAG drains; returns the
+        :class:`~repro.pipeline.driver.CampaignResult`."""
+        from repro.pipeline import run_campaign as _run
+        return _run(spec, items, broker=self.broker, prefix=self.prefix,
+                    params=params, agent=self.pipeline, weight=weight,
+                    progress=progress, timeout_s=timeout_s)
+
+    def campaign_status(self, campaign_id: str):
+        return self.pipeline.status(campaign_id)
+
+    def wait_campaign(self, campaign_id: str, timeout: float = 60.0):
+        return self.pipeline.wait(campaign_id, timeout=timeout)
+
+    # -- observability ---------------------------------------------------------
+
+    @property
+    def http_port(self) -> int | None:
+        """Port of the monitor REST API (``http=True``), else None."""
+        return self._http_port
+
+    def status(self) -> dict:
+        """One aggregated snapshot: agents, monitor summary, campaigns,
+        broker topic/group stats."""
+        self._require_started()
+        with self._lock:
+            agents = [a.stats() for a in self.agents]
+            pipeline = self._pipeline
+        out: dict[str, Any] = {
+            "prefix": self.prefix,
+            "started": self.started,
+            "agents": agents,
+            "broker": self.broker.stats(),
+        }
+        if self.monitor is not None:
+            out["monitor"] = self.monitor.summary()
+        if pipeline is not None:
+            out["campaigns"] = {c: s.to_dict()
+                                for c, s in pipeline.campaigns().items()}
+        return out

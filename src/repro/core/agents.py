@@ -1,8 +1,12 @@
 """ClusterAgent and WorkerAgent — the compute-side components of KSA (§3).
 
-Both subscribe to the ``PREFIX-new`` topic in a shared consumer group (so the
-broker load-balances tasks across every agent on every cluster/workstation) and
-differ only in *where* they run the work:
+Both subscribe to the per-resource-class task topics their
+:class:`~repro.core.scheduling.ResourceProfile` can serve (``PREFIX-new.cpu``,
+``PREFIX-new.gpu``, ...) in one shared consumer group — the broker
+load-balances each class across the agents equipped for it, so a GPU stage
+can never land on a CPU-only pool (resource-aware routing; an agent with no
+declared profile subscribes to every class, the paper's original
+any-agent-any-task behaviour). They differ only in *where* they run the work:
 
 * :class:`WorkerAgent` — "executes the retrieved tasks directly on the
   workstation where it is running, using separate threads for each task."
@@ -35,9 +39,42 @@ from typing import Any
 from .broker import Broker, Consumer, Producer
 from .computing import ClusterComputing, resolve_script
 from .messages import StatusUpdate, TaskMessage, TaskStatus, topic_names
+from .scheduling import PlacementPolicy, ResourceClassPolicy, ResourceProfile
 from .simslurm import SimSlurm
 
 log = logging.getLogger(__name__)
+
+
+class _AnyEvent:
+    """Event-like view that is set when ANY of the underlying events is.
+
+    Replaces the 10 ms ``_pump`` polling thread the ClusterAgent used to spin
+    per Slurm job to merge its own cancel with scancel/walltime:
+    ``is_set()`` composes the sources exactly and allocates no thread.
+    ``set()`` fires the primary (agent-side) event.
+    """
+
+    def __init__(self, *events: threading.Event):
+        self._events = tuple(events)
+
+    def is_set(self) -> bool:
+        return any(e.is_set() for e in self._events)
+
+    def set(self) -> None:
+        self._events[0].set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            if self.is_set():
+                return True
+            chunk = 0.05
+            if deadline is not None:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    return False
+                chunk = min(chunk, remaining)
+            self._events[0].wait(chunk)
 
 
 @dataclass
@@ -59,6 +96,8 @@ class AgentBase:
                  agent_id: str | None = None,
                  slots: int = 4,
                  oversubscribe: int = 0,
+                 profile: ResourceProfile | None = None,
+                 placement: PlacementPolicy | None = None,
                  poll_interval_s: float = 0.05,
                  heartbeat_interval_s: float = 0.5,
                  default_timeout_s: float | None = None):
@@ -70,11 +109,18 @@ class AgentBase:
         # paper's ClusterAgent strategy: keep `oversubscribe` extra tasks
         # queued beyond what can start immediately.
         self.oversubscribe = oversubscribe
+        # placement: profile=None -> subscribe every class (universal agent);
+        # an explicit profile narrows the subscription to the classes the
+        # pool can actually serve (resource-aware routing).
+        self.profile = profile
+        self.placement = placement or ResourceClassPolicy()
         self.poll_interval_s = poll_interval_s
         self.heartbeat_interval_s = heartbeat_interval_s
         self.default_timeout_s = default_timeout_s
         self._producer = Producer(broker)
-        self._consumer = Consumer(broker, [self.topics["new"]],
+        self._subscriptions = tuple(
+            self.placement.subscriptions(prefix, self.profile))
+        self._consumer = Consumer(broker, list(self._subscriptions),
                                   group_id=f"{prefix}-agents",
                                   member_id=f"{prefix}-agents-{self.agent_id}")
         self._running: dict[str, _Running] = {}
@@ -84,6 +130,8 @@ class AgentBase:
         self._crashed = threading.Event()  # test hook: simulate sudden death
         self.tasks_completed = 0
         self.tasks_failed = 0
+        self.tasks_rerouted = 0
+        self.heartbeat_failures = 0
 
     # -- capacity -------------------------------------------------------------
 
@@ -125,6 +173,8 @@ class AgentBase:
             for recs in batches.values():
                 for rec in recs:
                     task = TaskMessage.from_dict(rec.value)
+                    if not self._routable(task):
+                        continue
                     self._accept(task)
             if batches:
                 self._consumer.commit()  # lease-commit (see module docstring)
@@ -133,10 +183,32 @@ class AgentBase:
             try:
                 self.broker.heartbeat(f"{self.prefix}-agents",
                                       self._consumer.member_id)
-            except Exception:
-                pass
+            except Exception as exc:
+                self.heartbeat_failures += 1
+                log.debug("agent %s: broker heartbeat failed: %r",
+                          self.agent_id, exc)
         self._watchdog()
         self._heartbeat_running()
+
+    def _routable(self, task: TaskMessage) -> bool:
+        """Defence against misrouted tasks (e.g. a producer using a different
+        placement policy): a task this profile cannot run is bounced to its
+        correct class topic instead of executing where it must not."""
+        if self.profile is None or self.profile.can_run(task.resources):
+            return True
+        target = self.placement.route(self.prefix, task)
+        if target in self._subscriptions:
+            # rerouting would hand it straight back to us — run it rather
+            # than loop (can only happen with an inconsistent policy).
+            log.warning("agent %s: task %s is unroutable for profile %s — "
+                        "executing anyway", self.agent_id, task.task_id,
+                        self.profile)
+            return True
+        self.tasks_rerouted += 1
+        log.warning("agent %s: rerouting misplaced task %s to %s",
+                    self.agent_id, task.task_id, target)
+        self._producer.send(target, task.to_dict(), key=task.task_id)
+        return False
 
     # -- acceptance (subclass hook) --------------------------------------------
 
@@ -235,6 +307,11 @@ class AgentBase:
                 "failed": self.tasks_failed,
                 "slots": self.slots,
                 "oversubscribe": self.oversubscribe,
+                "profile": (self.profile.to_dict()
+                            if self.profile is not None else None),
+                "subscriptions": list(self._subscriptions),
+                "rerouted": self.tasks_rerouted,
+                "heartbeat_failures": self.heartbeat_failures,
             }
 
 
@@ -291,6 +368,12 @@ class ClusterAgent(AgentBase):
         slots = kw.pop("slots", slurm.total_cpus)
         if oversubscribe is None:
             oversubscribe = max(2, slots // 2)  # paper: always keep extras queued
+        if "profile" not in kw:
+            # derive routability from the simulated cluster's hardware: a
+            # GPU-less Slurm partition must never lease GPU stages.
+            kw["profile"] = ResourceProfile(
+                cpus=slurm.total_cpus,
+                gpus=sum(n.gpus for n in slurm.nodes))
         super().__init__(broker, prefix, slots=slots,
                          oversubscribe=oversubscribe, **kw)
         self.slurm = slurm
@@ -302,18 +385,11 @@ class ClusterAgent(AgentBase):
 
         def _job(cancel_event: threading.Event | None = None) -> None:
             # runs inside a SimSlurm slot; honour both the agent's cancel and
-            # Slurm's scancel/walltime event.
+            # Slurm's scancel/walltime event (merged view, no polling thread).
             if self._crashed.is_set():
                 return
-            merged = cancel
-            if cancel_event is not None:
-                def _pump() -> None:
-                    while not merged.is_set():
-                        if cancel_event.is_set():
-                            merged.set()
-                            return
-                        time.sleep(0.01)
-                threading.Thread(target=_pump, daemon=True).start()
+            merged = (cancel if cancel_event is None
+                      else _AnyEvent(cancel, cancel_event))
             cls = resolve_script(task.script)
             comp = cls(task, self._producer, self.prefix, self.agent_id,
                        cancel_event=merged)

@@ -46,7 +46,13 @@ TERMINAL_STATUSES = frozenset(
 def topic_names(prefix: str) -> Mapping[str, str]:
     """The paper's default topic layout (§5), plus the ``-campaigns`` topic
     carrying :class:`CampaignEvent` progress snapshots from pipeline agents
-    (the repro.pipeline extension of the paper's single-topic task bag)."""
+    (the repro.pipeline extension of the paper's single-topic task bag).
+
+    ``new`` is the *base* task-topic name. Resource-aware placement
+    (:mod:`repro.core.scheduling`) routes tasks to per-resource-class
+    children of it (``PREFIX-new.cpu``, ``PREFIX-new.gpu``, ...); the flat
+    :class:`~repro.core.scheduling.SingleTopicPolicy` uses the base topic
+    directly, which is the paper's original layout."""
     return {
         "new": f"{prefix}-new",
         "jobs": f"{prefix}-jobs",
@@ -59,20 +65,29 @@ def topic_names(prefix: str) -> Mapping[str, str]:
 @dataclasses.dataclass
 class Resources:
     """Resource request serialized with every task (paper §5: GPU, memory,
-    number of CPUs)."""
+    number of CPUs). ``labels`` name extra resource classes (e.g. a
+    ``bigmem`` pool) the placement policy can route on — see
+    :mod:`repro.core.scheduling`."""
 
     cpus: int = 1
     gpus: int = 0
     mem_mb: int = 1024
+    labels: tuple = ()
+
+    def __post_init__(self) -> None:
+        self.labels = tuple(self.labels)
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["labels"] = list(self.labels)
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any] | None) -> "Resources":
         if d is None:
             return cls()
-        return cls(**{k: d[k] for k in ("cpus", "gpus", "mem_mb") if k in d})
+        return cls(**{k: d[k] for k in ("cpus", "gpus", "mem_mb", "labels")
+                      if k in d})
 
 
 @dataclasses.dataclass

@@ -23,9 +23,10 @@ from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any
 
-from .broker import Broker, Consumer
+from .broker import Broker, Consumer, Producer
 from .messages import (CampaignEvent, ErrorMessage, ResultMessage,
                        StatusUpdate, TaskMessage, TaskStatus, topic_names)
+from .scheduling import PlacementPolicy, ResourceClassPolicy
 from .submitter import Submitter
 
 log = logging.getLogger(__name__)
@@ -80,6 +81,7 @@ class MonitorAgent:
                  retry_on_error: bool = True,
                  retry_on_timeout: bool = True,
                  resubmit_campaign_tasks: bool = False,
+                 placement: PlacementPolicy | None = None,
                  poll_interval_s: float = 0.05):
         self.broker = broker
         self.prefix = prefix
@@ -93,14 +95,22 @@ class MonitorAgent:
         # enforces the stage RetryPolicy); a monitor resubmitting them too
         # would double every attempt. Opt in only for monitor-only setups.
         self.resubmit_campaign_tasks = resubmit_campaign_tasks
+        self.placement = placement or ResourceClassPolicy()
         self.poll_interval_s = poll_interval_s
-        self._submitter = Submitter(broker, prefix)
+        self._submitter = Submitter(broker, prefix, placement=self.placement)
         gid = group_id or f"{prefix}-monitor-{monitor_id}"
+        # task definitions (needed for watchdog resubmission) now live on the
+        # per-resource-class topics; subscribe to all of them plus the bare
+        # `-new` topic so flat/SingleTopicPolicy producers are seen too.
+        task_topics = list(self.placement.topics(prefix))
+        if self.topics["new"] not in task_topics:
+            task_topics.append(self.topics["new"])
         self._consumer = Consumer(
             broker,
-            [self.topics["new"], self.topics["jobs"], self.topics["done"],
+            [*task_topics, self.topics["jobs"], self.topics["done"],
              self.topics["error"], self.topics["campaigns"]],
             group_id=gid, member_id=f"{gid}-{monitor_id}")
+        self._producer = Producer(broker)
         self._table: dict[str, TaskEntry] = {}
         # latest CampaignEvent snapshot per campaign (repro.pipeline agents
         # publish these on PREFIX-campaigns; mirrored into /campaigns).
@@ -111,6 +121,7 @@ class MonitorAgent:
         self._http: ThreadingHTTPServer | None = None
         self.results_handled = 0
         self.resubmissions = 0
+        self.legacy_forwards = 0
 
     # -- ingestion --------------------------------------------------------------
 
@@ -123,7 +134,8 @@ class MonitorAgent:
 
     def _ingest(self, topic: str, value: dict) -> None:
         with self._lock:
-            if topic == self.topics["new"]:
+            if topic == self.topics["new"] or \
+                    topic.startswith(self.topics["new"] + "."):
                 task = TaskMessage.from_dict(value)
                 e = self._entry(task.task_id)
                 e.task = task
@@ -133,6 +145,21 @@ class MonitorAgent:
                     e.attempt = task.attempt
                     e.status = TaskStatus.SUBMITTED.value
                     e.last_update = time.time()
+                if topic == self.topics["new"] and not e.done:
+                    # legacy/flat producer wrote to the bare `-new` topic,
+                    # which no agent consumes under a class-routing policy —
+                    # forward onto the class topic so the task actually runs
+                    # (not a resubmission: same attempt, just re-addressed).
+                    try:
+                        target = self.placement.route(self.prefix, task)
+                    except ValueError:
+                        log.warning("task %s on %s is unroutable; leaving "
+                                    "for the watchdog", task.task_id, topic)
+                    else:
+                        if target != topic:
+                            self._producer.send(target, task.to_dict(),
+                                                key=task.task_id)
+                            self.legacy_forwards += 1
             elif topic == self.topics["jobs"]:
                 upd = StatusUpdate.from_dict(value)
                 e = self._entry(upd.task_id)
@@ -299,6 +326,7 @@ class MonitorAgent:
                 "by_status": by_status,
                 "results_handled": self.results_handled,
                 "resubmissions": self.resubmissions,
+                "legacy_forwards": self.legacy_forwards,
                 "duplicates_fenced": sum(e.duplicate_results
                                          for e in self._table.values()),
                 "campaigns": len(self._campaigns),

@@ -1,32 +1,46 @@
-"""Submitter — sends task descriptions to the ``PREFIX-new`` topic (paper §3).
+"""Submitter — sends task descriptions to the task topics (paper §3).
 
 "The submission of any task involves setting the necessary parameters and then
 using the built-in Submitter class to send the appropriate messages" (§5).
 Batching helpers mirror the AlphaKnot campaign pattern (§4): "the entire set
 of AlphaFold structures was divided into batches of 4,000, with each batch
 submitted as a single task".
+
+Unlike the paper's single shared ``PREFIX-new`` topic, each task is routed to
+the per-resource-class topic its :class:`~repro.core.messages.Resources`
+require (``PREFIX-new.cpu`` / ``PREFIX-new.gpu`` / label classes) through a
+pluggable :class:`~repro.core.scheduling.PlacementPolicy`, so a GPU stage can
+only ever be leased by a GPU-capable pool. Pass
+:class:`~repro.core.scheduling.SingleTopicPolicy` to recover the paper's flat
+layout.
 """
 from __future__ import annotations
 
-from typing import Any, Iterable, Sequence
+from typing import Any, Sequence
 
 from .broker import Broker, Producer
 from .messages import (Resources, StatusUpdate, TaskMessage, TaskStatus,
                        new_task_id, topic_names)
+from .scheduling import PlacementPolicy, ResourceClassPolicy
 
 
 class Submitter:
-    def __init__(self, broker: Broker, prefix: str = "ksa"):
+    def __init__(self, broker: Broker, prefix: str = "ksa", *,
+                 placement: PlacementPolicy | None = None):
         self.broker = broker
         self.prefix = prefix
         self.topics = topic_names(prefix)
+        self.placement = placement or ResourceClassPolicy()
         self._producer = Producer(broker)
         for t in self.topics.values():
+            broker.create_topic(t)
+        for t in self.placement.topics(prefix):
             broker.create_topic(t)
 
     def submit(self, script: str, task_id: str | None = None, *,
                params: dict | None = None, cpus: int = 1, gpus: int = 0,
-               mem_mb: int = 1024, timeout_s: float | None = None,
+               mem_mb: int = 1024, labels: Sequence[str] = (),
+               timeout_s: float | None = None,
                attempt: int = 0, resources: Resources | None = None,
                campaign_id: str | None = None, stage: str | None = None,
                dep_ids: list | None = None) -> str:
@@ -38,7 +52,8 @@ class Submitter:
             script=script,
             params=dict(params or {}),
             resources=resources or Resources(cpus=cpus, gpus=gpus,
-                                             mem_mb=mem_mb),
+                                             mem_mb=mem_mb,
+                                             labels=tuple(labels)),
             timeout_s=timeout_s,
             attempt=attempt,
             campaign_id=campaign_id,
@@ -49,21 +64,27 @@ class Submitter:
 
     def submit_task(self, task: TaskMessage) -> str:
         """Submit a fully-built :class:`TaskMessage` (used by the pipeline
-        agent, which constructs stage tasks itself)."""
-        self._producer.send(self.topics["new"], task.to_dict(), key=task.task_id)
+        agent, which constructs stage tasks itself). The placement policy
+        picks the class topic; the SUBMITTED status update carries the routed
+        topic for observability."""
+        topic = self.placement.route(self.prefix, task)
+        self._producer.send(topic, task.to_dict(), key=task.task_id)
         self._producer.send(
             self.topics["jobs"],
             StatusUpdate(task_id=task.task_id,
                          status=TaskStatus.SUBMITTED.value,
-                         attempt=task.attempt).to_dict(),
+                         attempt=task.attempt,
+                         info={"topic": topic}).to_dict(),
             key=task.task_id)
         return task.task_id
 
     def resubmit(self, task: TaskMessage) -> str:
         """Redeliver a task with a bumped attempt (straggler mitigation /
-        at-least-once path used by the MonitorAgent watchdog)."""
+        at-least-once path used by the MonitorAgent watchdog). Routed through
+        the same placement policy as the original submission."""
         nxt = task.retry()
-        self._producer.send(self.topics["new"], nxt.to_dict(), key=nxt.task_id)
+        self._producer.send(self.placement.route(self.prefix, nxt),
+                            nxt.to_dict(), key=nxt.task_id)
         self._producer.send(
             self.topics["jobs"],
             StatusUpdate(task_id=nxt.task_id,

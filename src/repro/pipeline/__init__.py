@@ -23,7 +23,15 @@ Class → paper mapping:
   (§3): subscribes to ``PREFIX-done``/``PREFIX-error``, advances the DAG when
   dependencies complete, fences duplicate results by first-wins per task so a
   barrier never double-fires, enforces per-stage ``max_in_flight``
-  backpressure, and publishes progress on ``PREFIX-campaigns``.
+  backpressure, arbitrates concurrent campaigns through a
+  :class:`~repro.core.scheduling.LeasePolicy` (FairShare weighted
+  round-robin by default; per-campaign ``weight=`` at submit), honours
+  ``Stage.skip_when`` conditional edges (skips cascade and count toward
+  completion), and publishes progress on ``PREFIX-campaigns``.
+
+Campaigns are normally driven through :class:`repro.cluster.KsaCluster`
+(``c.run_campaign(spec, items)``), which wires the pipeline agent to the same
+broker, prefix, and placement policy as the execution pools.
 * :class:`~repro.pipeline.status.CampaignStatus` /
   :class:`~repro.pipeline.status.StageStatus` — the campaign-level analogue of
   §3's task status table, surfaced via the MonitorAgent REST API

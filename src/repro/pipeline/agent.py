@@ -13,6 +13,15 @@ campaign state machine:
   work),
 * **backpressure**: per-stage ``max_in_flight`` bounds how many tasks of a
   stage are on the ``-new`` topic at once; the rest wait in a ready queue,
+* **fair sharing**: when several campaigns have ready tasks, a pluggable
+  :class:`~repro.core.scheduling.LeasePolicy` decides whose task is submitted
+  next — :class:`~repro.core.scheduling.FairShare` (default) drains them in
+  weighted round-robin keyed by ``campaign_id`` (weights set per campaign at
+  submit time), replacing the first-come FIFO contention,
+* **conditional edges**: a stage's ``skip_when`` predicate short-circuits
+  tasks whose upstream result makes them pointless (e.g. no screen survivors
+  → skip localize); skips cascade downstream and count toward completion, so
+  the campaign finishes COMPLETED, not FAILED,
 * **watchdog**: a task with no result after ``RetryPolicy.timeout_s`` is
   resubmitted with a bumped attempt (the monitor's straggler mitigation,
   scoped per stage); ``max_attempts`` exhaustion fails the campaign,
@@ -31,6 +40,7 @@ from typing import Any, Iterable, Mapping
 from repro.core.broker import Broker, Consumer, Producer
 from repro.core.messages import (CampaignEvent, ErrorMessage, ResultMessage,
                                  TaskMessage, new_task_id, topic_names)
+from repro.core.scheduling import FairShare, LeasePolicy, PlacementPolicy
 from repro.core.submitter import Submitter
 
 from .spec import PipelineSpec, Stage
@@ -54,16 +64,18 @@ class _PTask:
     last_submit: float = 0.0
     done: bool = False
     failed: bool = False
+    skipped: bool = False             # conditional edge: never submitted
     result: dict | None = None
 
 
 class _CampaignRun:
     def __init__(self, campaign_id: str, spec: PipelineSpec,
-                 items: list, params: dict):
+                 items: list, params: dict, weight: float = 1.0):
         self.campaign_id = campaign_id
         self.spec = spec
         self.items = items
         self.params = params
+        self.weight = weight
         self.status = CampaignStatus(campaign_id=campaign_id,
                                      pipeline=spec.name)
         expected = spec.expected_counts(len(items))
@@ -95,7 +107,10 @@ class PipelineAgent:
                  poll_interval_s: float = 0.02,
                  default_task_timeout_s: float | None = None,
                  publish_interval_s: float = 0.25,
-                 retain_finished: int | None = 32):
+                 retain_finished: int | None = 32,
+                 placement: PlacementPolicy | None = None,
+                 lease: LeasePolicy | None = None,
+                 max_in_flight_total: int | None = None):
         self.broker = broker
         self.prefix = prefix
         self.topics = topic_names(prefix)
@@ -106,7 +121,13 @@ class PipelineAgent:
         # long-lived agents serve a stream of campaigns; keep only the most
         # recent `retain_finished` finished runs (None = keep all).
         self.retain_finished = retain_finished
-        self._submitter = Submitter(broker, prefix)
+        # how concurrent campaigns share `-new` capacity: FairShare weighted
+        # round-robin by default; max_in_flight_total optionally bounds the
+        # agent-wide number of outstanding tasks (None = per-stage bounds
+        # only, matching the pre-lease behaviour).
+        self._lease = lease or FairShare()
+        self.max_in_flight_total = max_in_flight_total
+        self._submitter = Submitter(broker, prefix, placement=placement)
         self._producer = Producer(broker)
         gid = f"{prefix}-pipeline-{self.agent_id}"
         self._consumer = Consumer(
@@ -122,15 +143,32 @@ class PipelineAgent:
 
     def submit_campaign(self, spec: PipelineSpec, items: Iterable | None = None,
                         *, params: Mapping[str, Any] | None = None,
-                        campaign_id: str | None = None) -> str:
+                        campaign_id: str | None = None,
+                        weight: float = 1.0) -> str:
         """Plan a campaign and submit its source-stage tasks. Returns the
-        campaign id; progress via :meth:`status`, blocking via :meth:`wait`."""
+        campaign id; progress via :meth:`status`, blocking via :meth:`wait`.
+        ``weight`` sets this campaign's share of `-new` capacity under the
+        agent's lease policy (FairShare: a weight-3 campaign drains three
+        ready tasks for every one of a weight-1 peer)."""
+        if weight <= 0:
+            raise PipelineError(f"campaign weight must be positive ({weight})")
+        # fail fast on unroutable stage resources (e.g. a label naming no
+        # class) — raising here beats stalling mid-campaign in the loop
+        for st in spec.topological():
+            probe = TaskMessage(task_id=f"probe-{st.name}", script=st.script,
+                                resources=st.resources)
+            try:
+                self._submitter.placement.route(self.prefix, probe)
+            except ValueError as exc:
+                raise PipelineError(
+                    f"stage {st.name!r} is unroutable: {exc}") from exc
         items = list(items) if items is not None else []
         cid = campaign_id or new_task_id(f"camp-{spec.name}")
         with self._lock:
             if cid in self._campaigns:
                 raise PipelineError(f"campaign {cid!r} already exists")
-            run = _CampaignRun(cid, spec, items, dict(params or {}))
+            run = _CampaignRun(cid, spec, items, dict(params or {}),
+                               weight=weight)
             self._campaigns[cid] = run
             for st in spec.sources():
                 if st.fan_out is None:
@@ -142,7 +180,7 @@ class PipelineAgent:
                 for bi, batch in enumerate(batches):
                     self._plan_task(run, st, {"batch": list(batch),
                                               "batch_index": bi}, [])
-            self._pump(run)
+            self._pump_all()
             self._publish(run, force=True)
         return cid
 
@@ -165,21 +203,73 @@ class PipelineAgent:
         run.ready[st.name].append(task.task_id)
         self._task_index[task.task_id] = run.campaign_id
 
-    # -- backpressure pump ----------------------------------------------------
+    def _plan_skip(self, run: _CampaignRun, st: Stage) -> None:
+        """Conditional edge: record a task as skipped (never submitted) and
+        cascade — its own downstream map tasks are skipped too, and join
+        barriers treat it as complete-with-no-result."""
+        idx = len(run.by_stage[st.name])
+        task = TaskMessage(
+            task_id=f"{run.campaign_id}-{st.name}-{idx:05d}",
+            script=st.script, campaign_id=run.campaign_id, stage=st.name)
+        pt = _PTask(stage=st.name, task=task, index=idx, skipped=True)
+        run.tasks[task.task_id] = pt
+        run.by_stage[st.name].append(task.task_id)
+        self._task_index[task.task_id] = run.campaign_id
+        run.status.stages[st.name].skipped += 1
+        self._advance(run, pt)
 
-    def _pump(self, run: _CampaignRun) -> None:
-        """Submit ready tasks up to each stage's ``max_in_flight`` bound."""
+    # -- backpressure / fair-share pump ---------------------------------------
+
+    def _next_stage(self, run: _CampaignRun) -> Stage | None:
+        """The first stage (topological order) with a ready task that fits
+        under its ``max_in_flight`` bound, or None."""
         for st in run.spec.topological():
-            q = run.ready[st.name]
-            ss = run.status.stages[st.name]
+            if not run.ready[st.name]:
+                continue
             bound = st.max_in_flight
-            while q and (bound is None or ss.in_flight < bound):
-                tid = q.popleft()
-                pt = run.tasks[tid]
-                pt.attempts += 1
-                pt.last_submit = time.time()
-                ss.submitted += 1
-                self._submitter.submit_task(pt.task)
+            if bound is None or run.status.stages[st.name].in_flight < bound:
+                return st
+        return None
+
+    def _pump_all(self) -> None:
+        """Drain ready queues into ``-new`` capacity, one task at a time;
+        the lease policy picks which campaign goes next (FairShare weighted
+        round-robin by default). ``max_in_flight_total`` bounds the agent's
+        outstanding tasks across all campaigns. Call with the lock held.
+
+        The candidate set and the outstanding count are computed once and
+        maintained incrementally: the lock is held throughout, so no other
+        thread can make a campaign submittable mid-drain — candidates only
+        ever shrink. This keeps a paper-scale fan-out (tens of thousands of
+        source tasks) O(tasks), not O(tasks × campaigns × stages)."""
+        outstanding = 0
+        if self.max_in_flight_total is not None:
+            outstanding = sum(
+                ss.in_flight
+                for r in self._campaigns.values() if not r.status.done
+                for ss in r.status.stages.values())
+        candidates = {cid: r.weight for cid, r in self._campaigns.items()
+                      if not r.status.done
+                      and self._next_stage(r) is not None}
+        while candidates:
+            if self.max_in_flight_total is not None \
+                    and outstanding >= self.max_in_flight_total:
+                return
+            cid = self._lease.select(candidates)
+            run = self._campaigns[cid]
+            st = self._next_stage(run)
+            if st is None:  # safety net; normally pruned after submit
+                del candidates[cid]
+                continue
+            tid = run.ready[st.name].popleft()
+            pt = run.tasks[tid]
+            pt.attempts += 1
+            pt.last_submit = time.time()
+            run.status.stages[st.name].submitted += 1
+            self._submitter.submit_task(pt.task)
+            outstanding += 1
+            if self._next_stage(run) is None:
+                del candidates[cid]
 
     # -- ingestion -------------------------------------------------------------
 
@@ -199,7 +289,7 @@ class PipelineAgent:
             run = self._campaigns[cid]
             pt = run.tasks[res.task_id]
             ss = run.status.stages[pt.stage]
-            if pt.done or pt.failed or run.status.done:
+            if pt.done or pt.failed or pt.skipped or run.status.done:
                 # fencing: duplicate results, late results for retry-exhausted
                 # tasks, and stragglers of an already-failed campaign never
                 # advance the DAG (a FAILED verdict must stay final).
@@ -209,27 +299,35 @@ class PipelineAgent:
             pt.result = res.result
             ss.done += 1
             self._advance(run, pt)
-            self._pump(run)
+            self._pump_all()
             self._check_complete(run)
             self._publish(run)
 
     def _advance(self, run: _CampaignRun, pt: _PTask) -> None:
         for ds in run.spec.downstream(pt.stage):
             if not ds.join:
-                self._plan_task(run, ds,
-                                {"upstream": pt.result,
-                                 "dep_index": pt.index},
-                                [pt.task.task_id])
+                if pt.skipped or (ds.skip_when is not None
+                                  and ds.skip_when(pt.result)):
+                    self._plan_skip(run, ds)
+                else:
+                    self._plan_task(run, ds,
+                                    {"upstream": pt.result,
+                                     "dep_index": pt.index},
+                                    [pt.task.task_id])
             elif ds.name not in run.joins_fired and \
                     all(run.stage_complete(d) for d in ds.depends_on):
                 run.joins_fired.add(ds.name)
                 upstream: dict[str, list] = {}
                 dep_ids: list[str] = []
                 for dep in ds.depends_on:
-                    tids = run.by_stage[dep]
-                    upstream[dep] = [run.tasks[t].result for t in tids]
-                    dep_ids.extend(tids)
-                self._plan_task(run, ds, {"upstream": upstream}, dep_ids)
+                    live = [t for t in run.by_stage[dep]
+                            if not run.tasks[t].skipped]
+                    upstream[dep] = [run.tasks[t].result for t in live]
+                    dep_ids.extend(live)
+                if ds.skip_when is not None and ds.skip_when(upstream):
+                    self._plan_skip(run, ds)
+                else:
+                    self._plan_task(run, ds, {"upstream": upstream}, dep_ids)
 
     def _on_error(self, err: ErrorMessage) -> None:
         with self._lock:
@@ -238,7 +336,7 @@ class PipelineAgent:
                 return
             run = self._campaigns[cid]
             pt = run.tasks[err.task_id]
-            if pt.done or pt.failed:
+            if pt.done or pt.failed or pt.skipped:
                 return
             if err.attempt < pt.task.attempt:
                 return  # fenced: an older attempt failing after a resubmit
@@ -287,7 +385,8 @@ class PipelineAgent:
                         continue
                     for tid in run.by_stage[st.name]:
                         pt = run.tasks[tid]
-                        if pt.done or pt.failed or pt.attempts == 0:
+                        if pt.done or pt.failed or pt.skipped \
+                                or pt.attempts == 0:
                             continue
                         if now - pt.last_submit > timeout:
                             self._retry_or_fail(
@@ -327,6 +426,7 @@ class PipelineAgent:
             for tid in run.tasks:
                 self._task_index.pop(tid, None)
             del self._campaigns[campaign_id]
+            self._lease.forget(campaign_id)
 
     # -- progress publishing (PREFIX-campaigns) -----------------------------------
 
@@ -388,6 +488,9 @@ class PipelineAgent:
                 "campaigns": len(self._campaigns),
                 "running": sum(1 for r in self._campaigns.values()
                                if not r.status.done),
+                "lease": type(self._lease).__name__,
+                "weights": {c: r.weight for c, r in self._campaigns.items()
+                            if not r.status.done},
             }
 
     # -- main loop ------------------------------------------------------------------
@@ -410,9 +513,7 @@ class PipelineAgent:
                     self._consumer.commit()
                 self._watchdog()
                 with self._lock:
-                    for run in self._campaigns.values():
-                        if not run.status.done:
-                            self._pump(run)
+                    self._pump_all()
             except Exception:  # pragma: no cover - defensive
                 log.exception("pipeline agent %s loop error", self.agent_id)
                 time.sleep(self.poll_interval_s)

@@ -34,6 +34,8 @@ def run_campaign(spec: PipelineSpec, items: Iterable | None = None, *,
                  params: Mapping[str, Any] | None = None,
                  agent: PipelineAgent | None = None,
                  default_task_timeout_s: float | None = None,
+                 placement: Any = None,
+                 weight: float = 1.0,
                  progress: Callable[[CampaignStatus], None] | None = None,
                  progress_interval_s: float = 0.25,
                  timeout_s: float = 600.0) -> CampaignResult:
@@ -41,16 +43,18 @@ def run_campaign(spec: PipelineSpec, items: Iterable | None = None, *,
 
     Raises :class:`PipelineError` if the campaign fails (a stage exhausted its
     retry budget) and :class:`TimeoutError` if it does not finish in
-    ``timeout_s``.
+    ``timeout_s``. ``placement`` routes stage tasks to resource-class topics
+    (defaults to the standard cpu/gpu split); ``weight`` is the campaign's
+    fair-share weight when the agent serves several campaigns at once.
     """
     own_agent = agent is None
     if own_agent:
         agent = PipelineAgent(
-            broker, prefix,
+            broker, prefix, placement=placement,
             default_task_timeout_s=default_task_timeout_s).start()
     try:
         t0 = time.time()
-        cid = agent.submit_campaign(spec, items, params=params)
+        cid = agent.submit_campaign(spec, items, params=params, weight=weight)
         deadline = t0 + timeout_s
         while True:
             st = agent.wait(cid, timeout=progress_interval_s)

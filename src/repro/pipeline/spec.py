@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Iterable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping, Sequence
 
 from repro.core.messages import Resources
 
@@ -57,6 +57,14 @@ class Stage:
     max_in_flight: int | None = None  # backpressure bound (None = unbounded)
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     timeout_s: float | None = None    # per-task execution cancel (agent-side)
+    # conditional edge / early-exit (ROADMAP): when the predicate holds on
+    # the upstream result, the task is *skipped* instead of submitted — the
+    # stage (and the campaign) completes with the skip counted, never FAILED.
+    # Map stages: called with the one upstream task's result dict. Join
+    # stages: called with the assembled {stage: [results...]} mapping
+    # (skipped upstream tasks contribute no entry). Skips cascade: a map
+    # task downstream of a skipped task is itself skipped.
+    skip_when: Callable[[Any], bool] | None = None
 
     def __post_init__(self) -> None:
         if isinstance(self.depends_on, str):  # common foot-gun
@@ -77,6 +85,10 @@ class Stage:
                 raise SpecError(f"fan_out must be positive ({self.name!r})")
         if self.max_in_flight is not None and self.max_in_flight <= 0:
             raise SpecError(f"max_in_flight must be positive ({self.name!r})")
+        if self.skip_when is not None and self.is_source:
+            raise SpecError(
+                f"skip_when needs an upstream result ({self.name!r} is a "
+                f"source stage)")
 
     @property
     def is_source(self) -> bool:
@@ -164,6 +176,7 @@ class PipelineSpec:
                     "max_in_flight": st.max_in_flight,
                     "resources": st.resources.to_dict(),
                     "retry": dataclasses.asdict(st.retry),
+                    "conditional": st.skip_when is not None,
                 }
                 for st in self.topological()
             ],

@@ -26,8 +26,11 @@ class StageStatus:
 
     ``expected`` is fixed at submit time (source = #batches, map = 1:1 with
     upstream, join = 1); ``submitted``/``done``/``failed`` advance as the DAG
-    executes; ``retried`` counts watchdog/error resubmissions and
-    ``duplicates`` counts fenced duplicate results (late attempts)."""
+    executes; ``retried`` counts watchdog/error resubmissions;
+    ``duplicates`` counts fenced duplicate results (late attempts); and
+    ``skipped`` counts tasks short-circuited by the stage's ``skip_when``
+    conditional-edge predicate (they count toward completion — a fully
+    skipped stage finishes the campaign instead of stalling it)."""
 
     name: str
     script: str
@@ -38,6 +41,7 @@ class StageStatus:
     retried: int = 0
     duplicates: int = 0
     errors: int = 0
+    skipped: int = 0
 
     @property
     def in_flight(self) -> int:
@@ -45,7 +49,7 @@ class StageStatus:
 
     @property
     def complete(self) -> bool:
-        return self.expected > 0 and self.done >= self.expected
+        return self.expected > 0 and self.done + self.skipped >= self.expected
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -72,7 +76,7 @@ class CampaignStatus:
         total = sum(s.expected for s in self.stages.values())
         if total == 0:
             return 0.0
-        return sum(s.done for s in self.stages.values()) / total
+        return sum(s.done + s.skipped for s in self.stages.values()) / total
 
     def elapsed_s(self) -> float:
         end = self.finished_at if self.finished_at is not None else time.time()
@@ -103,5 +107,6 @@ class CampaignStatus:
                 failed=int(sd.get("failed", 0)),
                 retried=int(sd.get("retried", 0)),
                 duplicates=int(sd.get("duplicates", 0)),
-                errors=int(sd.get("errors", 0)))
+                errors=int(sd.get("errors", 0)),
+                skipped=int(sd.get("skipped", 0)))
         return st

@@ -232,7 +232,13 @@ def serve_pipeline(batch_size: int = 4, *, vocab_size: int = 256,
     """Serving as a 3-stage DAG over raw-text items:
     tokenize (fan-out) → generate (map, model-owning pool) → post-process
     (join). ``max_in_flight`` defaults to 1 on generate so a single engine
-    is never oversubscribed (backpressure at the stage level)."""
+    is never oversubscribed (backpressure at the stage level).
+
+    The generate stage declares ``Resources(gpus=1)``, so under the default
+    placement policy its tasks land on the ``-new.gpu`` class topic and only
+    GPU-profiled (engine-owning) workers lease them, while tokenize and
+    post-process drain on the CPU pool — the ParaFold split, wired through
+    ``KsaCluster(gpu_workers=1, ...)`` or an explicit GPU ResourceProfile."""
     from repro.core import Resources
     from repro.pipeline import PipelineSpec, RetryPolicy, Stage
 

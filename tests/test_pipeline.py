@@ -417,3 +417,109 @@ def test_serve_pipeline_spec_shape():
     assert spec.stages["postprocess"].join
     assert spec.expected_counts(10) == \
         {"tokenize": 3, "generate": 3, "postprocess": 1}
+
+
+# ---------------------------------------------------------------------------
+# conditional edges / early exit (skip_when)
+# ---------------------------------------------------------------------------
+
+def test_skip_when_short_circuits_map_tasks_and_completes():
+    """Map tasks whose upstream result matches skip_when are never submitted;
+    the join still fires (with only live results) and the campaign finishes
+    COMPLETED, not FAILED."""
+    spec = PipelineSpec("cond", [
+        Stage("src", "pl_double", fan_out=1),
+        Stage("fwd", "pl_pass", depends_on=("src",),
+              skip_when=lambda r: r["values"][0] % 4 == 0),  # skip 0, 2
+        Stage("agg", "pl_sum", depends_on=("src", "fwd"), join=True),
+    ])
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "sk1", slots=2, poll_interval_s=0.005).start()
+    try:
+        res = run_campaign(spec, [0, 1, 2, 3], broker=broker, prefix="sk1",
+                           timeout_s=60.0)
+        st = res.status
+        assert st.state == "COMPLETED"
+        assert st.stages["fwd"].skipped == 2
+        assert st.stages["fwd"].done == 2
+        assert st.stages["fwd"].submitted == 2  # skipped ones never submitted
+        # the join only saw the two live fwd results (items 1 and 3 doubled)
+        assert res.final["n_fwd"] == 2
+        assert res.final["total"] == 2 + 6
+        assert res.final["n_src"] == 4
+    finally:
+        w.stop()
+        broker.close()
+
+
+def test_skip_all_upstream_still_fires_join_and_finishes():
+    """Every map task skipped (the 'no screen survivors' scenario): the
+    barrier fires with an empty result list and the campaign completes."""
+    spec = PipelineSpec("cond2", [
+        Stage("src", "pl_double", fan_out=2),
+        Stage("fwd", "pl_pass", depends_on=("src",),
+              skip_when=lambda r: True),
+        Stage("agg", "pl_sum", depends_on=("src", "fwd"), join=True),
+    ])
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "sk2", slots=2, poll_interval_s=0.005).start()
+    try:
+        res = run_campaign(spec, [1, 2, 3, 4], broker=broker, prefix="sk2",
+                           timeout_s=60.0)
+        st = res.status
+        assert st.state == "COMPLETED"
+        assert st.stages["fwd"].skipped == 2
+        assert st.stages["fwd"].done == 0
+        assert st.stages["fwd"].submitted == 0
+        assert res.final["n_fwd"] == 0 and res.final["total"] == 0
+    finally:
+        w.stop()
+        broker.close()
+
+
+def test_skip_when_on_join_skips_terminal_stage():
+    """A join's skip_when sees the assembled upstream dict; a skipped
+    terminal barrier still completes the campaign (early exit)."""
+    spec = PipelineSpec("cond3", [
+        Stage("src", "pl_double", fan_out=2),
+        Stage("agg", "pl_sum_batches", depends_on=("src",), join=True,
+              skip_when=lambda up: len(up["src"]) < 99),  # always skip
+    ])
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "sk3", slots=2, poll_interval_s=0.005).start()
+    pipe = PipelineAgent(broker, "sk3", poll_interval_s=0.005).start()
+    try:
+        cid = pipe.submit_campaign(spec, [1, 2, 3])
+        st = pipe.wait(cid, timeout=30.0)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["agg"].skipped == 1
+        assert st.stages["agg"].submitted == 0
+        assert pipe.final_result(cid) is None  # skipped terminal: no result
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_knots_pipeline_skips_localize_without_survivors():
+    """The ROADMAP's early-exit example end to end: a campaign of unknotted
+    coils produces zero screen survivors, so every localize task is skipped
+    and the campaign is finished, not failed."""
+    from repro.apps import knots
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "sk4", slots=2, poll_interval_s=0.01).start()
+    try:
+        # ids ≡ 1 (mod 4) synthesize unknotted random coils
+        ids = [1, 5, 9, 13]
+        spec = knots.knots_pipeline(2, n_points=48)
+        res = run_campaign(spec, ids, broker=broker, prefix="sk4",
+                           timeout_s=240.0)
+        st = res.status
+        assert st.state == "COMPLETED"
+        assert st.stages["localize"].skipped == 2
+        assert st.stages["localize"].submitted == 0
+        assert res.final["knotted"] == [] and res.final["cores"] == {}
+        assert res.final["processed"] == len(ids)
+    finally:
+        w.stop()
+        broker.close()

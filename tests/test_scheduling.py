@@ -1,0 +1,305 @@
+"""Resource-aware placement, fair-share leasing, and the KsaCluster facade:
+GPU tasks can never execute on CPU-only pools (they queue on the GPU class
+topic instead), weighted campaigns drain in weight proportion, and the facade
+owns component lifecycle (double-start, clean shutdown, aggregated status)."""
+import time
+
+import pytest
+
+from repro.cluster import KsaCluster
+from repro.core import (Broker, FairShare, Producer, ResourceClassPolicy,
+                        ResourceProfile, Resources, SingleTopicPolicy,
+                        TaskMessage, WorkerAgent, class_topic)
+from repro.pipeline import PipelineSpec, RetryPolicy, Stage
+
+
+def _task(gpus=0, labels=()):
+    return TaskMessage(task_id="t0", script="sleep",
+                       resources=Resources(gpus=gpus, labels=labels))
+
+
+# ---------------------------------------------------------------------------
+# placement policy unit tests
+# ---------------------------------------------------------------------------
+
+def test_resource_class_policy_routes_by_class():
+    pol = ResourceClassPolicy(extra_classes=("bigmem",))
+    assert pol.route("p", _task()) == "p-new.cpu"
+    assert pol.route("p", _task(gpus=1)) == "p-new.gpu"
+    assert pol.route("p", _task(labels=("bigmem",))) == "p-new.bigmem"
+    assert set(pol.topics("p")) == {"p-new.cpu", "p-new.gpu", "p-new.bigmem"}
+
+
+def test_subscriptions_follow_profile():
+    pol = ResourceClassPolicy()
+    # universal (legacy) agent: every class
+    assert set(pol.subscriptions("p", None)) == {"p-new.cpu", "p-new.gpu"}
+    # cpu-only pool never sees the gpu class
+    assert pol.subscriptions("p", ResourceProfile(cpus=4)) == ("p-new.cpu",)
+    # gpu pool drains cpu work too by default (work conservation) ...
+    assert set(pol.subscriptions("p", ResourceProfile(gpus=1))) == \
+        {"p-new.gpu", "p-new.cpu"}
+    # ... unless dedicated
+    dedicated = ResourceClassPolicy(gpu_takes_cpu=False)
+    assert dedicated.subscriptions("p", ResourceProfile(gpus=1)) == \
+        ("p-new.gpu",)
+
+
+def test_single_topic_policy_is_the_paper_layout():
+    pol = SingleTopicPolicy()
+    assert pol.route("p", _task(gpus=1)) == "p-new"
+    assert pol.subscriptions("p", ResourceProfile(cpus=1)) == ("p-new",)
+
+
+def test_profile_can_run_checks_routability_only():
+    prof = ResourceProfile(cpus=2, gpus=0, labels=("fast",))
+    assert prof.can_run(Resources(cpus=8))          # cpus: capacity, not routing
+    assert not prof.can_run(Resources(gpus=1))
+    assert prof.can_run(Resources(labels=("fast",)))
+    assert not prof.can_run(Resources(labels=("bigmem",)))
+
+
+def test_fair_share_smooth_wrr_sequence():
+    """Weights 3:1 drain 3 of A for every B, deterministically."""
+    lease = FairShare()
+    picks = [lease.select({"A": 3.0, "B": 1.0}) for _ in range(12)]
+    assert picks.count("A") == 9 and picks.count("B") == 3
+    # no starvation: B appears in every window of 4
+    for i in range(0, 12, 4):
+        assert "B" in picks[i:i + 4]
+
+
+# ---------------------------------------------------------------------------
+# routing end to end
+# ---------------------------------------------------------------------------
+
+def test_gpu_tasks_never_run_on_cpu_agents_even_when_saturated():
+    """The acceptance criterion: a saturated 1-slot GPU pool makes GPU tasks
+    queue on the gpu class topic — idle CPU workers must not steal them."""
+    with KsaCluster(prefix="rt1", poll_interval_s=0.005) as c:
+        for _ in range(2):
+            c.add_worker(slots=2)  # cpu-only profiles
+        gpu = c.add_worker(slots=1, profile=ResourceProfile(cpus=1, gpus=1))
+        # 3 serial GPU tasks on the single gpu slot + quick cpu chaff
+        gpu_ids = [c.submit("sleep", params={"duration": 0.1}, gpus=1)
+                   for _ in range(3)]
+        cpu_ids = [c.submit("sleep", params={"duration": 0.01})
+                   for _ in range(8)]
+        assert c.wait_all(cpu_ids + gpu_ids, timeout=30.0)
+        for tid in gpu_ids:
+            assert c.task(tid).agent_id == gpu.agent_id, tid
+        # the cpu pool did the cpu work (it was not starved by gpu queuing)
+        cpu_agents = {c.task(t).agent_id for t in cpu_ids}
+        assert cpu_agents - {gpu.agent_id}
+
+
+def test_misrouted_task_is_bounced_to_its_class_topic():
+    """Defence in depth: a GPU task produced straight onto the cpu class
+    topic is rerouted by the cpu worker, not executed by it."""
+    # dedicated gpu pool: it never subscribes the cpu class, so the bounce
+    # must come from the cpu worker
+    with KsaCluster(prefix="rt2", poll_interval_s=0.005,
+                    placement=ResourceClassPolicy(gpu_takes_cpu=False)) as c:
+        cpu = c.add_worker(slots=1)
+        gpu = c.add_worker(slots=1, profile=ResourceProfile(cpus=1, gpus=1))
+        bad = TaskMessage(task_id="misroute-0", script="sleep",
+                          params={"duration": 0.01},
+                          resources=Resources(gpus=1))
+        Producer(c.broker).send(class_topic("rt2", "cpu"), bad.to_dict(),
+                                key=bad.task_id)
+        assert c.wait_all([bad.task_id], timeout=15.0)
+        assert c.task(bad.task_id).agent_id == gpu.agent_id
+        assert cpu.stats()["rerouted"] == 1
+
+
+def test_pipeline_routes_stage_resources_end_to_end():
+    """ParaFold split through the DAG: the gpu-stage tasks of a campaign run
+    only on the GPU pool, cpu stages only see the cpu pool."""
+    spec = PipelineSpec("mix", [
+        Stage("prep", "sleep", fan_out=1, params={"duration": 0.0}),
+        Stage("infer", "sleep", depends_on=("prep",),
+              params={"duration": 0.0}, resources=Resources(gpus=1)),
+    ])
+    with KsaCluster(prefix="rt3", poll_interval_s=0.005) as c:
+        c.add_worker(slots=2)
+        gpu = c.add_worker(slots=1, profile=ResourceProfile(cpus=1, gpus=1))
+        res = c.run_campaign(spec, list(range(4)), timeout_s=60.0)
+        assert res.status.state == "COMPLETED"
+        infer_ids = [f"{res.campaign_id}-infer-{i:05d}" for i in range(4)]
+        for tid in infer_ids:
+            assert c.task(tid).agent_id == gpu.agent_id, tid
+
+
+# ---------------------------------------------------------------------------
+# fair sharing across campaigns
+# ---------------------------------------------------------------------------
+
+def test_weighted_campaigns_complete_in_weight_ratio():
+    """Two 9-task campaigns with weights 3:1 on one 1-slot worker: when the
+    heavy campaign finishes, the light one should have completed roughly a
+    third as many tasks (weighted round-robin, not first-come)."""
+    def spec():
+        return PipelineSpec("w", [
+            Stage("work", "sleep", fan_out=1, params={"duration": 0.02},
+                  retry=RetryPolicy(max_attempts=2)),
+        ])
+
+    # max_in_flight_total=1 makes the agent-wide budget the contended
+    # resource: every completion triggers one weighted-round-robin pick
+    # across the two campaigns' ready queues.
+    with KsaCluster(prefix="fs1", poll_interval_s=0.002,
+                    max_in_flight_total=1) as c:
+        c.add_worker(slots=1, poll_interval_s=0.002)
+        heavy = c.submit_campaign(spec(), list(range(9)), weight=3.0)
+        light = c.submit_campaign(spec(), list(range(9)), weight=1.0)
+        st_heavy = c.wait_campaign(heavy, timeout=60.0)
+        assert st_heavy.state == "COMPLETED"
+        light_done = c.campaign_status(light).stages["work"].done
+        # exact WRR would leave 3 light tasks done; allow generous jitter but
+        # reject FIFO (0 done) and unweighted round-robin (~9 done)
+        assert 1 <= light_done <= 6, light_done
+        assert c.wait_campaign(light, timeout=60.0).state == "COMPLETED"
+
+
+# ---------------------------------------------------------------------------
+# facade lifecycle
+# ---------------------------------------------------------------------------
+
+def test_cluster_double_start_raises_and_stop_is_idempotent():
+    c = KsaCluster(prefix="lc1", workers=1)
+    c.start()
+    try:
+        with pytest.raises(RuntimeError, match="already started"):
+            c.start()
+    finally:
+        c.stop()
+    c.stop()  # idempotent
+    with pytest.raises(RuntimeError, match="not running"):
+        c.submit("sleep")
+    with pytest.raises(RuntimeError, match="stopped"):
+        c.start()  # a stopped facade cannot be restarted
+
+
+def test_cluster_requires_start_before_use():
+    c = KsaCluster(prefix="lc2")
+    with pytest.raises(RuntimeError, match="not running"):
+        c.submit("sleep")
+    with pytest.raises(RuntimeError, match="not running"):
+        c.add_worker()
+
+
+def test_cluster_clean_shutdown_drains_agents():
+    c = KsaCluster(prefix="lc3", workers=1, worker_slots=1,
+                   poll_interval_s=0.005)
+    c.start()
+    w = c.agents[0]
+    tid = c.submit("sleep", params={"duration": 30.0})
+    deadline = time.time() + 5.0
+    while time.time() < deadline and w.stats()["in_flight"] == 0:
+        time.sleep(0.005)
+    assert w.stats()["in_flight"] == 1
+    c.stop()
+    # drain cancelled the in-flight task and the loop exited
+    assert not w.alive
+    assert w.stats()["in_flight"] == 0
+    assert c.broker._closed  # owned broker closed
+    # the cancelled task was never completed (it would be redelivered by a
+    # fresh deployment's watchdog, same as the paper's recovery flow)
+    assert w.tasks_completed == 0
+
+
+def test_cluster_shares_external_broker_without_closing_it():
+    b = Broker(default_partitions=2)
+    with KsaCluster(prefix="lc4", broker=b, workers=1) as c:
+        tid = c.submit("sleep", params={"duration": 0.0})
+        assert c.wait_all([tid], timeout=15.0)
+    assert not b._closed
+    b.close()
+
+
+def test_cluster_status_aggregates_components():
+    with KsaCluster(prefix="lc5", workers=1, http=True) as c:
+        tid = c.submit("sleep", params={"duration": 0.0})
+        assert c.wait_all([tid], timeout=15.0)
+        st = c.status()
+        assert st["prefix"] == "lc5"
+        assert len(st["agents"]) == 1
+        assert st["monitor"]["done"] == 1
+        assert "lc5-new.cpu" in st["broker"]["topics"]
+        assert c.http_port is not None
+
+
+# ---------------------------------------------------------------------------
+# heartbeat-failure surfacing (satellite)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_failures_are_counted_not_swallowed():
+    b = Broker(default_partitions=2)
+    # slots=0 keeps the agent permanently saturated, so every tick takes the
+    # heartbeat-only path; evicting its membership then makes that heartbeat
+    # raise, which must be counted, not silently dropped.
+    w = WorkerAgent(b, "hb", slots=0, poll_interval_s=0.005).start()
+    try:
+        time.sleep(0.05)
+        b.leave_group("hb-agents", w._consumer.member_id)
+        deadline = time.time() + 5.0
+        while time.time() < deadline and w.stats()["heartbeat_failures"] == 0:
+            time.sleep(0.005)
+        assert w.stats()["heartbeat_failures"] > 0
+    finally:
+        w.stop()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# review hardening: unroutable labels, legacy bare-topic producers, unwind
+# ---------------------------------------------------------------------------
+
+def test_unknown_label_fails_fast_at_submission():
+    pol = ResourceClassPolicy()
+    with pytest.raises(ValueError, match="no resource class"):
+        pol.route("p", _task(labels=("bigmem",)))
+    with KsaCluster(prefix="ul1", workers=1) as c:
+        with pytest.raises(ValueError, match="no resource class"):
+            c.submit("sleep", labels=("bigmem",))
+        # campaigns validate every stage up front, before planning tasks
+        from repro.pipeline import PipelineError
+        spec = PipelineSpec("bad", [
+            Stage("src", "sleep", fan_out=1),
+            Stage("big", "sleep", depends_on=("src",),
+                  resources=Resources(labels=("bigmem",))),
+        ])
+        with pytest.raises(PipelineError, match="unroutable"):
+            c.submit_campaign(spec, [1, 2])
+
+
+def test_gpu_count_is_capacity_not_routability():
+    """A 1-GPU pool may run a gpus=2 task (capacity hint, like cpus) — what
+    it must never do is run on a 0-GPU pool."""
+    assert ResourceProfile(gpus=1).can_run(Resources(gpus=2))
+    assert not ResourceProfile(gpus=0).can_run(Resources(gpus=1))
+
+
+def test_bare_topic_task_is_forwarded_to_class_topic():
+    """A legacy producer writing to the paper's bare `PREFIX-new` topic:
+    no agent consumes it under class routing, so the monitor forwards it —
+    the task runs without waiting for any watchdog timeout."""
+    with KsaCluster(prefix="lg1", workers=1, poll_interval_s=0.005) as c:
+        legacy = TaskMessage(task_id="legacy-0", script="sleep",
+                             params={"duration": 0.01})
+        Producer(c.broker).send("lg1-new", legacy.to_dict(),
+                                key=legacy.task_id)
+        assert c.wait_all([legacy.task_id], timeout=15.0)
+        assert c.monitor.legacy_forwards == 1
+
+
+def test_cluster_start_failure_unwinds_started_components():
+    c = KsaCluster(prefix="uw1", workers=1,
+                   slurm=dict(nodes=1, cpus_per_node=1, oversubscrib=2))
+    with pytest.raises(TypeError):
+        c.start()  # typo'd ClusterAgent kwarg surfaces after pools started
+    # the partially-started deployment was torn down, not leaked
+    assert all(not a.alive for a in c.agents)
+    assert c.monitor is not None and c.monitor._thread is not None
+    assert not c.monitor._thread.is_alive()
+    assert c.broker._closed

@@ -1,0 +1,103 @@
+"""Durability benchmarks for the event-sourced pipeline (ISSUE satellite):
+
+* ``bench_journal_overhead`` — the same no-op DAG campaign with the
+  write-ahead journal on (default) vs off (``pipeline_journal=False``, the
+  pre-refactor in-memory baseline): what appending every campaign event to
+  ``PREFIX-campaigns`` costs per task.
+* ``bench_recovery_time`` — ``KsaCluster.recover()`` wall time vs campaign
+  size: a synthetic mid-flight journal (every task dispatched+leased, half
+  done) is folded, repaired, and resubmitted by a fresh orchestrator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.cluster import KsaCluster
+from repro.core.broker import Producer
+from repro.core.messages import topic_names
+from repro.pipeline import (CampaignSubmitted, LeaseGranted, PipelineSpec,
+                            Stage, StageDispatched, TaskDone)
+
+
+def _noop_spec() -> PipelineSpec:
+    return PipelineSpec("noop", [
+        Stage("a", "sleep", fan_out=1, params={"duration": 0.0}),
+        Stage("b", "sleep", depends_on=("a",), params={"duration": 0.0}),
+    ])
+
+
+def bench_journal_overhead(n_items: int = 32
+                           ) -> list[tuple[str, float, str]]:
+    rows = []
+    timings = {}
+    for journal in (False, True):
+        prefix = "bjo1" if journal else "bjo0"
+        with KsaCluster(prefix=prefix, poll_interval_s=0.002,
+                        pipeline_journal=journal) as c:
+            c.add_worker(slots=4)
+            t0 = time.perf_counter()
+            c.run_campaign(_noop_spec(), list(range(n_items)),
+                           timeout_s=120.0)
+            timings[journal] = time.perf_counter() - t0
+            events = c.pipeline.stats()["events_journaled"]
+        n_tasks = 2 * n_items
+        label = "journaled" if journal else "in_memory_baseline"
+        extra = (f"{events} events appended"
+                 if journal else "no WAL (not crash-recoverable)")
+        rows.append((f"campaign_{label}", timings[journal] / n_tasks * 1e6,
+                     f"{n_tasks} tasks in {timings[journal]*1e3:.0f} ms, "
+                     f"{extra}"))
+    rows.append(("journal_overhead_ratio",
+                 (timings[True] - timings[False]) / (2 * n_items) * 1e6,
+                 f"journal adds {timings[True]/max(timings[False], 1e-9):.2f}x"
+                 f" wall vs in-memory baseline"))
+    return rows
+
+
+def _mid_flight_journal(prefix: str, cid: str, n_tasks: int) -> list:
+    """A dead orchestrator's journal: n source tasks planned and leased,
+    half of them done — the shape recover() folds after a crash."""
+    events = [CampaignSubmitted(campaign_id=cid, pipeline="wide",
+                                items=tuple(range(n_tasks)), params={},
+                                weight=1.0)]
+    for i in range(n_tasks):
+        tid = f"{cid}-work-{i:05d}"
+        events.append(StageDispatched(campaign_id=cid, stage="work",
+                                      task_id=tid, index=i,
+                                      params={"batch": [i],
+                                              "batch_index": i}))
+        events.append(LeaseGranted(campaign_id=cid, task_id=tid, attempt=0))
+        if i < n_tasks // 2:
+            events.append(TaskDone(campaign_id=cid, task_id=tid,
+                                   result={"i": i}))
+    return [dataclasses.replace(ev, seq=s, ts=time.time())
+            for s, ev in enumerate(events)]
+
+
+def bench_recovery_time(sizes: tuple[int, ...] = (16, 64, 256)
+                        ) -> list[tuple[str, float, str]]:
+    rows = []
+    for n in sizes:
+        spec = PipelineSpec("wide", [
+            Stage("work", "sleep", fan_out=1, params={"duration": 0.0}),
+        ])
+        prefix = f"brt{n}"
+        with KsaCluster(prefix=prefix, monitor=False,
+                        poll_interval_s=0.005) as c:
+            prod = Producer(c.broker)
+            topic = topic_names(prefix)["campaigns"]
+            cid = f"camp-bench-{n}"
+            events = _mid_flight_journal(prefix, cid, n)
+            for ev in events:
+                prod.send(topic, ev.to_dict(), key=cid)
+            t0 = time.perf_counter()
+            recovered = c.recover([spec])
+            dt = time.perf_counter() - t0
+            st = c.campaign_status(cid)
+        rows.append((f"recovery_{n}_tasks", dt / n * 1e6,
+                     f"{'ok' if recovered == [cid] else 'FAIL'}: folded "
+                     f"{len(events)} events, resubmitted "
+                     f"{st.stages['work'].retried} in-flight tasks in "
+                     f"{dt*1e3:.1f} ms"))
+    return rows

@@ -10,6 +10,42 @@ survivors (conditional edge), stage 3 is a join barrier aggregating the
 campaign. Both the campaign and the flat baseline run through the
 :class:`~repro.cluster.KsaCluster` facade on one shared broker.
 
+Durability — surviving the *orchestrator* dying, not just a worker
+------------------------------------------------------------------
+Campaign progress is event-sourced: before acting, the pipeline agent
+appends a typed journal event to the ``PREFIX-campaigns`` topic, so the
+broker (the paper's one shared piece of infrastructure) holds the full DAG
+history. The journal records, in per-campaign ``seq`` order::
+
+    {"kind": "journal", "type": <event>, "campaign_id": ..., "seq": n,
+     "ts": ..., "data": {...}}
+
+    CampaignSubmitted {pipeline, items, params, weight}   campaign exists
+    StageDispatched   {stage, task_id, index, params,     one task planned
+                       dep_ids}
+    LeaseGranted      {task_id, attempt}                  one (re)submission
+    TaskDone          {task_id, result}                   first result wins
+    TaskFailed        {task_id, reason, cause, final}     error / exhaustion
+    StageSkipped      {stage, task_id, index, dep_ids}    conditional edge
+    BarrierReleased   {stage}                             join fired once
+
+If this process is ``kill -9``'d mid-campaign, a fresh process on the same
+broker resumes it::
+
+    with KsaCluster(prefix="alphaknot", broker=broker) as c2:
+        c2.recover([knots.knots_pipeline(batch_size)])  # specs are code —
+        c2.wait_campaign(campaign_id)                   # re-supply them
+
+``recover()`` folds each live campaign's journal through the pure
+``CampaignState`` reducer, repairs any gap a crash left between journal
+writes, resubmits only tasks with **no terminal event** (on the same
+journaled retry budget the dead orchestrator was using), absorbs results
+that landed while no orchestrator was alive, and re-fences duplicates —
+the campaign finishes COMPLETED with the same knot counts as an
+uninterrupted run (asserted in tests/test_pipeline.py). The monitor's
+``/campaigns`` endpoint shows each campaign's journal tally and
+``recovered`` flag.
+
 Run:  PYTHONPATH=src python examples/knot_campaign.py [--structures 128]
 """
 import argparse
@@ -117,6 +153,11 @@ def main() -> None:
                            for n, s in snap["stages"].items())
         print(f"monitor GET /campaigns/{res.campaign_id}: "
               f"state={snap['state']} stages={{{stages}}}")
+        journal = snap.get("journal", {})
+        print(f"durability: {journal.get('events', 0)} journal events on "
+              f"PREFIX-campaigns (last: {journal.get('last_type', '?')}) — "
+              f"an orchestrator kill -9 here would resume via "
+              f"KsaCluster.recover()")
 
         if not args.skip_baseline:
             base = flat_baseline(c.broker, args.structures, args.batch_size,

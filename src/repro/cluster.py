@@ -38,7 +38,7 @@ from repro.core.scheduling import (LeasePolicy, PlacementPolicy,
 from repro.core.simslurm import SimSlurm
 from repro.core.submitter import Submitter
 
-_SLURM_KEYS = ("nodes", "cpus_per_node", "gpus_per_node",
+_SLURM_KEYS = ("nodes", "cpus_per_node", "gpus_per_node", "mem_mb_per_node",
                "scheduler_interval_s")
 
 _CPU_DEFAULT = object()  # add_worker sentinel: "cpu-only profile sized to slots"
@@ -71,6 +71,7 @@ class KsaCluster:
                  task_timeout_s: float | None = None,
                  max_attempts: int = 3,
                  pipeline_task_timeout_s: float | None = None,
+                 pipeline_journal: bool = True,
                  max_in_flight_total: int | None = None,
                  poll_interval_s: float = 0.01,
                  session_timeout_s: float | None = None,
@@ -88,6 +89,7 @@ class KsaCluster:
         self.task_timeout_s = task_timeout_s
         self.max_attempts = max_attempts
         self.pipeline_task_timeout_s = pipeline_task_timeout_s
+        self.pipeline_journal = pipeline_journal
         self.max_in_flight_total = max_in_flight_total
         self.poll_interval_s = poll_interval_s
         self._agent_kw = dict(agent_kw or {})
@@ -144,7 +146,8 @@ class KsaCluster:
                 for _ in range(self._spec["gpu_workers"]):
                     self.add_worker(slots=self._spec["gpu_slots"],
                                     profile=ResourceProfile(
-                                        cpus=self._spec["gpu_slots"], gpus=1))
+                                        cpus=self._spec["gpu_slots"], gpus=1,
+                                        mem_mb=1024 * self._spec["gpu_slots"]))
                 if self._spec["slurm"] is not None:
                     self.add_slurm(self._spec["slurm"])
             except BaseException:
@@ -198,12 +201,15 @@ class KsaCluster:
     def add_worker(self, *, profile: ResourceProfile | None = _CPU_DEFAULT,
                    slots: int = 2, **kw: Any) -> WorkerAgent:
         """Start one in-process worker. By default the worker is CPU-only
-        (GPU stages never route to it); pass a GPU-capable
-        :class:`ResourceProfile` for a model-owning pool, or ``profile=None``
-        for a legacy universal worker that leases every class."""
+        (GPU stages never route to it) with a memory budget of 1 GB per slot
+        (mem-aware admission packs against it; default-sized tasks pack
+        exactly one per slot); pass a GPU-capable or tainted
+        :class:`ResourceProfile` for a model-owning/exclusive pool, or
+        ``profile=None`` for a legacy universal worker that leases every
+        class and skips memory admission."""
         self._require_started()
         if profile is _CPU_DEFAULT:
-            profile = ResourceProfile(cpus=slots)
+            profile = ResourceProfile(cpus=slots, mem_mb=1024 * slots)
         merged = dict(poll_interval_s=self.poll_interval_s, **self._agent_kw)
         merged.update(kw)
         agent = WorkerAgent(self.broker, self.prefix, slots=slots,
@@ -283,7 +289,8 @@ class KsaCluster:
                     poll_interval_s=self.poll_interval_s,
                     default_task_timeout_s=self.pipeline_task_timeout_s,
                     placement=self.placement, lease=self._lease,
-                    max_in_flight_total=self.max_in_flight_total).start()
+                    max_in_flight_total=self.max_in_flight_total,
+                    journal=self.pipeline_journal).start()
             return self._pipeline
 
     def submit_campaign(self, spec: Any, items: Iterable | None = None, *,
@@ -305,6 +312,26 @@ class KsaCluster:
         return _run(spec, items, broker=self.broker, prefix=self.prefix,
                     params=params, agent=self.pipeline, weight=weight,
                     progress=progress, timeout_s=timeout_s)
+
+    def recover(self, specs: Any, *, include_finished: bool = False
+                ) -> list[str]:
+        """Rebuild campaigns from the ``PREFIX-campaigns`` journal after an
+        orchestrator crash (e.g. the previous KsaCluster process was
+        ``kill -9``'d mid-campaign against a shared/durable broker).
+
+        ``specs`` maps pipeline names to :class:`~repro.pipeline.PipelineSpec`
+        (or is an iterable of specs) — campaign specs are code (scripts,
+        ``skip_when`` predicates), so they are re-supplied rather than
+        journaled. Every live campaign is folded from its journal, repaired,
+        and resumed: tasks with no terminal event are resubmitted on a
+        journaled retry budget, results produced while no orchestrator was
+        alive are absorbed, and duplicates are re-fenced against the replayed
+        state. Returns the recovered campaign ids; follow with
+        :meth:`wait_campaign` / :meth:`campaign_status` as usual.
+        ``include_finished=True`` also rebuilds terminal campaigns so their
+        results can be re-read."""
+        self._require_started()
+        return self.pipeline.recover(specs, include_finished=include_finished)
 
     def campaign_status(self, campaign_id: str):
         return self.pipeline.status(campaign_id)

@@ -33,6 +33,7 @@ from __future__ import annotations
 import logging
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -124,6 +125,11 @@ class AgentBase:
                                   group_id=f"{prefix}-agents",
                                   member_id=f"{prefix}-agents-{self.agent_id}")
         self._running: dict[str, _Running] = {}
+        # leased tasks waiting for admission (mem-aware lease gate): the
+        # offset is committed — the task is ours — but execution starts only
+        # once it fits the profile's mem budget (the WorkerAgent analogue of
+        # a SimSlurm PD job waiting for a node with free memory).
+        self._deferred: deque[TaskMessage] = deque()
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -131,6 +137,7 @@ class AgentBase:
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.tasks_rerouted = 0
+        self.tasks_deferred = 0
         self.heartbeat_failures = 0
 
     # -- capacity -------------------------------------------------------------
@@ -140,8 +147,19 @@ class AgentBase:
             return len(self._running)
 
     def _capacity(self) -> int:
-        """How many more tasks to lease right now."""
-        return (self.slots + self.oversubscribe) - self._in_flight()
+        """How many more tasks to lease right now (deferred leases count —
+        they already occupy a slot's worth of committed work)."""
+        return (self.slots + self.oversubscribe) \
+            - self._in_flight() - len(self._deferred)
+
+    def _admit(self, task: TaskMessage) -> bool:
+        """Lease-time admission gate; subclasses veto starting a task *now*
+        (it stays leased in the deferral queue). Base: always admit."""
+        return True
+
+    def _admit_deferred(self) -> None:
+        while self._deferred and self._admit(self._deferred[0]):
+            self._accept(self._deferred.popleft())
 
     # -- main loop ----------------------------------------------------------------
 
@@ -167,6 +185,7 @@ class AgentBase:
             self._consumer.close()
 
     def _tick(self) -> None:
+        self._admit_deferred()
         cap = self._capacity()
         if cap > 0:
             batches = self._consumer.poll(timeout=0.0, max_records=cap)
@@ -175,7 +194,14 @@ class AgentBase:
                     task = TaskMessage.from_dict(rec.value)
                     if not self._routable(task):
                         continue
-                    self._accept(task)
+                    # FIFO behind an existing deferral: admitting fresh
+                    # leases past the queue head would starve a big task
+                    # under a stream of small ones
+                    if not self._deferred and self._admit(task):
+                        self._accept(task)
+                    else:
+                        self._deferred.append(task)
+                        self.tasks_deferred += 1
             if batches:
                 self._consumer.commit()  # lease-commit (see module docstring)
         else:
@@ -297,6 +323,11 @@ class AgentBase:
         return (self._thread is not None and self._thread.is_alive()
                 and not self._crashed.is_set())
 
+    def _mem_in_flight(self) -> int:
+        with self._lock:
+            return sum(r.task.resources.mem_mb
+                       for r in self._running.values())
+
     def stats(self) -> dict:
         with self._lock:
             return {
@@ -311,14 +342,41 @@ class AgentBase:
                             if self.profile is not None else None),
                 "subscriptions": list(self._subscriptions),
                 "rerouted": self.tasks_rerouted,
+                "deferred": self.tasks_deferred,
+                "mem_in_flight_mb": sum(r.task.resources.mem_mb
+                                        for r in self._running.values()),
                 "heartbeat_failures": self.heartbeat_failures,
             }
 
 
 class WorkerAgent(AgentBase):
-    """Runs tasks directly in threads on the local machine (paper §3)."""
+    """Runs tasks directly in threads on the local machine (paper §3).
+
+    With a declared profile, ``ResourceProfile.mem_mb`` is enforced at lease
+    time: a task starts only while the sum of running requests fits the
+    budget; otherwise it waits in the deferral queue — the workstation
+    analogue of SimSlurm's per-node memory packing, instead of the old
+    treat-it-as-a-hint behaviour."""
 
     kind = "worker"
+
+    def _admit(self, task: TaskMessage) -> bool:
+        if self.profile is None:
+            return True
+        need = task.resources.mem_mb
+        cap = self.profile.mem_mb
+        used = self._mem_in_flight()
+        if used + need <= cap:
+            return True
+        if need > cap and not self._running:
+            # the request can never fit this pool; running it best-effort on
+            # an idle worker beats deadlocking the deferral queue (and
+            # mirrors cpus-as-capacity-hint semantics, §5)
+            log.warning("agent %s: task %s requests %d MB > profile budget "
+                        "%d MB — admitting on idle worker", self.agent_id,
+                        task.task_id, need, cap)
+            return True
+        return False
 
     def _accept(self, task: TaskMessage) -> None:
         cancel = threading.Event()
@@ -369,11 +427,14 @@ class ClusterAgent(AgentBase):
         if oversubscribe is None:
             oversubscribe = max(2, slots // 2)  # paper: always keep extras queued
         if "profile" not in kw:
-            # derive routability from the simulated cluster's hardware: a
-            # GPU-less Slurm partition must never lease GPU stages.
+            # derive routability/capacity from the simulated cluster's
+            # hardware: a GPU-less Slurm partition must never lease GPU
+            # stages, and the advertised mem budget is the cluster total
+            # (per-node packing is SimSlurm's job).
             kw["profile"] = ResourceProfile(
                 cpus=slurm.total_cpus,
-                gpus=sum(n.gpus for n in slurm.nodes))
+                gpus=sum(n.gpus for n in slurm.nodes),
+                mem_mb=sum(n.mem_mb for n in slurm.nodes))
         super().__init__(broker, prefix, slots=slots,
                          oversubscribe=oversubscribe, **kw)
         self.slurm = slurm
@@ -405,8 +466,8 @@ class ClusterAgent(AgentBase):
 
         job_id = self.slurm.sbatch(
             _job, name=task.task_id, cpus=task.resources.cpus,
-            gpus=task.resources.gpus, walltime_s=task.timeout_s,
-            user=self.user)
+            gpus=task.resources.gpus, mem_mb=task.resources.mem_mb,
+            walltime_s=task.timeout_s, user=self.user)
         run.slurm_job_id = job_id
         with self._lock:
             self._running[task.task_id] = run

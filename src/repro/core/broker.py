@@ -28,7 +28,12 @@ Faithfully implemented Kafka semantics the paper relies on (§3, §6):
 * optional **durability**: per-partition segment files (length-prefixed
   msgpack frames) with replay on restart, plus a committed-offset log; message
   retention is bounded by ``retention_records`` per partition (§6 mentions the
-  broker-side retention policy).
+  broker-side retention policy) and can be overridden **per topic**
+  (``create_topic(..., retention_records=None)`` pins a journal topic such as
+  ``PREFIX-campaigns`` to infinite retention even under a broker-wide cap),
+* **replay reads**: :meth:`Broker.read_from` scans a topic from an absolute
+  offset outside any consumer group — the API the pipeline recovery path
+  uses to fold the campaign journal after an orchestrator crash.
 """
 from __future__ import annotations
 
@@ -87,6 +92,8 @@ def _hash_key(key: str, n: int) -> int:
 # --------------------------------------------------------------------------
 
 _FRAME = struct.Struct("<I")
+
+_UNSET = object()  # create_topic sentinel: "use the broker-wide retention"
 
 
 class _PartitionLog:
@@ -214,16 +221,34 @@ class Broker:
 
     # -- topics ------------------------------------------------------------
 
-    def create_topic(self, name: str, partitions: int | None = None) -> None:
+    def create_topic(self, name: str, partitions: int | None = None,
+                     retention_records: int | None | object = _UNSET) -> None:
+        """Create a topic (idempotent). ``retention_records`` overrides the
+        broker-wide retention for this topic (``None`` = keep every record —
+        what a replayable journal topic needs); on an existing topic an
+        explicit value updates the retention in place."""
         with self._lock:
             if name in self._topics:
+                if retention_records is not _UNSET:
+                    self.set_retention(name, retention_records)
                 return
             n = partitions or self._default_partitions
+            retention = (self._retention if retention_records is _UNSET
+                         else retention_records)
             self._topics[name] = [
-                _PartitionLog(name, p, self._log_dir, self._retention,
-                              self._fsync)
+                _PartitionLog(name, p, self._log_dir, retention, self._fsync)
                 for p in range(n)
             ]
+
+    def set_retention(self, topic: str,
+                      retention_records: int | None) -> None:
+        """Re-bound (or unbound, with ``None``) one topic's per-partition
+        retention. Loosening takes effect immediately; tightening trims on
+        the next append."""
+        with self._lock:
+            self._ensure_topic(topic)
+            for plog in self._topics[topic]:
+                plog.retention = retention_records
 
     def topics(self) -> list[str]:
         with self._lock:
@@ -271,6 +296,24 @@ class Broker:
         with self._lock:
             self._ensure_topic(tp.topic)
             return self._topics[tp.topic][tp.partition].end_offset()
+
+    def read_from(self, topic: str, offset: int = 0, *,
+                  partition: int | None = None) -> list[Record]:
+        """Group-less replay read: every retained record of ``topic`` with
+        offset ≥ ``offset`` (all partitions unless one is named), ordered by
+        ``(partition, offset)``. No consumer group, no committed offsets —
+        the caller owns its position. This is the recovery-path API: a
+        restarted orchestrator folds the ``PREFIX-campaigns`` journal from
+        here (per-campaign order is per-partition order because journal
+        records are keyed by campaign id)."""
+        with self._lock:
+            self._ensure_topic(topic)
+            logs = self._topics[topic]
+            parts = logs if partition is None else [logs[partition]]
+            out: list[Record] = []
+            for plog in parts:
+                out.extend(plog.fetch(offset, len(plog.records)))
+            return out
 
     def wait_for_data(self, timeout: float) -> None:
         """Block until any record is produced (or timeout)."""

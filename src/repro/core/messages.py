@@ -45,8 +45,10 @@ TERMINAL_STATUSES = frozenset(
 
 def topic_names(prefix: str) -> Mapping[str, str]:
     """The paper's default topic layout (§5), plus the ``-campaigns`` topic
-    carrying :class:`CampaignEvent` progress snapshots from pipeline agents
-    (the repro.pipeline extension of the paper's single-topic task bag).
+    carrying both :class:`CampaignEvent` progress snapshots and the pipeline
+    agents' write-ahead journal of typed campaign events
+    (:mod:`repro.pipeline.state`) — the durable log that makes campaigns
+    recoverable after an orchestrator crash.
 
     ``new`` is the *base* task-topic name. Resource-aware placement
     (:mod:`repro.core.scheduling`) routes tasks to per-resource-class
@@ -66,27 +68,36 @@ def topic_names(prefix: str) -> Mapping[str, str]:
 class Resources:
     """Resource request serialized with every task (paper §5: GPU, memory,
     number of CPUs). ``labels`` name extra resource classes (e.g. a
-    ``bigmem`` pool) the placement policy can route on — see
-    :mod:`repro.core.scheduling`."""
+    ``bigmem`` pool) the placement policy can route on; ``tolerations`` let a
+    task *accept* a tainted pool it does not otherwise request (a batch task
+    tolerating the ``serve`` taint may be routed onto the serve pool) — see
+    :mod:`repro.core.scheduling`. ``mem_mb`` is enforced at lease time:
+    workers admit tasks only while the sum of running requests fits their
+    profile, and SimSlurm packs it per node alongside cpus/gpus."""
 
     cpus: int = 1
     gpus: int = 0
     mem_mb: int = 1024
     labels: tuple = ()
+    tolerations: tuple = ()
 
     def __post_init__(self) -> None:
         self.labels = tuple(self.labels)
+        self.tolerations = tuple(self.tolerations)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["labels"] = list(self.labels)
+        d["tolerations"] = list(self.tolerations)
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any] | None) -> "Resources":
         if d is None:
             return cls()
-        return cls(**{k: d[k] for k in ("cpus", "gpus", "mem_mb", "labels")
+        return cls(**{k: d[k]
+                      for k in ("cpus", "gpus", "mem_mb", "labels",
+                                "tolerations")
                       if k in d})
 
 
@@ -223,17 +234,25 @@ class ErrorMessage:
 
 @dataclasses.dataclass
 class CampaignEvent:
-    """A record on ``PREFIX-campaigns``: a progress snapshot for one campaign,
-    published by a pipeline agent on every state transition. The MonitorAgent
-    mirrors the latest snapshot per campaign into its ``/campaigns`` REST
-    endpoint, so observability works across processes exactly like the
-    paper's task-status flow (§3)."""
+    """A progress-snapshot record on ``PREFIX-campaigns``, published by a
+    pipeline agent on every state transition. The MonitorAgent mirrors the
+    latest snapshot per campaign into its ``/campaigns`` REST endpoint, so
+    observability works across processes exactly like the paper's
+    task-status flow (§3).
+
+    The topic is shared with the write-ahead *journal* of typed campaign
+    events (:mod:`repro.pipeline.state`); ``kind`` discriminates the two
+    record families (journal records carry ``kind="journal"``).
+    ``recovered`` marks snapshots published by an agent that rebuilt this
+    campaign from the journal after a crash."""
 
     campaign_id: str
     pipeline: str
     state: str  # RUNNING | COMPLETED | FAILED
     agent_id: str = ""
     stages: dict = dataclasses.field(default_factory=dict)
+    recovered: bool = False
+    kind: str = "snapshot"
     ts: float = dataclasses.field(default_factory=time.time)
 
     def to_dict(self) -> dict:
@@ -247,6 +266,8 @@ class CampaignEvent:
             state=str(d.get("state", "RUNNING")),
             agent_id=d.get("agent_id", ""),
             stages=dict(d.get("stages", {})),
+            recovered=bool(d.get("recovered", False)),
+            kind=str(d.get("kind", "snapshot")),
             ts=float(d.get("ts", time.time())),
         )
 

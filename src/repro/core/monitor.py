@@ -115,6 +115,10 @@ class MonitorAgent:
         # latest CampaignEvent snapshot per campaign (repro.pipeline agents
         # publish these on PREFIX-campaigns; mirrored into /campaigns).
         self._campaigns: dict[str, dict] = {}
+        # per-campaign journal tallies (the same topic carries the pipeline
+        # agents' write-ahead event journal; the monitor does not fold it —
+        # it surfaces durability/recovery status alongside the snapshots).
+        self._journal: dict[str, dict] = {}
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -185,6 +189,19 @@ class MonitorAgent:
                 e.last_update = time.time()
                 self.results_handled += 1
             elif topic == self.topics["campaigns"]:
+                if value.get("kind") == "journal":
+                    # a write-ahead journal event (repro.pipeline.state):
+                    # tally it for the /campaigns recovery status instead of
+                    # parsing it as a progress snapshot
+                    cid = value.get("campaign_id", "")
+                    j = self._journal.setdefault(
+                        cid, {"events": 0, "last_seq": -1, "last_type": ""})
+                    j["events"] += 1
+                    seq = int(value.get("seq", -1))
+                    if seq >= j["last_seq"]:
+                        j["last_seq"] = seq
+                        j["last_type"] = str(value.get("type", ""))
+                    return
                 ev = CampaignEvent.from_dict(value)
                 prev = self._campaigns.get(ev.campaign_id)
                 if prev is None or ev.ts >= prev.get("ts", 0.0):
@@ -307,13 +324,26 @@ class MonitorAgent:
 
     def campaigns(self) -> dict[str, dict]:
         """Latest per-campaign progress snapshots (per-stage done/in-flight/
-        failed counters published by pipeline agents)."""
+        failed counters published by pipeline agents), each annotated with
+        its journal tally (``journal.events`` / ``last_seq`` / ``last_type``)
+        and ``recovered`` flag — the recovery status served on
+        ``/campaigns``. A campaign seen only through journal events (its
+        orchestrator died before publishing a snapshot) still appears, with
+        ``state="JOURNALED"``: durable, awaiting ``KsaCluster.recover()``."""
         with self._lock:
-            return dict(self._campaigns)
+            out: dict[str, dict] = {}
+            for cid in set(self._campaigns) | set(self._journal):
+                snap = self._campaigns.get(cid)
+                d = dict(snap) if snap is not None else {
+                    "campaign_id": cid, "state": "JOURNALED"}
+                if cid in self._journal:
+                    d["journal"] = dict(self._journal[cid])
+                out[cid] = d
+            return out
 
     def campaign(self, campaign_id: str) -> dict | None:
         with self._lock:
-            return self._campaigns.get(campaign_id)
+            return self.campaigns().get(campaign_id)
 
     def summary(self) -> dict:
         with self._lock:
@@ -330,6 +360,8 @@ class MonitorAgent:
                 "duplicates_fenced": sum(e.duplicate_results
                                          for e in self._table.values()),
                 "campaigns": len(self._campaigns),
+                "journal_events": sum(j["events"]
+                                      for j in self._journal.values()),
             }
 
     # -- REST API (paper §3: "a web-based REST API") ------------------------------------

@@ -9,9 +9,13 @@ rather than a flat task bag. This module makes placement a first-class,
 pluggable concept:
 
 * :class:`ResourceProfile` — what an *agent pool* can run (cpus, gpus, mem,
-  labels). Agents subscribe only to the per-resource-class topics
+  labels, taints). Agents subscribe only to the per-resource-class topics
   (``PREFIX-new.<class>``) their profile can serve, so a GPU stage can never
   be leased by a CPU-only agent — it queues on the GPU class topic instead.
+  ``mem_mb`` is an admission budget enforced at lease time, and ``taints``
+  make a pool exclusive (k8s-style: a ``serve``-tainted pool refuses plain
+  batch work unless the task tolerates the taint via
+  ``Resources.tolerations``).
 * :class:`PlacementPolicy` — maps tasks to class topics and profiles to
   subscriptions. :class:`ResourceClassPolicy` (the default) splits ``cpu`` /
   ``gpu`` plus arbitrary label classes; :class:`SingleTopicPolicy` reproduces
@@ -45,33 +49,49 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 class ResourceProfile:
     """What one agent pool is equipped to run.
 
-    ``cpus``/``mem_mb`` are capacity hints (packing is enforced by slots /
-    SimSlurm); ``gpus`` and ``labels`` are *routability* dimensions — they
-    decide which resource-class topics the agent subscribes to, and
-    :meth:`can_run` checks only those, so a task asking for more CPUs than
-    one agent advertises still runs (slower), while a task asking for a GPU
-    on a CPU-only pool never does.
+    ``cpus`` is a capacity hint (packing is enforced by slots / SimSlurm);
+    ``mem_mb`` is the pool's admission budget — workers lease a task only
+    while the sum of running requests fits it (mem-aware admission, the same
+    packing SimSlurm applies per node for cpus/gpus); ``gpus`` and ``labels``
+    are *routability* dimensions — they decide which resource-class topics
+    the agent subscribes to, and :meth:`can_run` checks only those, so a task
+    asking for more CPUs than one agent advertises still runs (slower), while
+    a task asking for a GPU on a CPU-only pool never does.
+
+    ``taints`` make a pool *exclusive*: a tainted pool subscribes only to the
+    class topics its taints/labels name and refuses any task that neither
+    carries the taint as a label nor tolerates it
+    (``Resources.tolerations``) — e.g. a ``serve``-tainted pool never drains
+    plain cpu batch work (the ROADMAP label-taint follow-on).
     """
 
     cpus: int = 1
     gpus: int = 0
     mem_mb: int = 1024
     labels: tuple[str, ...] = ()
+    taints: tuple[str, ...] = ()
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "labels", tuple(self.labels))
+        object.__setattr__(self, "taints", tuple(self.taints))
 
     def can_run(self, res: "Resources") -> bool:
-        """Routability check: GPU *capability* and labels only. GPU count,
-        like cpus/mem, is a capacity hint (SimSlurm packs it per node); what
-        a CPU-only pool can never do is run a GPU task at all."""
+        """Routability check: GPU *capability*, labels, and taints. GPU
+        count, like cpus/mem, is a capacity hint (SimSlurm packs it per
+        node); what a CPU-only pool can never do is run a GPU task at all —
+        and what a tainted pool must never do is run work that neither asks
+        for nor tolerates the taint."""
         if res.gpus > 0 and self.gpus <= 0:
             return False
-        return set(res.labels) <= set(self.labels)
+        if not set(res.labels) <= set(self.labels):
+            return False
+        accepted = set(res.labels) | set(res.tolerations)
+        return set(self.taints) <= accepted
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["labels"] = list(self.labels)
+        d["taints"] = list(self.taints)
         return d
 
 
@@ -140,7 +160,18 @@ class ResourceClassPolicy(PlacementPolicy):
                 f"task {task.task_id}: labels {list(res.labels)} name no "
                 f"resource class (known: {list(self._classes)}); declare "
                 f"them via ResourceClassPolicy(extra_classes=...)")
-        return "gpu" if res.gpus > 0 else "cpu"
+        # a gpu demand always wins — a toleration is permission, not a
+        # demand, and must never land a GPU task on whatever hardware backs
+        # the tolerated pool
+        if res.gpus > 0:
+            return "gpu"
+        # route tolerating cpu work to the tolerated (usually tainted) class
+        # so that pool *can* serve it; unknown tolerations simply fall
+        # through to the default class.
+        for tl in res.tolerations:
+            if tl in self._classes:
+                return tl
+        return "cpu"
 
     def topics(self, prefix: str) -> tuple[str, ...]:
         return tuple(class_topic(prefix, c) for c in self._classes)
@@ -152,6 +183,21 @@ class ResourceClassPolicy(PlacementPolicy):
                       profile: ResourceProfile | None) -> tuple[str, ...]:
         if profile is None:
             return self.topics(prefix)
+        if profile.taints:
+            # exclusive pool: only the class topics its taints/labels name —
+            # a serve-tainted agent never even subscribes to the plain cpu
+            # class, so it cannot drain untolerated batch work.
+            keep = set(profile.labels) | set(profile.taints)
+            topics = tuple(class_topic(prefix, c) for c in self._classes
+                           if c in keep)
+            if not topics:
+                # same fail-fast contract as classify() for unknown labels:
+                # a silently idle worker is a misconfiguration, not a pool
+                raise ValueError(
+                    f"profile taints {list(profile.taints)} name no "
+                    f"resource class (known: {list(self._classes)}); "
+                    f"declare them via ResourceClassPolicy(extra_classes=...)")
+            return topics
         classes: list[str] = []
         if profile.gpus > 0:
             classes.append("gpu")

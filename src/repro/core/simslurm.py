@@ -5,10 +5,12 @@ command-line interface (``sbatch`` / ``squeue`` / ``scancel`` — §5 stresses
 that no Slurm REST API, Kafka plugin, or C library is required). SimSlurm
 models exactly that surface:
 
-* a cluster of ``nodes × cpus_per_node`` (+ optional GPUs),
+* a cluster of ``nodes × cpus_per_node`` (+ optional GPUs and per-node
+  memory),
 * a FIFO queue with per-job resource requests; jobs start when a node has
-  free slots (first-fit packing, like a single-partition Slurm with
-  ``SelectType=cons_tres``),
+  free cpu/gpu slots *and* free memory (first-fit packing, like a
+  single-partition Slurm with ``SelectType=cons_tres`` — memory is a packed
+  resource, not a hint),
 * job states ``PD`` (pending) → ``R`` (running) → ``CD`` (completed) /
   ``F`` (failed) / ``CA`` (cancelled) / ``TO`` (walltime timeout),
 * ``scancel``, per-job walltime limits, and a global scheduler tick.
@@ -35,6 +37,8 @@ class NodeState:
     gpus: int
     free_cpus: int
     free_gpus: int
+    mem_mb: int = 0
+    free_mem_mb: int = 0
 
 
 @dataclass
@@ -46,6 +50,7 @@ class Job:
     gpus: int
     walltime_s: float | None
     user: str
+    mem_mb: int = 0
     state: str = "PD"  # PD | R | CD | F | CA | TO
     node: str | None = None
     submitted_at: float = field(default_factory=time.time)
@@ -72,10 +77,17 @@ class SimSlurm:
     """
 
     def __init__(self, nodes: int = 4, cpus_per_node: int = 8,
-                 gpus_per_node: int = 0, scheduler_interval_s: float = 0.01):
+                 gpus_per_node: int = 0, mem_mb_per_node: int | None = None,
+                 scheduler_interval_s: float = 0.01):
+        # default memory sizes the node to its cpu count at the control
+        # plane's default request (1024 MB/task), so cpu-bound workloads
+        # pack exactly as before memory became a packed resource.
+        if mem_mb_per_node is None:
+            mem_mb_per_node = 1024 * cpus_per_node
         self.nodes = [
             NodeState(f"node{i:03d}", cpus_per_node, gpus_per_node,
-                      cpus_per_node, gpus_per_node)
+                      cpus_per_node, gpus_per_node,
+                      mem_mb_per_node, mem_mb_per_node)
             for i in range(nodes)
         ]
         self.total_cpus = nodes * cpus_per_node
@@ -95,12 +107,15 @@ class SimSlurm:
     # -- the unprivileged CLI surface ---------------------------------------
 
     def sbatch(self, fn: Callable[..., Any], *, name: str = "job",
-               cpus: int = 1, gpus: int = 0, walltime_s: float | None = None,
+               cpus: int = 1, gpus: int = 0, mem_mb: int = 0,
+               walltime_s: float | None = None,
                user: str = "user") -> int:
         """Submit a job; returns the Slurm job id. ``fn`` may accept a
-        ``cancel_event`` kwarg to observe scancel/timeout."""
+        ``cancel_event`` kwarg to observe scancel/timeout. ``mem_mb`` is
+        packed per node like cpus/gpus (0 = no memory demand)."""
         with self._lock:
-            job = Job(next(self._ids), name, fn, cpus, gpus, walltime_s, user)
+            job = Job(next(self._ids), name, fn, cpus, gpus, walltime_s,
+                      user, mem_mb=mem_mb)
             self._jobs[job.job_id] = job
             return job.job_id
 
@@ -137,6 +152,7 @@ class SimSlurm:
                 "nodes": len(self.nodes),
                 "total_cpus": self.total_cpus,
                 "free_cpus": sum(n.free_cpus for n in self.nodes),
+                "free_mem_mb": sum(n.free_mem_mb for n in self.nodes),
                 "pending": sum(j.state == "PD" for j in self._jobs.values()),
                 "running": sum(j.state == "R" for j in self._jobs.values()),
             }
@@ -144,8 +160,9 @@ class SimSlurm:
     # -- scheduler ------------------------------------------------------------
 
     def _try_place(self, job: Job) -> NodeState | None:
-        for node in self.nodes:  # first-fit
-            if node.free_cpus >= job.cpus and node.free_gpus >= job.gpus:
+        for node in self.nodes:  # first-fit over cpus, gpus, and memory
+            if node.free_cpus >= job.cpus and node.free_gpus >= job.gpus \
+                    and node.free_mem_mb >= job.mem_mb:
                 return node
         return None
 
@@ -160,6 +177,7 @@ class SimSlurm:
                         continue
                     node.free_cpus -= job.cpus
                     node.free_gpus -= job.gpus
+                    node.free_mem_mb -= job.mem_mb
                     job.state = "R"
                     job.node = node.name
                     job.started_at = time.time()
@@ -194,6 +212,7 @@ class SimSlurm:
             node = next(n for n in self.nodes if n.name == job.node)
             node.free_cpus += job.cpus
             node.free_gpus += job.gpus
+            node.free_mem_mb += job.mem_mb
 
     # -- accounting -------------------------------------------------------------
 

@@ -19,19 +19,31 @@ Class → paper mapping:
 * :class:`~repro.pipeline.spec.RetryPolicy` — bounds the at-least-once
   resubmission loop (§3's watchdog + the safe-multiple-attempts extension
   the paper lists as future work).
-* :class:`~repro.pipeline.agent.PipelineAgent` — a peer of the MonitorAgent
-  (§3): subscribes to ``PREFIX-done``/``PREFIX-error``, advances the DAG when
-  dependencies complete, fences duplicate results by first-wins per task so a
-  barrier never double-fires, enforces per-stage ``max_in_flight``
-  backpressure, arbitrates concurrent campaigns through a
+* :class:`~repro.pipeline.state.CampaignState` — the **event-sourced core**:
+  campaign progress is a pure reducer folding a typed journal
+  (``CampaignSubmitted`` / ``StageDispatched`` / ``LeaseGranted`` /
+  ``TaskDone`` / ``TaskFailed`` / ``StageSkipped`` / ``BarrierReleased``)
+  written ahead of every action to the ``PREFIX-campaigns`` topic. DAG
+  semantics are therefore deterministic, broker-free unit-testable, and —
+  crucially — recoverable: an orchestrator ``kill -9`` mid-campaign is
+  resumed by folding the journal back (:meth:`PipelineAgent.recover` /
+  ``KsaCluster.recover()``).
+* :class:`~repro.pipeline.agent.PipelineAgent` — the thin executor over that
+  log, and a peer of the MonitorAgent (§3): subscribes to
+  ``PREFIX-done``/``PREFIX-error``, journals + folds events, submits leased
+  tasks, fences duplicate results by first-wins per task so a barrier never
+  double-fires, enforces per-stage ``max_in_flight`` backpressure, arbitrates
+  concurrent campaigns through a
   :class:`~repro.core.scheduling.LeasePolicy` (FairShare weighted
   round-robin by default; per-campaign ``weight=`` at submit), honours
-  ``Stage.skip_when`` conditional edges (skips cascade and count toward
-  completion), and publishes progress on ``PREFIX-campaigns``.
+  ``Stage.skip_when`` conditional edges (skips cascade, are journaled, and
+  count toward completion), and publishes progress snapshots on
+  ``PREFIX-campaigns`` alongside the journal.
 
 Campaigns are normally driven through :class:`repro.cluster.KsaCluster`
-(``c.run_campaign(spec, items)``), which wires the pipeline agent to the same
-broker, prefix, and placement policy as the execution pools.
+(``c.run_campaign(spec, items)`` / ``c.recover(specs)``), which wires the
+pipeline agent to the same broker, prefix, and placement policy as the
+execution pools.
 * :class:`~repro.pipeline.status.CampaignStatus` /
   :class:`~repro.pipeline.status.StageStatus` — the campaign-level analogue of
   §3's task status table, surfaced via the MonitorAgent REST API
@@ -42,10 +54,15 @@ broker, prefix, and placement policy as the execution pools.
 from .agent import PipelineAgent, PipelineError
 from .driver import CampaignResult, run_campaign
 from .spec import PipelineSpec, RetryPolicy, SpecError, Stage
-from .status import CampaignState, CampaignStatus, StageStatus
+from .state import (BarrierReleased, CampaignState, CampaignSubmitted,
+                    JournalEvent, LeaseGranted, StageDispatched, StageSkipped,
+                    TaskDone, TaskFailed)
+from .status import CampaignStatus, StageStatus
 
 __all__ = [
-    "CampaignResult", "CampaignState", "CampaignStatus", "PipelineAgent",
+    "BarrierReleased", "CampaignResult", "CampaignState", "CampaignStatus",
+    "CampaignSubmitted", "JournalEvent", "LeaseGranted", "PipelineAgent",
     "PipelineError", "PipelineSpec", "RetryPolicy", "SpecError", "Stage",
-    "StageStatus", "run_campaign",
+    "StageDispatched", "StageSkipped", "StageStatus", "TaskDone",
+    "TaskFailed", "run_campaign",
 ]

@@ -1,40 +1,52 @@
-"""PipelineAgent — advances DAG campaigns over the KSA control plane.
+"""PipelineAgent — a thin executor over the event-sourced campaign journal.
 
 The agent is a *peer* of the MonitorAgent (§3): it subscribes to the
 ``PREFIX-done`` / ``PREFIX-error`` topics in its own consumer group (broadcast
 copy — monitors and pipeline agents each see every record) and drives the
-campaign state machine:
+campaign state machine. Since the event-sourcing refactor it holds **no**
+authoritative mutable progress of its own: every decision is appended as a
+typed :mod:`repro.pipeline.state` event to a write-ahead journal on the
+``PREFIX-campaigns`` topic *before* the agent acts, then folded into the pure
+:class:`~repro.pipeline.state.CampaignState` reducer. An orchestrator
+``kill -9`` therefore loses nothing a replay cannot rebuild — see
+:meth:`recover`.
+
+Responsibilities (unchanged semantics, now journal-backed):
 
 * when an upstream task completes, emit next-stage ``TaskMessage``\\ s (map
   stages 1:1, join stages exactly once per barrier),
 * **duplicate-result fencing**: the first result per task wins; late results
-  from re-attempted tasks are counted and dropped, so a barrier can never
-  double-fire (the safe-multiple-attempts extension the paper names as future
-  work),
+  from re-attempted tasks — including attempts replayed after a recovery —
+  are counted and dropped, so a barrier can never double-fire,
 * **backpressure**: per-stage ``max_in_flight`` bounds how many tasks of a
   stage are on the ``-new`` topic at once; the rest wait in a ready queue,
-* **fair sharing**: when several campaigns have ready tasks, a pluggable
-  :class:`~repro.core.scheduling.LeasePolicy` decides whose task is submitted
-  next — :class:`~repro.core.scheduling.FairShare` (default) drains them in
-  weighted round-robin keyed by ``campaign_id`` (weights set per campaign at
-  submit time), replacing the first-come FIFO contention,
-* **conditional edges**: a stage's ``skip_when`` predicate short-circuits
-  tasks whose upstream result makes them pointless (e.g. no screen survivors
-  → skip localize); skips cascade downstream and count toward completion, so
-  the campaign finishes COMPLETED, not FAILED,
+* **fair sharing**: a pluggable :class:`~repro.core.scheduling.LeasePolicy`
+  (FairShare weighted round-robin by default) decides whose ready task is
+  submitted next; every grant is journaled as ``LeaseGranted``,
+* **conditional edges**: ``Stage.skip_when`` short-circuits pointless tasks;
+  skips are journaled (``StageSkipped``) so replay never re-runs predicates,
 * **watchdog**: a task with no result after ``RetryPolicy.timeout_s`` is
-  resubmitted with a bumped attempt (the monitor's straggler mitigation,
-  scoped per stage); ``max_attempts`` exhaustion fails the campaign,
-* progress snapshots are published on ``PREFIX-campaigns`` for the
-  MonitorAgent's ``/campaigns`` REST endpoint.
+  resubmitted with a bumped attempt; the retry budget is the journaled
+  ``LeaseGranted`` count in ``CampaignState``, so resubmissions after a
+  recovery never double-count attempts taken before the crash,
+* progress snapshots are still published on ``PREFIX-campaigns`` for the
+  MonitorAgent's ``/campaigns`` REST endpoint (interleaved with the journal;
+  records carry a ``kind`` discriminator).
+
+Recovery (:meth:`recover`): read the journal back via
+:meth:`~repro.core.broker.Broker.read_from`, fold each live campaign's
+events, run the pure repair planners over any gap a crash left between
+journal writes, re-register the campaign, and resubmit only tasks with no
+terminal event — after an explicit replay read of ``-done`` absorbs results
+produced while no orchestrator was alive, so finished work is never
+re-executed and duplicates are re-fenced against the replayed state.
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import threading
 import time
-from collections import deque
-from dataclasses import dataclass, field
 from typing import Any, Iterable, Mapping
 
 from repro.core.broker import Broker, Consumer, Producer
@@ -44,7 +56,10 @@ from repro.core.scheduling import FairShare, LeasePolicy, PlacementPolicy
 from repro.core.submitter import Submitter
 
 from .spec import PipelineSpec, Stage
-from .status import CampaignState, CampaignStatus, StageStatus
+from .state import (CampaignState, CampaignSubmitted, JournalEvent,
+                    LeaseGranted, StageSkipped, TaskDone, TaskFailed,
+                    group_journal, plan_downstream, plan_sources)
+from .status import CampaignStatus
 
 log = logging.getLogger(__name__)
 
@@ -53,44 +68,34 @@ class PipelineError(RuntimeError):
     pass
 
 
-@dataclass
-class _PTask:
-    """One planned task of one stage (all attempts share this record)."""
-
-    stage: str
-    task: TaskMessage                 # message of the latest attempt
-    index: int                        # creation order within the stage
-    attempts: int = 0                 # submissions so far
-    last_submit: float = 0.0
-    done: bool = False
-    failed: bool = False
-    skipped: bool = False             # conditional edge: never submitted
-    result: dict | None = None
-
-
 class _CampaignRun:
-    def __init__(self, campaign_id: str, spec: PipelineSpec,
-                 items: list, params: dict, weight: float = 1.0):
-        self.campaign_id = campaign_id
+    """Runtime envelope around one campaign's pure state: the spec (code —
+    predicates and scripts are not journaled), wall-clock watchdog timers,
+    and the completion latch. Everything else lives in ``self.state``."""
+
+    def __init__(self, spec: PipelineSpec, campaign_id: str,
+                 recovered: bool = False):
         self.spec = spec
-        self.items = items
-        self.params = params
-        self.weight = weight
-        self.status = CampaignStatus(campaign_id=campaign_id,
-                                     pipeline=spec.name)
-        expected = spec.expected_counts(len(items))
-        for st in spec.topological():
-            self.status.stages[st.name] = StageStatus(
-                name=st.name, script=st.script, expected=expected[st.name])
-        self.tasks: dict[str, _PTask] = {}
-        self.by_stage: dict[str, list[str]] = {n: [] for n in spec.stages}
-        self.ready: dict[str, deque[str]] = {n: deque() for n in spec.stages}
-        self.joins_fired: set[str] = set()
+        self.campaign_id = campaign_id
+        self.state = CampaignState(spec, campaign_id)
+        self.last_submit: dict[str, float] = {}
         self.completion = threading.Event()
         self.last_publish = 0.0
+        self.recovered = recovered
+        self.created_at = time.time()
 
-    def stage_complete(self, name: str) -> bool:
-        return self.status.stages[name].complete
+    @property
+    def status(self) -> CampaignStatus:
+        """A live view over the reducer state (stage objects are shared, so
+        counters advance in place, matching the pre-refactor behaviour)."""
+        st = CampaignStatus(campaign_id=self.campaign_id,
+                            pipeline=self.state.pipeline,
+                            state=self.state.state)
+        st.stages = self.state.stages
+        st.started_at = self.state.started_at or self.created_at
+        st.finished_at = self.state.finished_at
+        st.failure = self.state.failure
+        return st
 
 
 class PipelineAgent:
@@ -99,7 +104,10 @@ class PipelineAgent:
     Multiple campaigns (even over different :class:`PipelineSpec`\\ s) can run
     concurrently through one agent; tasks from campaigns this agent does not
     own are ignored (unknown task_id), so several pipeline agents can share a
-    prefix the way several MonitorAgents can (§3).
+    prefix the way several MonitorAgents can (§3). ``journal=False`` disables
+    the write-ahead journal (state is still folded from events in memory) —
+    for benchmarks quantifying the append overhead, and embedders that accept
+    losing recoverability.
     """
 
     def __init__(self, broker: Broker, prefix: str = "ksa", *,
@@ -110,7 +118,8 @@ class PipelineAgent:
                  retain_finished: int | None = 32,
                  placement: PlacementPolicy | None = None,
                  lease: LeasePolicy | None = None,
-                 max_in_flight_total: int | None = None):
+                 max_in_flight_total: int | None = None,
+                 journal: bool = True):
         self.broker = broker
         self.prefix = prefix
         self.topics = topic_names(prefix)
@@ -121,12 +130,12 @@ class PipelineAgent:
         # long-lived agents serve a stream of campaigns; keep only the most
         # recent `retain_finished` finished runs (None = keep all).
         self.retain_finished = retain_finished
-        # how concurrent campaigns share `-new` capacity: FairShare weighted
-        # round-robin by default; max_in_flight_total optionally bounds the
-        # agent-wide number of outstanding tasks (None = per-stage bounds
-        # only, matching the pre-lease behaviour).
         self._lease = lease or FairShare()
         self.max_in_flight_total = max_in_flight_total
+        self.journal = journal
+        # the journal must never age out under a broker-wide retention cap —
+        # replay needs every event back to the oldest live campaign.
+        broker.create_topic(self.topics["campaigns"], retention_records=None)
         self._submitter = Submitter(broker, prefix, placement=placement)
         self._producer = Producer(broker)
         gid = f"{prefix}-pipeline-{self.agent_id}"
@@ -135,9 +144,47 @@ class PipelineAgent:
             group_id=gid, member_id=f"{gid}-member")
         self._campaigns: dict[str, _CampaignRun] = {}
         self._task_index: dict[str, str] = {}  # task_id -> campaign_id
+        self.events_journaled = 0
         self._lock = threading.RLock()
         self._stop = threading.Event()
+        self._crashed = threading.Event()  # test hook: simulate kill -9
         self._thread: threading.Thread | None = None
+
+    # -- journal / fold plumbing ----------------------------------------------
+
+    def _emit(self, run: _CampaignRun, ev: JournalEvent) -> None:
+        """Write-ahead: stamp, journal, then fold. Call with the lock held.
+        Everything the agent does to campaign state goes through here."""
+        ev = dataclasses.replace(ev, seq=run.state.seq + 1, ts=time.time())
+        if self.journal:
+            self._producer.send(self.topics["campaigns"], ev.to_dict(),
+                                key=run.campaign_id)
+            self.events_journaled += 1
+        run.state.apply(ev)
+        tid = getattr(ev, "task_id", "")
+        if tid:  # planned/skipped tasks become addressable for fencing
+            self._task_index[tid] = run.campaign_id
+
+    def _submit_record(self, run: _CampaignRun, task_id: str) -> None:
+        """Grant a lease (journaled) and put the task on ``-new``."""
+        rec = run.state.tasks[task_id]
+        attempt = rec.attempts
+        self._emit(run, LeaseGranted(campaign_id=run.campaign_id,
+                                     task_id=task_id, attempt=attempt))
+        run.last_submit[task_id] = time.time()
+        st = run.spec.stages[rec.stage]
+        task = TaskMessage(
+            task_id=task_id,
+            script=st.script,
+            params={**run.state.params, **dict(st.params), **rec.params},
+            resources=st.resources,
+            timeout_s=st.timeout_s,
+            attempt=attempt,
+            campaign_id=run.campaign_id,
+            stage=rec.stage,
+            dep_ids=list(rec.dep_ids),
+        )
+        self._submitter.submit_task(task)
 
     # -- campaign submission -------------------------------------------------
 
@@ -167,56 +214,16 @@ class PipelineAgent:
         with self._lock:
             if cid in self._campaigns:
                 raise PipelineError(f"campaign {cid!r} already exists")
-            run = _CampaignRun(cid, spec, items, dict(params or {}),
-                               weight=weight)
+            run = _CampaignRun(spec, cid)
             self._campaigns[cid] = run
-            for st in spec.sources():
-                if st.fan_out is None:
-                    batches = [items]
-                else:
-                    batches = [items[i:i + st.fan_out]
-                               for i in range(0, len(items), st.fan_out)] \
-                        or [[]]
-                for bi, batch in enumerate(batches):
-                    self._plan_task(run, st, {"batch": list(batch),
-                                              "batch_index": bi}, [])
+            self._emit(run, CampaignSubmitted(
+                campaign_id=cid, pipeline=spec.name, items=tuple(items),
+                params=dict(params or {}), weight=weight))
+            for ev in plan_sources(run.state):
+                self._emit(run, ev)
             self._pump_all()
             self._publish(run, force=True)
         return cid
-
-    def _plan_task(self, run: _CampaignRun, st: Stage,
-                   extra: Mapping[str, Any], dep_ids: list) -> None:
-        idx = len(run.by_stage[st.name])
-        task = TaskMessage(
-            task_id=f"{run.campaign_id}-{st.name}-{idx:05d}",
-            script=st.script,
-            params={**run.params, **dict(st.params), **dict(extra)},
-            resources=st.resources,
-            timeout_s=st.timeout_s,
-            campaign_id=run.campaign_id,
-            stage=st.name,
-            dep_ids=list(dep_ids),
-        )
-        pt = _PTask(stage=st.name, task=task, index=idx)
-        run.tasks[task.task_id] = pt
-        run.by_stage[st.name].append(task.task_id)
-        run.ready[st.name].append(task.task_id)
-        self._task_index[task.task_id] = run.campaign_id
-
-    def _plan_skip(self, run: _CampaignRun, st: Stage) -> None:
-        """Conditional edge: record a task as skipped (never submitted) and
-        cascade — its own downstream map tasks are skipped too, and join
-        barriers treat it as complete-with-no-result."""
-        idx = len(run.by_stage[st.name])
-        task = TaskMessage(
-            task_id=f"{run.campaign_id}-{st.name}-{idx:05d}",
-            script=st.script, campaign_id=run.campaign_id, stage=st.name)
-        pt = _PTask(stage=st.name, task=task, index=idx, skipped=True)
-        run.tasks[task.task_id] = pt
-        run.by_stage[st.name].append(task.task_id)
-        self._task_index[task.task_id] = run.campaign_id
-        run.status.stages[st.name].skipped += 1
-        self._advance(run, pt)
 
     # -- backpressure / fair-share pump ---------------------------------------
 
@@ -224,10 +231,11 @@ class PipelineAgent:
         """The first stage (topological order) with a ready task that fits
         under its ``max_in_flight`` bound, or None."""
         for st in run.spec.topological():
-            if not run.ready[st.name]:
+            if not run.state.ready[st.name]:
                 continue
             bound = st.max_in_flight
-            if bound is None or run.status.stages[st.name].in_flight < bound:
+            if bound is None or \
+                    run.state.stages[st.name].in_flight < bound:
                 return st
         return None
 
@@ -246,10 +254,11 @@ class PipelineAgent:
         if self.max_in_flight_total is not None:
             outstanding = sum(
                 ss.in_flight
-                for r in self._campaigns.values() if not r.status.done
-                for ss in r.status.stages.values())
-        candidates = {cid: r.weight for cid, r in self._campaigns.items()
-                      if not r.status.done
+                for r in self._campaigns.values() if not r.state.done
+                for ss in r.state.stages.values())
+        candidates = {cid: r.state.weight
+                      for cid, r in self._campaigns.items()
+                      if not r.state.done
                       and self._next_stage(r) is not None}
         while candidates:
             if self.max_in_flight_total is not None \
@@ -261,12 +270,7 @@ class PipelineAgent:
             if st is None:  # safety net; normally pruned after submit
                 del candidates[cid]
                 continue
-            tid = run.ready[st.name].popleft()
-            pt = run.tasks[tid]
-            pt.attempts += 1
-            pt.last_submit = time.time()
-            run.status.stages[st.name].submitted += 1
-            self._submitter.submit_task(pt.task)
+            self._submit_record(run, run.state.ready[st.name][0])
             outstanding += 1
             if self._next_stage(run) is None:
                 del candidates[cid]
@@ -287,47 +291,33 @@ class PipelineAgent:
             if cid is None:
                 return  # not one of ours (flat task or another agent's)
             run = self._campaigns[cid]
-            pt = run.tasks[res.task_id]
-            ss = run.status.stages[pt.stage]
-            if pt.done or pt.failed or pt.skipped or run.status.done:
+            rec = run.state.tasks[res.task_id]
+            if rec.terminal or run.state.done:
                 # fencing: duplicate results, late results for retry-exhausted
-                # tasks, and stragglers of an already-failed campaign never
-                # advance the DAG (a FAILED verdict must stay final).
-                ss.duplicates += 1
+                # tasks, replayed attempts absorbed after a recovery, and
+                # stragglers of an already-failed campaign never advance the
+                # DAG (a FAILED verdict must stay final).
+                run.state.count_duplicate(res.task_id)
                 return
-            pt.done = True
-            pt.result = res.result
-            ss.done += 1
-            self._advance(run, pt)
+            self._emit(run, TaskDone(campaign_id=cid, task_id=res.task_id,
+                                     result=res.result))
+            self._advance(run, res.task_id)
             self._pump_all()
-            self._check_complete(run)
+            self._finalize(run)
             self._publish(run)
 
-    def _advance(self, run: _CampaignRun, pt: _PTask) -> None:
-        for ds in run.spec.downstream(pt.stage):
-            if not ds.join:
-                if pt.skipped or (ds.skip_when is not None
-                                  and ds.skip_when(pt.result)):
-                    self._plan_skip(run, ds)
-                else:
-                    self._plan_task(run, ds,
-                                    {"upstream": pt.result,
-                                     "dep_index": pt.index},
-                                    [pt.task.task_id])
-            elif ds.name not in run.joins_fired and \
-                    all(run.stage_complete(d) for d in ds.depends_on):
-                run.joins_fired.add(ds.name)
-                upstream: dict[str, list] = {}
-                dep_ids: list[str] = []
-                for dep in ds.depends_on:
-                    live = [t for t in run.by_stage[dep]
-                            if not run.tasks[t].skipped]
-                    upstream[dep] = [run.tasks[t].result for t in live]
-                    dep_ids.extend(live)
-                if ds.skip_when is not None and ds.skip_when(upstream):
-                    self._plan_skip(run, ds)
-                else:
-                    self._plan_task(run, ds, {"upstream": upstream}, dep_ids)
+    def _advance(self, run: _CampaignRun, task_id: str) -> None:
+        """Plan (and journal) everything that follows a terminal task; skip
+        cascades feed back into the worklist so an entire skipped subtree is
+        planned in one pass."""
+        queue = [task_id]
+        while queue:
+            tid = queue.pop(0)
+            for ev in plan_downstream(run.state, tid):
+                self._emit(run, ev)
+                if isinstance(ev, StageSkipped):
+                    queue.append(ev.task_id)
+        self._finalize(run)
 
     def _on_error(self, err: ErrorMessage) -> None:
         with self._lock:
@@ -335,85 +325,80 @@ class PipelineAgent:
             if cid is None:
                 return
             run = self._campaigns[cid]
-            pt = run.tasks[err.task_id]
-            if pt.done or pt.failed or pt.skipped:
+            rec = run.state.tasks[err.task_id]
+            if rec.terminal or run.state.done:
                 return
-            if err.attempt < pt.task.attempt:
+            if err.attempt < rec.attempts - 1:
                 return  # fenced: an older attempt failing after a resubmit
-            run.status.stages[pt.stage].errors += 1
-            self._retry_or_fail(run, pt, reason=f"error: {err.error}")
+            self._retry_or_fail(run, err.task_id, cause="error",
+                                reason=f"error: {err.error}")
 
     # -- watchdog / retries ------------------------------------------------------
 
-    def _retry_or_fail(self, run: _CampaignRun, pt: _PTask,
-                       reason: str) -> None:
-        st = run.spec.stages[pt.stage]
-        ss = run.status.stages[pt.stage]
-        if pt.attempts < st.retry.max_attempts:
-            pt.task = pt.task.retry()
-            pt.attempts += 1
-            pt.last_submit = time.time()
-            ss.retried += 1
-            self._submitter.submit_task(pt.task)
+    def _retry_or_fail(self, run: _CampaignRun, task_id: str, *,
+                       cause: str, reason: str) -> None:
+        rec = run.state.tasks[task_id]
+        st = run.spec.stages[rec.stage]
+        if rec.attempts < st.retry.max_attempts:
+            if cause == "error":
+                self._emit(run, TaskFailed(campaign_id=run.campaign_id,
+                                           task_id=task_id, reason=reason,
+                                           cause=cause, final=False))
+            self._submit_record(run, task_id)
             log.info("campaign %s: resubmitted %s (attempt %d, %s)",
-                     run.campaign_id, pt.task.task_id, pt.task.attempt,
-                     reason)
+                     run.campaign_id, task_id, rec.attempts - 1, reason)
         else:
-            pt.failed = True
-            ss.failed += 1
-            run.status.state = CampaignState.FAILED
-            run.status.failure = (f"stage {pt.stage!r} task "
-                                  f"{pt.task.task_id} exhausted "
-                                  f"{st.retry.max_attempts} attempts "
-                                  f"({reason})")
-            run.status.finished_at = time.time()
-            run.completion.set()
-            self._publish(run, force=True)
+            self._emit(run, TaskFailed(
+                campaign_id=run.campaign_id, task_id=task_id,
+                reason=(f"stage {rec.stage!r} task {task_id} exhausted "
+                        f"{st.retry.max_attempts} attempts ({reason})"),
+                cause=cause, final=True))
+            self._finalize(run)
             log.warning("campaign %s FAILED: %s",
-                        run.campaign_id, run.status.failure)
-            self._evict_finished()
+                        run.campaign_id, run.state.failure)
 
     def _watchdog(self) -> None:
         now = time.time()
         with self._lock:
             for run in self._campaigns.values():
-                if run.status.done:
+                if run.state.done:
                     continue
                 for st in run.spec.topological():
                     timeout = st.retry.timeout_s or self.default_task_timeout_s
                     if timeout is None:
                         continue
-                    for tid in run.by_stage[st.name]:
-                        pt = run.tasks[tid]
-                        if pt.done or pt.failed or pt.skipped \
-                                or pt.attempts == 0:
+                    for tid in run.state.by_stage[st.name]:
+                        rec = run.state.tasks[tid]
+                        if rec.terminal or rec.attempts == 0:
                             continue
-                        if now - pt.last_submit > timeout:
+                        last = run.last_submit.get(tid, run.created_at)
+                        if now - last > timeout:
                             self._retry_or_fail(
-                                run, pt,
+                                run, tid, cause="timeout",
                                 reason=f"no result after {timeout:.1f}s")
-                        if run.status.done:
+                        if run.state.done:
                             return
 
-    def _check_complete(self, run: _CampaignRun) -> None:
-        if run.status.done:
+    def _finalize(self, run: _CampaignRun) -> None:
+        """Latch a terminal reducer state into the runtime side effects
+        (completion event, forced snapshot, retention eviction)."""
+        if not run.state.done or run.completion.is_set():
             return
-        if all(run.stage_complete(n) for n in run.spec.stages):
-            run.status.state = CampaignState.COMPLETED
-            run.status.finished_at = time.time()
-            run.completion.set()
-            self._publish(run, force=True)
-            self._evict_finished()
+        run.completion.set()
+        self._publish(run, force=True)
+        self._evict_finished()
 
     def _evict_finished(self) -> None:
         """Drop the oldest finished campaigns beyond ``retain_finished`` so a
         resident agent serving a campaign stream doesn't grow without bound.
-        Callers must fetch results before the run ages out of the window."""
+        Callers must fetch results before the run ages out of the window (the
+        journal keeps the events; :meth:`recover` with
+        ``include_finished=True`` can rebuild an evicted campaign)."""
         if self.retain_finished is None:
             return
         finished = sorted((r for r in self._campaigns.values()
-                           if r.status.done),
-                          key=lambda r: r.status.finished_at or 0.0)
+                           if r.state.done),
+                          key=lambda r: r.state.finished_at or 0.0)
         for run in finished[:max(0, len(finished) - self.retain_finished)]:
             self.forget(run.campaign_id)
 
@@ -421,12 +406,134 @@ class PipelineAgent:
         """Release a finished campaign's task table and results."""
         with self._lock:
             run = self._campaigns.get(campaign_id)
-            if run is None or not run.status.done:
+            if run is None or not run.state.done:
                 return
-            for tid in run.tasks:
+            for tid in run.state.tasks:
                 self._task_index.pop(tid, None)
             del self._campaigns[campaign_id]
             self._lease.forget(campaign_id)
+
+    # -- crash recovery ---------------------------------------------------------
+
+    def recover(self, specs: Mapping[str, PipelineSpec] | Iterable[PipelineSpec],
+                *, include_finished: bool = False) -> list[str]:
+        """Reconstruct campaigns from the ``PREFIX-campaigns`` journal after
+        an orchestrator crash. Returns the campaign ids registered.
+
+        ``specs`` maps pipeline names to their :class:`PipelineSpec` (or is an
+        iterable of specs) — the spec is code (scripts, ``skip_when``
+        predicates) and is deliberately not journaled, so the caller must
+        re-supply it; campaigns whose pipeline has no spec are skipped with a
+        warning.
+
+        For every campaign whose replayed state is still live:
+
+        1. fold the journal into a fresh :class:`CampaignState` (duplicate
+           and truncated-tail journal entries are deduped/dropped),
+        2. run the pure repair planners to fill any gap a crash left between
+           journal writes (a ``TaskDone`` whose downstream dispatch was never
+           journaled),
+        3. resubmit only tasks with **no terminal event**: previously leased
+           tasks get a bumped, journaled attempt (counted against the same
+           ``RetryPolicy`` budget the crashed agent was using — replayed
+           retries are not re-counted); tasks already at their budget are
+           left to the watchdog,
+        4. never-leased ready tasks drain through the normal fair-share pump.
+
+        Results that landed on ``-done`` while no orchestrator was alive are
+        absorbed by an explicit replay read *before* deciding what to
+        resubmit (a completed task is terminal, not resubmitted) — relying on
+        the consumer loop alone would race it: a started agent may have
+        polled and dropped those records as not-ours before the campaign was
+        registered. Duplicates (e.g. the pre-crash attempt finishing after
+        its post-recovery resubmission) are fenced against the replayed
+        state; lost ``-error`` records degrade to watchdog timeouts.
+        ``include_finished=True`` also registers campaigns whose journal
+        folds to a terminal state (to re-read their results); they count
+        toward ``retain_finished`` as usual.
+        """
+        if isinstance(specs, Mapping):
+            by_name = dict(specs)
+        else:
+            by_name = {s.name: s for s in specs}
+        records = [r.value
+                   for r in self.broker.read_from(self.topics["campaigns"])]
+        journals = group_journal(records)
+        recovered: list[str] = []
+        with self._lock:
+            # every result the cluster has ever produced for this prefix;
+            # read under the lock so nothing can slip between this scan and
+            # campaign registration (the loop needs the lock to ingest)
+            downtime_results = [
+                ResultMessage.from_dict(r.value)
+                for r in self.broker.read_from(self.topics["done"])]
+            for cid, events in journals.items():
+                if cid in self._campaigns:
+                    continue  # already live on this agent
+                sub = next((e for e in events
+                            if isinstance(e, CampaignSubmitted)), None)
+                if sub is None:
+                    log.warning("journal for %s has no CampaignSubmitted "
+                                "(truncated head?) — skipping", cid)
+                    continue
+                spec = by_name.get(sub.pipeline)
+                if spec is None:
+                    log.warning("no spec supplied for pipeline %r — skipping "
+                                "campaign %s", sub.pipeline, cid)
+                    continue
+                state = CampaignState.fold(spec, cid, events)
+                if state.done and not include_finished:
+                    continue  # finished (possibly evicted) campaign
+                run = _CampaignRun(spec, cid, recovered=True)
+                run.state = state
+                self._campaigns[cid] = run
+                for tid in state.tasks:
+                    self._task_index[tid] = cid
+                self._repair(run)
+                # absorb results produced while no orchestrator was alive:
+                # first result per task wins, exactly like live ingestion
+                for res in downtime_results:
+                    rec = state.tasks.get(res.task_id)
+                    if rec is None or rec.terminal or state.done:
+                        # unknown, already folded from the journal (the
+                        # usual case — not a duplicate), or moot
+                        continue
+                    self._emit(run, TaskDone(campaign_id=cid,
+                                             task_id=res.task_id,
+                                             result=res.result))
+                    self._advance(run, res.task_id)
+                now = time.time()
+                for tid, rec in list(state.tasks.items()):
+                    if rec.terminal or rec.attempts == 0:
+                        continue
+                    st = run.spec.stages[rec.stage]
+                    if rec.attempts < st.retry.max_attempts:
+                        # no terminal event for this lease: resubmit with a
+                        # bumped (journaled) attempt; the stale attempt's
+                        # result, if it ever lands, is fenced as a duplicate
+                        self._submit_record(run, tid)
+                    else:
+                        # budget already spent pre-crash; give the in-flight
+                        # attempt a fresh watchdog window instead of failing
+                        # the campaign on sight
+                        run.last_submit[tid] = now
+                self._finalize(run)
+                self._publish(run, force=True)
+                recovered.append(cid)
+                log.info("recovered campaign %s (%s, %d events, state=%s)",
+                         cid, sub.pipeline, len(events), state.state)
+            self._pump_all()
+        return recovered
+
+    def _repair(self, run: _CampaignRun) -> None:
+        """Re-run the pure planners over replayed state to journal anything a
+        crash dropped between a fact event and its follow-up planning events.
+        Both planners are guard-checked, so this is a no-op on a clean
+        journal."""
+        for ev in plan_sources(run.state):
+            self._emit(run, ev)
+        for tid in [t for t, r in run.state.tasks.items() if r.terminal]:
+            self._advance(run, tid)
 
     # -- progress publishing (PREFIX-campaigns) -----------------------------------
 
@@ -436,9 +543,10 @@ class PipelineAgent:
             return
         run.last_publish = now
         ev = CampaignEvent(
-            campaign_id=run.campaign_id, pipeline=run.spec.name,
-            state=run.status.state, agent_id=self.agent_id,
-            stages={n: s.to_dict() for n, s in run.status.stages.items()})
+            campaign_id=run.campaign_id, pipeline=run.state.pipeline,
+            state=run.state.state, agent_id=self.agent_id,
+            stages={n: s.to_dict() for n, s in run.state.stages.items()},
+            recovered=run.recovered)
         self._producer.send(self.topics["campaigns"], ev.to_dict(),
                             key=run.campaign_id)
 
@@ -461,11 +569,11 @@ class PipelineAgent:
     def results(self, campaign_id: str) -> dict[str, list]:
         """Per-stage results in task-creation order (completed tasks only)."""
         with self._lock:
-            run = self._campaigns[campaign_id]
+            state = self._campaigns[campaign_id].state
             return {
-                n: [run.tasks[t].result for t in tids
-                    if run.tasks[t].result is not None]
-                for n, tids in run.by_stage.items()
+                n: [state.tasks[t].result for t in tids
+                    if state.tasks[t].result is not None]
+                for n, tids in state.by_stage.items()
             }
 
     def final_result(self, campaign_id: str) -> Any:
@@ -473,12 +581,13 @@ class PipelineAgent:
         join barrier) the result dict itself, else {stage: [results...]}."""
         with self._lock:
             run = self._campaigns[campaign_id]
+            state = run.state
             terms = run.spec.terminals()
-            if len(terms) == 1 and len(run.by_stage[terms[0].name]) == 1:
-                tid = run.by_stage[terms[0].name][0]
-                return run.tasks[tid].result
-            return {t.name: [run.tasks[tid].result
-                             for tid in run.by_stage[t.name]]
+            if len(terms) == 1 and len(state.by_stage[terms[0].name]) == 1:
+                tid = state.by_stage[terms[0].name][0]
+                return state.tasks[tid].result
+            return {t.name: [state.tasks[tid].result
+                             for tid in state.by_stage[t.name]]
                     for t in terms}
 
     def stats(self) -> dict:
@@ -487,10 +596,15 @@ class PipelineAgent:
                 "agent_id": self.agent_id,
                 "campaigns": len(self._campaigns),
                 "running": sum(1 for r in self._campaigns.values()
-                               if not r.status.done),
+                               if not r.state.done),
                 "lease": type(self._lease).__name__,
-                "weights": {c: r.weight for c, r in self._campaigns.items()
-                            if not r.status.done},
+                "weights": {c: r.state.weight
+                            for c, r in self._campaigns.items()
+                            if not r.state.done},
+                "journal": self.journal,
+                "events_journaled": self.events_journaled,
+                "recovered_campaigns": sum(
+                    1 for r in self._campaigns.values() if r.recovered),
             }
 
     # -- main loop ------------------------------------------------------------------
@@ -503,7 +617,7 @@ class PipelineAgent:
         return self
 
     def _loop(self) -> None:
-        while not self._stop.is_set():
+        while not self._stop.is_set() and not self._crashed.is_set():
             try:
                 batches = self._consumer.poll(timeout=self.poll_interval_s)
                 for tp, recs in batches.items():
@@ -517,9 +631,21 @@ class PipelineAgent:
             except Exception:  # pragma: no cover - defensive
                 log.exception("pipeline agent %s loop error", self.agent_id)
                 time.sleep(self.poll_interval_s)
-        self._consumer.close()
+        # a crashed agent leaves its group membership to expire, as a dead
+        # process would — only a graceful stop closes the consumer.
+        if not self._crashed.is_set():
+            self._consumer.close()
 
     def stop(self, timeout: float = 5.0) -> None:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=timeout)
+
+    def crash(self) -> None:
+        """Test hook: die abruptly — no drain, no group leave, and no further
+        journal appends or task submissions (both producers are killed, as a
+        dead process's would be). The journal already on the broker is all a
+        recovering agent gets — exactly the ``kill -9`` contract."""
+        self._crashed.set()
+        self._producer.kill()
+        self._submitter._producer.kill()

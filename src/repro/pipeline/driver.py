@@ -17,7 +17,8 @@ from repro.core.broker import Broker
 
 from .agent import PipelineAgent, PipelineError
 from .spec import PipelineSpec
-from .status import CampaignState, CampaignStatus
+from .state import CampaignState
+from .status import CampaignStatus
 
 
 @dataclasses.dataclass

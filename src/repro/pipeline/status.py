@@ -1,11 +1,13 @@
-"""Per-campaign / per-stage progress state.
+"""Per-campaign / per-stage progress *views*.
 
 These counters are the campaign-level analogue of the paper's per-task status
-table (§3): the :class:`~repro.pipeline.agent.PipelineAgent` maintains them
-locally, publishes snapshots on the ``PREFIX-campaigns`` topic, and the
-MonitorAgent mirrors the latest snapshot per campaign into its REST API
-(``/campaigns``), so dashboards see DAG progress without talking to the
-pipeline agent directly.
+table (§3). Since the event-sourcing refactor the source of truth is the
+:class:`~repro.pipeline.state.CampaignState` reducer (folded from the
+``PREFIX-campaigns`` journal); the :class:`StageStatus` counters live inside
+it and :class:`CampaignStatus` is the snapshot the agent publishes on
+``PREFIX-campaigns`` and the MonitorAgent mirrors into its REST API
+(``/campaigns``). The ``RUNNING`` / ``COMPLETED`` / ``FAILED`` phase
+constants moved to ``CampaignState`` in :mod:`repro.pipeline.state`.
 """
 from __future__ import annotations
 
@@ -13,11 +15,7 @@ import dataclasses
 import time
 from typing import Any, Mapping
 
-
-class CampaignState:
-    RUNNING = "RUNNING"
-    COMPLETED = "COMPLETED"
-    FAILED = "FAILED"
+_TERMINAL = ("COMPLETED", "FAILED")
 
 
 @dataclasses.dataclass
@@ -62,7 +60,7 @@ class StageStatus:
 class CampaignStatus:
     campaign_id: str
     pipeline: str
-    state: str = CampaignState.RUNNING
+    state: str = "RUNNING"
     stages: dict[str, StageStatus] = dataclasses.field(default_factory=dict)
     started_at: float = dataclasses.field(default_factory=time.time)
     finished_at: float | None = None
@@ -70,7 +68,7 @@ class CampaignStatus:
 
     @property
     def done(self) -> bool:
-        return self.state in (CampaignState.COMPLETED, CampaignState.FAILED)
+        return self.state in _TERMINAL
 
     def progress(self) -> float:
         total = sum(s.expected for s in self.stages.values())
@@ -97,7 +95,7 @@ class CampaignStatus:
     def from_snapshot(cls, d: Mapping[str, Any]) -> "CampaignStatus":
         """Rebuild from a ``to_dict`` snapshot (monitor-side mirroring)."""
         st = cls(campaign_id=d["campaign_id"], pipeline=d.get("pipeline", ""),
-                 state=d.get("state", CampaignState.RUNNING))
+                 state=d.get("state", "RUNNING"))
         for name, sd in d.get("stages", {}).items():
             st.stages[name] = StageStatus(
                 name=name, script=sd.get("script", ""),

@@ -1,6 +1,10 @@
 """Pipeline semantics: spec validation, fan-out → map → join execution,
 duplicate-result fencing at the barrier, backpressure, watchdog recovery
-from a mid-campaign agent kill, and the /campaigns REST mirror."""
+from a mid-campaign agent kill, the /campaigns REST mirror, and the
+event-sourced durability contract — journal replay idempotence, truncated
+tails, evicted campaigns, journaled retry budgets, and orchestrator-kill
+crash recovery via PipelineAgent.recover()."""
+import dataclasses
 import json
 import time
 import urllib.request
@@ -11,8 +15,11 @@ from repro.core import (Broker, ClusterComputing, MonitorAgent, Submitter,
                         WorkerAgent, register_script)
 from repro.core.broker import Producer
 from repro.core.messages import ResultMessage, topic_names
-from repro.pipeline import (PipelineAgent, PipelineError, PipelineSpec,
-                            RetryPolicy, SpecError, Stage, run_campaign)
+from repro.pipeline import (BarrierReleased, CampaignState, CampaignSubmitted,
+                            LeaseGranted, PipelineAgent, PipelineError,
+                            PipelineSpec, RetryPolicy, SpecError, Stage,
+                            StageDispatched, TaskDone, run_campaign)
+from repro.pipeline.state import group_journal
 
 
 # ---------------------------------------------------------------------------
@@ -398,7 +405,13 @@ def test_monitor_campaigns_rest_endpoint():
         assert stages["src"]["done"] == stages["src"]["expected"] == 2
         assert stages["agg"]["done"] == 1
         assert stages["agg"]["in_flight"] == 0
-        assert get("/summary")["campaigns"] >= 1
+        # recovery status: the write-ahead journal is tallied per campaign
+        assert one["journal"]["events"] > 5
+        assert one["journal"]["last_seq"] == one["journal"]["events"] - 1
+        assert one["recovered"] is False
+        summary = get("/summary")
+        assert summary["campaigns"] >= 1
+        assert summary["journal_events"] >= one["journal"]["events"]
     finally:
         w.stop()
         mon.stop()
@@ -498,6 +511,327 @@ def test_skip_when_on_join_skips_terminal_stage():
     finally:
         pipe.stop()
         w.stop()
+        broker.close()
+
+
+# ---------------------------------------------------------------------------
+# event-sourced durability: journal replay + crash recovery
+# ---------------------------------------------------------------------------
+
+def _produce_journal(broker, prefix, events):
+    """Hand-write a campaign journal (seq-stamped) onto PREFIX-campaigns —
+    simulates what a now-dead orchestrator left behind."""
+    prod = Producer(broker)
+    topics = topic_names(prefix)
+    for i, ev in enumerate(events):
+        ev = dataclasses.replace(ev, seq=i, ts=time.time())
+        prod.send(topics["campaigns"], ev.to_dict(), key=ev.campaign_id)
+
+
+def _read_journal(broker, prefix, campaign_id):
+    topics = topic_names(prefix)
+    records = [r.value for r in broker.read_from(topics["campaigns"])]
+    return group_journal(records).get(campaign_id, [])
+
+
+def test_orchestrator_kill_recovery_resumes_knot_campaign():
+    """ISSUE acceptance: kill -9 the orchestrator mid-campaign; a fresh
+    pipeline agent folds the journal via recover() and resumes the knots
+    campaign to COMPLETED with knot-count parity vs an uninterrupted run and
+    zero duplicate terminal-stage executions."""
+    from repro.apps import knots
+    broker = Broker(default_partitions=2)
+    ids = list(range(24))
+    spec = knots.knots_pipeline(4, n_points=64)
+    try:
+        # uninterrupted baseline on its own prefix (same broker — the broker
+        # is the shared infrastructure that survives, like the paper's Kafka)
+        wb = [WorkerAgent(broker, "rcb", slots=1, poll_interval_s=0.01).start()
+              for _ in range(2)]
+        base = run_campaign(spec, ids, broker=broker, prefix="rcb",
+                            timeout_s=240.0).final
+        for w in wb:
+            w.stop()
+
+        ws = [WorkerAgent(broker, "rca", slots=1, poll_interval_s=0.01).start()
+              for _ in range(2)]
+        pipe1 = PipelineAgent(broker, "rca", poll_interval_s=0.01).start()
+        cid = pipe1.submit_campaign(spec, ids, campaign_id="camp-rec")
+        # crash while screen tasks are mid-flight, long before the terminal
+        # aggregate barrier exists
+        assert _wait(lambda: pipe1.status(cid).stages["screen"].done >= 1,
+                     timeout=120.0)
+        pipe1.crash()
+
+        pipe2 = PipelineAgent(broker, "rca", agent_id="recovery",
+                              poll_interval_s=0.01).start()
+        assert pipe2.recover([spec]) == [cid]
+        st = pipe2.wait(cid, timeout=240.0)
+        assert st.state == "COMPLETED", st.failure
+        # knot-count parity with the uninterrupted baseline
+        final = pipe2.final_result(cid)
+        assert final["knotted"] == base["knotted"]
+        assert final["cores"] == base["cores"]
+        assert final["processed"] == len(ids)
+        # zero duplicate terminal-stage executions: the aggregate barrier
+        # was planned, submitted, and executed exactly once
+        agg = st.stages["aggregate"]
+        assert agg.submitted == 1 and agg.done == 1
+        assert agg.retried == 0 and agg.duplicates == 0
+        pipe2.stop()
+        for w in ws:
+            w.stop()
+    finally:
+        broker.close()
+
+
+def test_reducer_fold_is_idempotent_under_duplicate_suffix():
+    """fold(events) == fold(events + dup_suffix): at-least-once journal
+    delivery (or a replayed tail) must not change the folded state."""
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "ri", slots=2, poll_interval_s=0.005).start()
+    spec = _three_stage(fan_out=2)
+    try:
+        res = run_campaign(spec, [1, 2, 3, 4], broker=broker, prefix="ri",
+                           timeout_s=60.0)
+        events = _read_journal(broker, "ri", res.campaign_id)
+        assert len(events) > 10  # submitted + dispatched + leases + dones
+        st1 = CampaignState.fold(spec, res.campaign_id, events)
+        st2 = CampaignState.fold(spec, res.campaign_id,
+                                 events + events[-5:] + [events[3]])
+        assert st1 == st2
+        assert st1.state == "COMPLETED"
+        assert st1.stages["agg"].done == 1
+        # group_journal itself dedupes repeated records (at-least-once reads)
+        doubled = [e.to_dict() for e in events] * 2
+        assert group_journal(doubled)[res.campaign_id] == events
+    finally:
+        w.stop()
+        broker.close()
+
+
+def test_recovery_repairs_truncated_journal_tail():
+    """A crash between journal writes: TaskDone persisted but its downstream
+    StageDispatched lost. The repair pass re-plans the gap from the pure
+    planners and the campaign still completes."""
+    broker = Broker(default_partitions=2)
+    spec = PipelineSpec("tr", [
+        Stage("src", "pl_double"),
+        Stage("fwd", "pl_pass", depends_on=("src",)),
+    ])
+    cid, src = "camp-trunc", "camp-trunc-src-00000"
+    _produce_journal(broker, "tr", [
+        CampaignSubmitted(campaign_id=cid, pipeline="tr", items=(1, 2),
+                          params={}, weight=1.0),
+        StageDispatched(campaign_id=cid, stage="src", task_id=src, index=0,
+                        params={"batch": [1, 2], "batch_index": 0}),
+        LeaseGranted(campaign_id=cid, task_id=src, attempt=0),
+        TaskDone(campaign_id=cid, task_id=src, result={"values": [2, 4]}),
+        # truncated here: the fwd StageDispatched never made it out
+    ])
+    w = WorkerAgent(broker, "tr", slots=1, poll_interval_s=0.005).start()
+    pipe = PipelineAgent(broker, "tr", poll_interval_s=0.005).start()
+    try:
+        assert pipe.recover([spec]) == [cid]
+        st = pipe.wait(cid, timeout=30.0)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["src"].done == 1  # replayed, not re-executed
+        assert st.stages["fwd"].done == 1  # repaired + executed
+        assert pipe.results(cid)["fwd"][0]["values"] == [2, 4]
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_recovery_repairs_torn_barrier_release():
+    """The other torn-write shape: BarrierReleased journaled but the join
+    task's StageDispatched lost. The repair pass must re-plan the join task
+    (without double-firing the barrier) instead of hanging at RUNNING."""
+    broker = Broker(default_partitions=2)
+    spec = PipelineSpec("tb", [
+        Stage("work", "pl_double"),
+        Stage("agg", "pl_sum_batches", depends_on=("work",), join=True),
+    ])
+    cid, src = "camp-torn", "camp-torn-work-00000"
+    _produce_journal(broker, "tb", [
+        CampaignSubmitted(campaign_id=cid, pipeline="tb", items=(1, 2),
+                          params={}, weight=1.0),
+        StageDispatched(campaign_id=cid, stage="work", task_id=src, index=0,
+                        params={"batch": [1, 2], "batch_index": 0}),
+        LeaseGranted(campaign_id=cid, task_id=src, attempt=0),
+        TaskDone(campaign_id=cid, task_id=src, result={"batch": [1, 2]}),
+        BarrierReleased(campaign_id=cid, stage="agg"),
+        # torn here: the agg StageDispatched never hit the journal
+    ])
+    w = WorkerAgent(broker, "tb", slots=1, poll_interval_s=0.005).start()
+    pipe = PipelineAgent(broker, "tb", poll_interval_s=0.005).start()
+    try:
+        assert pipe.recover([spec]) == [cid]
+        st = pipe.wait(cid, timeout=30.0)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["agg"].submitted == 1  # fired exactly once
+        assert pipe.final_result(cid)["n_batches"] == 1
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_recovery_absorbs_results_produced_while_down():
+    """A worker finished a task while no orchestrator was alive AND the task
+    had already spent its whole retry budget: recovery must absorb the
+    success from `-done` (never re-execute or fail it), even though the
+    agent's consumer loop may have drained the record before the campaign
+    was registered."""
+    broker = Broker(default_partitions=2)
+    spec = PipelineSpec("ab", [
+        Stage("w", "pl_slow", params={"duration": 9.0},
+              retry=RetryPolicy(max_attempts=2, timeout_s=0.5)),
+    ])
+    cid, tid = "camp-absorb", "camp-absorb-w-00000"
+    _produce_journal(broker, "ab", [
+        CampaignSubmitted(campaign_id=cid, pipeline="ab", items=(1,),
+                          params={}, weight=1.0),
+        StageDispatched(campaign_id=cid, stage="w", task_id=tid, index=0,
+                        params={"batch": [1], "batch_index": 0}),
+        LeaseGranted(campaign_id=cid, task_id=tid, attempt=0),
+        LeaseGranted(campaign_id=cid, task_id=tid, attempt=1),  # budget gone
+    ])
+    # ...and the last attempt actually succeeded during the outage:
+    topics = topic_names("ab")
+    Producer(broker).send(
+        topics["done"],
+        ResultMessage(task_id=tid, agent_id="survivor", attempt=1,
+                      result={"batch": [1]}).to_dict(), key=tid)
+    pipe = PipelineAgent(broker, "ab", poll_interval_s=0.005).start()
+    try:
+        time.sleep(0.1)  # let the loop drain -done before recover registers
+        assert pipe.recover([spec]) == [cid]
+        st = pipe.status(cid)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["w"].done == 1
+        # nothing was resubmitted: no task message ever hit the class topic
+        assert broker.read_from("ab-new.cpu") == []
+    finally:
+        pipe.stop()
+        broker.close()
+
+
+def test_recovery_skips_evicted_finished_campaign():
+    """Journal events for a campaign the agent already evicted
+    (retain_finished): recover() must not resurrect it by default, but
+    include_finished=True rebuilds it for result re-reads."""
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "ev", slots=2, poll_interval_s=0.005).start()
+    spec = PipelineSpec("tiny", [Stage("src", "pl_double", fan_out=4)])
+    pipe = PipelineAgent(broker, "ev", poll_interval_s=0.005,
+                         retain_finished=0).start()
+    try:
+        cid = pipe.submit_campaign(spec, [1, 2, 3])
+        assert _wait(lambda: cid not in pipe.campaigns(), timeout=30.0)
+        # the journal outlives the eviction...
+        assert len(_read_journal(broker, "ev", cid)) > 0
+        # ...but a finished campaign is not resurrected by default
+        rec = PipelineAgent(broker, "ev", agent_id="ev-rec",
+                            poll_interval_s=0.005).start()
+        assert rec.recover([spec]) == []
+        assert rec.recover([spec], include_finished=True) == [cid]
+        st = rec.status(cid)
+        assert st.state == "COMPLETED"
+        assert rec.results(cid)["src"][0]["values"] == [2, 4, 6]
+        # none of its (terminal) tasks were resubmitted
+        assert st.stages["src"].retried == 0
+        rec.stop()
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_recovery_preserves_replayed_retry_budget():
+    """Satellite fix: attempts journaled before the crash count against the
+    RetryPolicy budget after recovery — the watchdog must not grant a fresh
+    budget to a recovering campaign."""
+    broker = Broker(default_partitions=2)
+    spec = PipelineSpec("rb", [
+        Stage("w", "pl_slow", params={"duration": 9.0},
+              retry=RetryPolicy(max_attempts=3, timeout_s=0.3)),
+    ])
+    cid, tid = "camp-budget", "camp-budget-w-00000"
+    # the dead orchestrator had already spent two of the three attempts
+    _produce_journal(broker, "rb", [
+        CampaignSubmitted(campaign_id=cid, pipeline="rb", items=(1,),
+                          params={}, weight=1.0),
+        StageDispatched(campaign_id=cid, stage="w", task_id=tid, index=0,
+                        params={"batch": [1], "batch_index": 0}),
+        LeaseGranted(campaign_id=cid, task_id=tid, attempt=0),
+        LeaseGranted(campaign_id=cid, task_id=tid, attempt=1),
+    ])
+    pipe = PipelineAgent(broker, "rb", poll_interval_s=0.01).start()
+    try:
+        assert pipe.recover([spec]) == [cid]
+        # recovery resubmits the in-flight task once (third and last attempt)
+        st = pipe.status(cid)
+        assert st.stages["w"].retried == 2  # attempts 1 (replayed) + 2 (new)
+        # no workers: the watchdog times the last attempt out and the budget
+        # — already charged for the pre-crash attempts — is exhausted
+        assert _wait(lambda: pipe.status(cid).state == "FAILED", timeout=15.0)
+        assert "exhausted 3 attempts" in pipe.status(cid).failure
+        # exactly ONE task message ever hit the class topic: the recovery
+        # resubmission (the journal records above were never submitted)
+        sent = broker.read_from("rb-new.cpu")
+        assert len(sent) == 1 and sent[0].value["attempt"] == 2
+    finally:
+        pipe.stop()
+        broker.close()
+
+
+def test_recovery_with_already_skipped_stages():
+    """Replay of StageSkipped events: skip_when decisions made before the
+    crash are folded back verbatim (never re-evaluated, never doubled) and
+    the recovered campaign completes with the same skip counts."""
+    spec = PipelineSpec("condrec", [
+        Stage("src", "pl_double", fan_out=1),
+        Stage("fwd", "pl_pass", depends_on=("src",),
+              skip_when=lambda r: r["values"][0] % 4 == 0),  # skip 0 and 2
+        Stage("agg", "pl_sum", depends_on=("src", "fwd"), join=True),
+    ])
+    broker = Broker(default_partitions=2)
+    pipe1 = PipelineAgent(broker, "sr", poll_interval_s=0.005).start()
+    prod = Producer(broker)
+    topics = topic_names("sr")
+    try:
+        cid = pipe1.submit_campaign(spec, [0, 1, 2, 3], campaign_id="camp-sk")
+
+        def done(tid, result):
+            prod.send(topics["done"],
+                      ResultMessage(task_id=tid, agent_id="hand",
+                                    result=result).to_dict(), key=tid)
+
+        # item 0 -> fwd skipped, item 1 -> fwd dispatched; then crash
+        done("camp-sk-src-00000", {"values": [0]})
+        done("camp-sk-src-00001", {"values": [2]})
+        assert _wait(lambda: pipe1.status(cid).stages["fwd"].skipped == 1)
+        pipe1.crash()
+
+        w = WorkerAgent(broker, "sr", slots=2, poll_interval_s=0.005).start()
+        pipe2 = PipelineAgent(broker, "sr", agent_id="rec",
+                              poll_interval_s=0.005).start()
+        assert pipe2.recover([spec]) == [cid]
+        st = pipe2.wait(cid, timeout=60.0)
+        assert st.state == "COMPLETED", st.failure
+        assert st.stages["fwd"].skipped == 2   # replayed skip + items 2
+        assert st.stages["fwd"].done == 2      # items 1 and 3
+        assert st.stages["agg"].done == 1
+        # the replayed skip (fwd-00000) was never submitted to any topic
+        sent = {r.value["task_id"] for r in broker.read_from("sr-new.cpu")}
+        assert "camp-sk-fwd-00000" not in sent
+        final = pipe2.final_result(cid)
+        assert final["n_fwd"] == 2 and final["total"] == 2 + 6
+        pipe2.stop()
+        w.stop()
+    finally:
         broker.close()
 
 

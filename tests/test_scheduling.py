@@ -1,7 +1,9 @@
 """Resource-aware placement, fair-share leasing, and the KsaCluster facade:
 GPU tasks can never execute on CPU-only pools (they queue on the GPU class
-topic instead), weighted campaigns drain in weight proportion, and the facade
-owns component lifecycle (double-start, clean shutdown, aggregated status)."""
+topic instead), weighted campaigns drain in weight proportion, the facade
+owns component lifecycle (double-start, clean shutdown, aggregated status),
+memory is enforced at lease time (worker admission + SimSlurm packing), and
+taints make labelled pools exclusive unless a task tolerates them."""
 import time
 
 import pytest
@@ -9,13 +11,15 @@ import pytest
 from repro.cluster import KsaCluster
 from repro.core import (Broker, FairShare, Producer, ResourceClassPolicy,
                         ResourceProfile, Resources, SingleTopicPolicy,
-                        TaskMessage, WorkerAgent, class_topic)
+                        Submitter, TaskMessage, WorkerAgent, class_topic)
+from repro.core.simslurm import SimSlurm
 from repro.pipeline import PipelineSpec, RetryPolicy, Stage
 
 
-def _task(gpus=0, labels=()):
+def _task(gpus=0, labels=(), tolerations=()):
     return TaskMessage(task_id="t0", script="sleep",
-                       resources=Resources(gpus=gpus, labels=labels))
+                       resources=Resources(gpus=gpus, labels=labels,
+                                           tolerations=tolerations))
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +231,140 @@ def test_cluster_status_aggregates_components():
         assert st["monitor"]["done"] == 1
         assert "lc5-new.cpu" in st["broker"]["topics"]
         assert c.http_port is not None
+
+
+# ---------------------------------------------------------------------------
+# taints / tolerations (satellite: exclusive labelled pools)
+# ---------------------------------------------------------------------------
+
+def test_taints_narrow_subscriptions_and_can_run():
+    pol = ResourceClassPolicy(extra_classes=("serve",))
+    tainted = ResourceProfile(cpus=2, labels=("serve",), taints=("serve",))
+    # a serve-tainted pool subscribes ONLY to its class — it never even sees
+    # the plain cpu/gpu topics
+    assert pol.subscriptions("p", tainted) == ("p-new.serve",)
+    # ...and refuses plain batch work even if it somehow arrives
+    assert not tainted.can_run(Resources())
+    assert tainted.can_run(Resources(labels=("serve",)))
+    assert tainted.can_run(Resources(tolerations=("serve",)))
+    # tolerating tasks are routed onto the tolerated class; unknown
+    # tolerations are permissive, not demands — they fall through
+    assert pol.route("p", _task(tolerations=("serve",))) == "p-new.serve"
+    assert pol.route("p", _task(tolerations=("ghost",))) == "p-new.cpu"
+    # ...but a gpu demand always wins: a toleration must never land a GPU
+    # task on whatever hardware backs the tolerated pool
+    assert pol.route("p", _task(gpus=1, tolerations=("serve",))) \
+        == "p-new.gpu"
+    # untainted pools are unchanged
+    assert pol.subscriptions("p", ResourceProfile(cpus=2)) == ("p-new.cpu",)
+    # taints naming no known class fail fast (a silently idle worker is a
+    # misconfiguration), mirroring classify() on unknown labels
+    with pytest.raises(ValueError, match="no resource class"):
+        ResourceClassPolicy().subscriptions(
+            "p", ResourceProfile(taints=("serve",)))
+
+
+def test_tainted_serve_pool_refuses_plain_batch_work():
+    """End to end: a serve-tainted worker never drains plain cpu tasks, but
+    executes tasks that tolerate (or are labelled for) the taint."""
+    pol = ResourceClassPolicy(extra_classes=("serve",))
+    with KsaCluster(prefix="tt1", placement=pol, poll_interval_s=0.005) as c:
+        serve = c.add_worker(
+            slots=2, profile=ResourceProfile(cpus=2, mem_mb=2048,
+                                             labels=("serve",),
+                                             taints=("serve",)))
+        cpu = c.add_worker(slots=1)
+        plain = [c.submit("sleep", params={"duration": 0.01})
+                 for _ in range(6)]
+        tol = c.submit("sleep", params={"duration": 0.01},
+                       resources=Resources(tolerations=("serve",)))
+        assert c.wait_all(plain + [tol], timeout=30.0)
+        # every plain task ran on the cpu pool, despite the serve pool
+        # having been idle the whole time
+        assert {c.task(t).agent_id for t in plain} == {cpu.agent_id}
+        assert c.task(tol).agent_id == serve.agent_id
+        assert serve.tasks_completed == 1
+
+
+# ---------------------------------------------------------------------------
+# mem-aware admission (satellite: mem_mb enforced at lease time)
+# ---------------------------------------------------------------------------
+
+def test_worker_mem_admission_serializes_oversubscribed_tasks():
+    """Two 768 MB tasks on a 2-slot worker with a 1024 MB budget: slots
+    would run them together, the memory budget must not — the second waits
+    in the deferral queue (same packing SimSlurm applies per node)."""
+    b = Broker(default_partitions=2)
+    w = WorkerAgent(b, "mm", slots=2,
+                    profile=ResourceProfile(cpus=2, mem_mb=1024),
+                    poll_interval_s=0.005).start()
+    sub = Submitter(b, "mm")
+    try:
+        for i in range(2):
+            sub.submit("sleep", task_id=f"mem-{i}",
+                       params={"duration": 0.15}, mem_mb=768)
+        peak = 0
+        deadline = time.time() + 15.0
+        while time.time() < deadline and w.tasks_completed < 2:
+            peak = max(peak, w.stats()["mem_in_flight_mb"])
+            time.sleep(0.002)
+        assert w.tasks_completed == 2
+        assert peak <= 1024, peak            # never over budget
+        assert w.stats()["deferred"] >= 1    # the second task waited
+    finally:
+        w.stop()
+        b.close()
+
+
+def test_worker_admits_oversized_task_when_idle():
+    """A request larger than the whole budget can never fit; an idle worker
+    runs it best-effort (mem stays a capacity hint at the margin, like cpus)
+    instead of deadlocking the deferral queue."""
+    b = Broker(default_partitions=2)
+    w = WorkerAgent(b, "mo", slots=1,
+                    profile=ResourceProfile(cpus=1, mem_mb=512),
+                    poll_interval_s=0.005).start()
+    sub = Submitter(b, "mo")
+    try:
+        sub.submit("sleep", task_id="big-0", params={"duration": 0.0},
+                   mem_mb=4096)
+        deadline = time.time() + 10.0
+        while time.time() < deadline and w.tasks_completed < 1:
+            time.sleep(0.005)
+        assert w.tasks_completed == 1
+    finally:
+        w.stop()
+        b.close()
+
+
+def test_simslurm_packs_memory_like_cpus():
+    """Per-node memory is a packed resource: two 1536 MB jobs on one
+    4-cpu/2048 MB node run sequentially even though cpus are free."""
+    sim = SimSlurm(nodes=1, cpus_per_node=4, mem_mb_per_node=2048,
+                   scheduler_interval_s=0.005)
+    try:
+        running = []
+
+        def job(cancel_event=None):
+            running.append(time.time())
+            time.sleep(0.1)
+
+        j1 = sim.sbatch(job, cpus=1, mem_mb=1536)
+        j2 = sim.sbatch(job, cpus=1, mem_mb=1536)
+        deadline = time.time() + 5.0
+        overlapped = False
+        while time.time() < deadline:
+            states = {sim.job(j1).state, sim.job(j2).state}
+            if states == {"R"}:
+                overlapped = True
+            if states == {"CD"}:
+                break
+            time.sleep(0.005)
+        assert sim.job(j1).state == sim.job(j2).state == "CD"
+        assert not overlapped  # memory, not cpus, was the binding constraint
+        assert sim.sinfo()["free_mem_mb"] == 2048
+    finally:
+        sim.shutdown()
 
 
 # ---------------------------------------------------------------------------

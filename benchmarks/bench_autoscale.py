@@ -1,0 +1,177 @@
+"""Autoscaling benchmark (ISSUE: repro.autoscale tentpole).
+
+A bursty two-class campaign — cpu ``screen`` fan-out feeding a gpu-heavy
+``localize`` map stage, submitted in two bursts with an idle gap — run on
+three deployments of the same broker code:
+
+* **static** — the paper's layout: pools provisioned once, sized for the
+  *average* load (1 cpu worker + 1 gpu worker). Bursts queue behind the
+  single gpu slot; the gap leaves the slots idle.
+* **peak_static** — pools statically sized for the *peak* (the autoscaler's
+  max). Fast, but every slot beyond the average burns idle slot-seconds for
+  the whole run (the provisioning cost APACE's elastic AlphaFold serving is
+  designed to avoid).
+* **autoscaled** — ``KsaCluster(autoscale=...)`` with the same min as
+  *static* and the same max as *peak_static*: pools grow on backlog and
+  drain back between bursts.
+
+Reported: per-config makespan (sum of burst latencies), **idle-slot-seconds**
+(integral of unoccupied slots over the run — the utilization cost of
+provisioned-but-idle capacity), and the loss/duplication audit across the
+autoscaler's scale-down drains. The acceptance bar (asserted in
+tests/test_autoscale.py, reported here): autoscaled ≥ 1.3x faster makespan
+than the average-sized static pool with zero lost or duplicated tasks, and
+idle-slot-seconds well below the peak-sized static pool.
+
+A ``BENCH_autoscale.json`` summary is written next to the repo root so the
+perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+from repro.autoscale import AutoscaleConfig, PoolSpec, TargetBacklogPolicy
+from repro.cluster import KsaCluster
+from repro.core import Resources
+from repro.pipeline import PipelineSpec, RetryPolicy, Stage
+
+N_ITEMS = 32
+CPU_TASK_S = 0.02
+GPU_TASK_S = 0.08
+GAP_S = 1.0
+BURSTS = 2
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_autoscale.json")
+
+
+def _burst_spec() -> PipelineSpec:
+    return PipelineSpec("burst", [
+        Stage("screen", "sleep", fan_out=1, params={"duration": CPU_TASK_S},
+              resources=Resources(cpus=1),
+              retry=RetryPolicy(max_attempts=3)),
+        Stage("localize", "sleep", depends_on=("screen",),
+              params={"duration": GPU_TASK_S},
+              resources=Resources(cpus=1, gpus=1),
+              retry=RetryPolicy(max_attempts=3)),
+    ])
+
+
+class _IdleSampler:
+    """Integrates unoccupied slot-seconds over every live agent (draining
+    agents still count — they are provisioned capacity until they stop)."""
+
+    def __init__(self, cluster: KsaCluster, dt: float = 0.01):
+        self.cluster = cluster
+        self.dt = dt
+        self.idle_slot_s = 0.0
+        self.slot_s = 0.0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        last = time.perf_counter()
+        while not self._stop.is_set():
+            time.sleep(self.dt)
+            now = time.perf_counter()
+            dt, last = now - last, now
+            with self.cluster._lock:
+                agents = list(self.cluster.agents)
+            for a in agents:
+                if not a.alive:
+                    continue
+                s = a.stats()
+                self.slot_s += s["slots"] * dt
+                self.idle_slot_s += max(0, s["slots"] - s["in_flight"]) * dt
+
+    def stop(self) -> tuple[float, float]:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+        return self.idle_slot_s, self.slot_s
+
+
+def _run_config(name: str, **cluster_kw) -> dict:
+    with KsaCluster(prefix=f"as-{name}", poll_interval_s=0.005,
+                    **cluster_kw) as c:
+        sampler = _IdleSampler(c)
+        burst_s, done, expect = [], 0, 0
+        for b in range(BURSTS):
+            t0 = time.perf_counter()
+            res = c.run_campaign(_burst_spec(), list(range(N_ITEMS)),
+                                 timeout_s=300.0)
+            burst_s.append(time.perf_counter() - t0)
+            st = res.status
+            done += sum(s.done for s in st.stages.values())
+            expect += sum(s.expected for s in st.stages.values())
+            if b < BURSTS - 1:
+                time.sleep(GAP_S)
+        # let the autoscaler drain back to min before closing the books
+        if c.autoscaler is not None:
+            deadline = time.time() + 10.0
+            while time.time() < deadline and any(
+                    p["agents"] > p["min"] or p["draining"]
+                    for p in c.autoscaler.status()["pools"].values()):
+                time.sleep(0.02)
+        idle_slot_s, slot_s = sampler.stop()
+        summary = c.monitor.summary()
+        out = {
+            "makespan_s": round(sum(burst_s), 3),
+            "burst_s": [round(b, 3) for b in burst_s],
+            "idle_slot_seconds": round(idle_slot_s, 2),
+            "slot_seconds": round(slot_s, 2),
+            "tasks_done": done,
+            "tasks_expected": expect,
+            "lost": expect - done,
+            "duplicates_fenced": summary["duplicates_fenced"],
+        }
+        if c.autoscaler is not None:
+            out["scale_ups"] = c.autoscaler.scale_ups
+            out["scale_downs"] = c.autoscaler.scale_downs
+    return out
+
+
+def bench_autoscale_burst() -> list[tuple[str, float, str]]:
+    policy = TargetBacklogPolicy(target=1.5, high=1.0, idle_grace_s=0.15,
+                                 up_cooldown_s=0.1, down_cooldown_s=0.15)
+    static = _run_config("st", workers=1, worker_slots=2, gpu_workers=1,
+                         gpu_slots=1)
+    peak = _run_config("pk", workers=2, worker_slots=2, gpu_workers=4,
+                       gpu_slots=1)
+    auto = _run_config("au", autoscale=AutoscaleConfig(
+        pools=(PoolSpec("cpu", min_agents=1, max_agents=2, slots=2),
+               PoolSpec("gpu", min_agents=1, max_agents=4, slots=1)),
+        policy=policy, interval_s=0.02))
+
+    speedup = static["makespan_s"] / max(auto["makespan_s"], 1e-9)
+    idle_saved = peak["idle_slot_seconds"] - auto["idle_slot_seconds"]
+    payload = {
+        "bursty_two_class": {
+            "n_items": N_ITEMS, "bursts": BURSTS, "gap_s": GAP_S,
+            "cpu_task_s": CPU_TASK_S, "gpu_task_s": GPU_TASK_S,
+            "static": static, "peak_static": peak, "autoscaled": auto,
+            "speedup_vs_static": round(speedup, 2),
+            "idle_slot_seconds_saved_vs_peak": round(idle_saved, 2),
+        },
+    }
+    with open(_JSON_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+
+    return [
+        ("autoscale_static_makespan", static["makespan_s"] * 1e6,
+         f"avg-sized static pool: {static['makespan_s']:.2f} s over "
+         f"{BURSTS} bursts, {static['idle_slot_seconds']:.1f} idle "
+         f"slot-seconds"),
+        ("autoscale_peak_static_makespan", peak["makespan_s"] * 1e6,
+         f"peak-sized static pool: {peak['makespan_s']:.2f} s but "
+         f"{peak['idle_slot_seconds']:.1f} idle slot-seconds provisioned"),
+        ("autoscale_elastic_makespan", auto["makespan_s"] * 1e6,
+         f"autoscaled: {auto['makespan_s']:.2f} s ({speedup:.1f}x vs "
+         f"static; target >= 1.3x), {auto['idle_slot_seconds']:.1f} idle "
+         f"slot-seconds ({idle_saved:.1f} below peak-static), "
+         f"{auto['scale_ups']} ups / {auto['scale_downs']} downs, "
+         f"lost={auto['lost']} dups={auto['duplicates_fenced']}"),
+    ]

@@ -9,8 +9,8 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_apps, bench_core, bench_pipeline, bench_recovery,
-                   bench_routing)
+    from . import (bench_apps, bench_autoscale, bench_core, bench_pipeline,
+                   bench_recovery, bench_routing)
 
     suites = [
         ("broker_throughput", bench_core.bench_broker_throughput),
@@ -28,6 +28,7 @@ def main() -> None:
          bench_pipeline.bench_pipeline_orchestration_overhead),
         ("journal_overhead", bench_recovery.bench_journal_overhead),
         ("recovery_time", bench_recovery.bench_recovery_time),
+        ("autoscale_burst", bench_autoscale.bench_autoscale_burst),
         ("train_step", bench_apps.bench_train_step),
         ("serve_continuous_batching",
          bench_apps.bench_serve_continuous_batching),

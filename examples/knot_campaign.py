@@ -46,7 +46,23 @@ uninterrupted run (asserted in tests/test_pipeline.py). The monitor's
 ``/campaigns`` endpoint shows each campaign's journal tally and
 ``recovered`` flag.
 
+Autoscaled mode (``--autoscale``)
+---------------------------------
+With ``--autoscale`` the static pools are replaced by
+``KsaCluster(autoscale=AutoscaleConfig(...))`` (see :mod:`repro.autoscale`)
+and the localize stage requests a GPU (``knots_pipeline(gpu_localize=True)``,
+the ParaFold CPU-screen/GPU-predict split): a controller watches each
+resource class's queue depth on its ``PREFIX-new.<class>`` topic and grows
+the cpu/gpu pools while the campaign bursts, then shrinks them back to the
+floor through graceful drains (in-flight tasks finish, deferred leases are
+requeued — knot counts still match the flat baseline exactly). The
+monitor's ``GET /autoscale`` endpoint serves the controller's live state:
+per-pool membership, backlog history samples ``[ts, backlog, agents,
+in_flight]``, and the decision log (scale-up/down events with reasons) —
+the same observability surface §3 gives tasks.
+
 Run:  PYTHONPATH=src python examples/knot_campaign.py [--structures 128]
+                                                      [--autoscale]
 """
 import argparse
 import json
@@ -87,30 +103,49 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=12)
     ap.add_argument("--n-points", type=int, default=96)
     ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic cpu/gpu pools (repro.autoscale) instead "
+                         "of the static cluster+workstation layout; the "
+                         "localize stage then runs on the GPU class")
     args = ap.parse_args()
 
-    # -- execution pools: one simulated cluster + one workstation -----------
-    cluster = KsaCluster(prefix="alphaknot", session_timeout_s=2.0,
-                         slurm=dict(nodes=2, cpus_per_node=2,
-                                    oversubscribe=2),
-                         pipeline_task_timeout_s=20.0, http=True)
+    if args.autoscale:
+        # -- elastic pools: the autoscaler grows/shrinks on class backlog --
+        from repro.autoscale import AutoscaleConfig, PoolSpec
+        cluster = KsaCluster(
+            prefix="alphaknot", session_timeout_s=2.0,
+            pipeline_task_timeout_s=20.0, http=True,
+            autoscale=AutoscaleConfig(
+                pools=(PoolSpec("cpu", min_agents=1, max_agents=4, slots=2),
+                       PoolSpec("gpu", min_agents=0, max_agents=2, slots=1)),
+                interval_s=0.02))
+    else:
+        # -- static pools: one simulated cluster + one workstation ---------
+        cluster = KsaCluster(prefix="alphaknot", session_timeout_s=2.0,
+                             slurm=dict(nodes=2, cpus_per_node=2,
+                                        oversubscribe=2),
+                             pipeline_task_timeout_s=20.0, http=True)
     with cluster as c:
-        workstation = c.add_worker(slots=1, heartbeat_interval_s=0.2,
-                                   profile=None)
-
         spec = knots.knots_pipeline(args.batch_size, n_points=args.n_points,
-                                    task_timeout_s=20.0)
+                                    task_timeout_s=20.0,
+                                    gpu_localize=args.autoscale)
         ids = list(range(args.structures))
         print(f"campaign: {len(ids)} structures through 3-stage pipeline "
-              f"{[s.name for s in spec.topological()]}")
+              f"{[s.name for s in spec.topological()]}"
+              f"{' (autoscaled pools)' if args.autoscale else ''}")
 
-        # inject a failure once the campaign is under way (paper-motivating
-        # scenario: a node dies mid-campaign; the watchdog redelivers)
-        def killer() -> None:
-            time.sleep(1.0)
-            print("!! killing the workstation agent mid-campaign")
-            workstation.crash()
-        threading.Thread(target=killer, daemon=True).start()
+        if not args.autoscale:
+            workstation = c.add_worker(slots=1, heartbeat_interval_s=0.2,
+                                       profile=None)
+
+            # inject a failure once the campaign is under way (paper-
+            # motivating scenario: a node dies mid-campaign; the watchdog
+            # redelivers)
+            def killer() -> None:
+                time.sleep(1.0)
+                print("!! killing the workstation agent mid-campaign")
+                workstation.crash()
+            threading.Thread(target=killer, daemon=True).start()
 
         last = [0.0]
 
@@ -124,8 +159,8 @@ def main() -> None:
         res = c.run_campaign(spec, ids, progress=progress, timeout_s=900.0)
         agg = res.final
         print(f"\nprocessed {agg['processed']} structures in "
-              f"{res.elapsed_s:.1f}s ({agg['processed']/res.elapsed_s:.1f}/s) "
-              f"despite the failure")
+              f"{res.elapsed_s:.1f}s ({agg['processed']/res.elapsed_s:.1f}/s)"
+              f"{'' if args.autoscale else ' despite the failure'}")
         print(f"knotted: {len(agg['knotted'])} "
               f"(expected ~{int(args.structures * 0.75 * 0.85)} — 3 of 4 "
               f"families are knotted, minus pLDDT-style drops)")
@@ -158,6 +193,19 @@ def main() -> None:
               f"PREFIX-campaigns (last: {journal.get('last_type', '?')}) — "
               f"an orchestrator kill -9 here would resume via "
               f"KsaCluster.recover()")
+
+        if args.autoscale:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{c.http_port}/autoscale") as r:
+                scal = json.loads(r.read())
+            for cls, p in scal["pools"].items():
+                print(f"autoscale {cls}: {p['agents']} agents "
+                      f"(min {p['min']}, max {p['max']}), "
+                      f"{p['scale_ups']} ups / {p['scale_downs']} downs, "
+                      f"backlog now {p['backlog']}")
+            for d in scal["decisions"][-6:]:
+                print(f"  decision: {d['pool']} {d['action']} x{d['count']} "
+                      f"({d['reason']})")
 
         if not args.skip_baseline:
             base = flat_baseline(c.broker, args.structures, args.batch_size,

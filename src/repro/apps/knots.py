@@ -346,27 +346,34 @@ def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
                    max_in_flight: int | None = None,
                    max_attempts: int = 4,
                    task_timeout_s: float | None = None,
-                   skip_empty: bool = True):
+                   skip_empty: bool = True,
+                   gpu_localize: bool = False):
     """The AlphaKnot campaign as a declarative 3-stage DAG:
     screen (fan-out) → localize (map over survivors) → aggregate (join).
 
     Screen runs on cheap 1-CPU slots; localize requests more CPU (the
     heterogeneous-stage routing of ParaFold: different resource profiles per
-    stage); aggregate is a single barrier task. With ``skip_empty`` (default)
-    localize tasks are *skipped* for screen batches with zero survivors — the
-    ROADMAP's conditional-edge early exit; the campaign still completes, and
-    the aggregate sees one result per non-empty batch."""
+    stage) — or, with ``gpu_localize``, a GPU: the writhe-map localization is
+    the kernel-heavy stage, and requesting ``gpus=1`` routes it to the GPU
+    class topic so only GPU pools (static or autoscaled) serve it, exactly
+    ParaFold's CPU-featurize/GPU-predict split. Aggregate is a single
+    barrier task. With ``skip_empty`` (default) localize tasks are *skipped*
+    for screen batches with zero survivors — the ROADMAP's conditional-edge
+    early exit; the campaign still completes, and the aggregate sees one
+    result per non-empty batch."""
     from repro.pipeline import PipelineSpec, RetryPolicy, Stage
     from repro.core import Resources
 
     retry = RetryPolicy(max_attempts=max_attempts, timeout_s=task_timeout_s)
     common = {"n_points": n_points, "use_pallas": use_pallas}
+    localize_res = (Resources(cpus=1, gpus=1) if gpu_localize
+                    else Resources(cpus=2))
     return PipelineSpec("alphaknot", [
         Stage("screen", "knot_screen", fan_out=batch_size, params=common,
               resources=Resources(cpus=1), max_in_flight=max_in_flight,
               retry=retry),
         Stage("localize", "knot_localize", depends_on=("screen",),
-              params=common, resources=Resources(cpus=2),
+              params=common, resources=localize_res,
               max_in_flight=max_in_flight, retry=retry,
               skip_when=_no_survivors if skip_empty else None),
         Stage("aggregate", "knot_aggregate",

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Iterable, Mapping
+from typing import TYPE_CHECKING, Any, Callable, Iterable, Mapping
 
 from repro.core.broker import Broker
 from repro.core.agents import AgentBase, ClusterAgent, WorkerAgent
@@ -38,8 +38,11 @@ from repro.core.scheduling import (LeasePolicy, PlacementPolicy,
 from repro.core.simslurm import SimSlurm
 from repro.core.submitter import Submitter
 
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.autoscale import AutoscaleConfig, AutoscaleController
+
 _SLURM_KEYS = ("nodes", "cpus_per_node", "gpus_per_node", "mem_mb_per_node",
-               "scheduler_interval_s")
+               "scheduler_interval_s", "spinup_s")
 
 _CPU_DEFAULT = object()  # add_worker sentinel: "cpu-only profile sized to slots"
 
@@ -53,7 +56,12 @@ class KsaCluster:
     ``gpu_workers`` GPU-capable workers (``gpu_slots`` each), and ``slurm`` —
     a :class:`SimSlurm`, or a dict of SimSlurm kwargs (plus ClusterAgent
     kwargs such as ``oversubscribe``), or ``None``. More pools can be added
-    after :meth:`start` with :meth:`add_worker` / :meth:`add_slurm`.
+    after :meth:`start` with :meth:`add_worker` / :meth:`add_slurm`, removed
+    gracefully with :meth:`drain_worker`, or managed *elastically* by
+    passing ``autoscale=AutoscaleConfig(...)`` (see :mod:`repro.autoscale`):
+    a controller then grows/shrinks per-resource-class pools from the class
+    topics' queue depth, and the monitor serves its decisions and backlog
+    history on ``/autoscale``.
 
     ``broker=None`` creates (and owns, i.e. closes) an embedded broker;
     passing one shares it and leaves its lifecycle to the caller.
@@ -66,6 +74,7 @@ class KsaCluster:
                  workers: int = 0, worker_slots: int = 2,
                  gpu_workers: int = 0, gpu_slots: int = 1,
                  slurm: SimSlurm | Mapping[str, Any] | None = None,
+                 autoscale: "AutoscaleConfig | None" = None,
                  monitor: bool = True,
                  http: bool = False,
                  task_timeout_s: float | None = None,
@@ -84,6 +93,7 @@ class KsaCluster:
         self._spec = dict(workers=workers, worker_slots=worker_slots,
                           gpu_workers=gpu_workers, gpu_slots=gpu_slots,
                           slurm=slurm)
+        self._autoscale_cfg = autoscale
         self._monitor_enabled = monitor
         self._http = http
         self.task_timeout_s = task_timeout_s
@@ -106,6 +116,7 @@ class KsaCluster:
         self.agents: list[AgentBase] = []
         self._slurms: list[SimSlurm] = []     # owned simulated clusters
         self.monitor: MonitorAgent | None = None
+        self.autoscaler: "AutoscaleController | None" = None
         self.submitter: Submitter | None = None
         self._pipeline = None                 # lazy PipelineAgent
         self._http_port: int | None = None
@@ -150,6 +161,12 @@ class KsaCluster:
                                         mem_mb=1024 * self._spec["gpu_slots"]))
                 if self._spec["slurm"] is not None:
                     self.add_slurm(self._spec["slurm"])
+                if self._autoscale_cfg is not None:
+                    from repro.autoscale import AutoscaleController
+                    self.autoscaler = AutoscaleController(
+                        self, self._autoscale_cfg).start()
+                    if self.monitor is not None:
+                        self.monitor.attach_autoscale(self.autoscaler.status)
             except BaseException:
                 # unwind whatever already started (threads, owned broker) —
                 # a failed __enter__ never reaches __exit__
@@ -159,14 +176,19 @@ class KsaCluster:
 
     def stop(self, timeout: float = 5.0) -> None:
         """Graceful, idempotent teardown in reverse dependency order:
-        pipeline agent first (stop emitting tasks), then the agent pools
-        (drain in-flight work so it is redelivered), monitor, owned Slurm
-        simulators, and finally the broker if this facade created it."""
+        autoscaler first (stop resizing pools), then the pipeline agent
+        (stop emitting tasks), the agent pools (drain in-flight work so it
+        is redelivered), monitor, owned Slurm simulators, and finally the
+        broker if this facade created it."""
         with self._lock:
             if not self._started or self._stopped:
                 self._stopped = True
                 return
             self._stopped = True
+            autoscaler = self.autoscaler
+        if autoscaler is not None:
+            autoscaler.stop(timeout=timeout)
+        with self._lock:
             pipeline, agents = self._pipeline, list(self.agents)
             monitor, slurms = self.monitor, list(self._slurms)
         if pipeline is not None:
@@ -246,6 +268,50 @@ class KsaCluster:
         with self._lock:
             self.agents.append(agent)
         return agent
+
+    def drain_worker(self, agent: AgentBase, *,
+                     timeout_s: float | None = None,
+                     wait: bool = True) -> bool:
+        """Gracefully remove one agent from the deployment (the manual
+        counterpart of an autoscale scale-down): the agent stops its
+        subscriptions (consumer-group leave — unread partitions rebalance
+        to the survivors), requeues its deferred leases, lets in-flight
+        tasks finish, then is deregistered. With ``wait=False`` the drain
+        proceeds in the background (poll ``agent.state``) and a reaper
+        deregisters the agent once it stops; otherwise blocks until drained
+        and returns True, or False on ``timeout_s``."""
+        agent.request_drain(timeout_s=timeout_s)
+        if not wait:
+            threading.Thread(
+                target=self._await_drained, args=(agent, None),
+                name=f"drain-reaper-{agent.agent_id}", daemon=True).start()
+            return False
+        deadline = None if timeout_s is None else \
+            time.time() + timeout_s + 5.0
+        return self._await_drained(agent, deadline)
+
+    def _await_drained(self, agent: AgentBase,
+                       deadline: float | None) -> bool:
+        while agent.alive and not self._stopped:
+            if deadline is not None and time.time() > deadline:
+                return False
+            time.sleep(0.01)
+        if not agent.alive:
+            self._forget_agent(agent)
+        return not agent.alive
+
+    def _forget_agent(self, agent: AgentBase) -> None:
+        """Deregister a stopped agent (and shut down its owned SimSlurm)."""
+        own_slurm = None
+        with self._lock:
+            if agent in self.agents:
+                self.agents.remove(agent)
+            slurm = getattr(agent, "slurm", None)
+            if slurm is not None and slurm in self._slurms:
+                self._slurms.remove(slurm)
+                own_slurm = slurm
+        if own_slurm is not None:
+            own_slurm.shutdown()
 
     # -- flat task API ---------------------------------------------------------
 
@@ -333,6 +399,16 @@ class KsaCluster:
         self._require_started()
         return self.pipeline.recover(specs, include_finished=include_finished)
 
+    def compact(self, specs: Any = None) -> dict:
+        """Compact the campaign journal: snapshot terminal campaigns into
+        single ``CampaignSnapshot`` records and truncate their per-event
+        history off the ``PREFIX-campaigns`` topic, so a long-lived
+        deployment serving a stream of campaigns stays bounded. With
+        ``specs`` (name → :class:`~repro.pipeline.PipelineSpec`), terminal
+        campaigns already evicted from memory are folded from the journal
+        and compacted too. See :meth:`~repro.pipeline.PipelineAgent.compact`."""
+        return self.pipeline.compact(specs)
+
     def campaign_status(self, campaign_id: str):
         return self.pipeline.status(campaign_id)
 
@@ -364,4 +440,6 @@ class KsaCluster:
         if pipeline is not None:
             out["campaigns"] = {c: s.to_dict()
                                 for c, s in pipeline.campaigns().items()}
+        if self.autoscaler is not None:
+            out["autoscale"] = self.autoscaler.status()
         return out

@@ -27,6 +27,13 @@ Fault-tolerance contract (two levels, matching the paper):
    accepting, the MonitorAgent notices the missing heartbeat/timeout and
    resubmits the task with a bumped attempt (at-least-once end-to-end;
    the monitor fences duplicate results by attempt).
+
+Planned removal is a third, loss-free path: :meth:`AgentBase.request_drain`
+(the autoscaler's scale-down mechanism) leaves the consumer group so unread
+partitions rebalance to survivors, requeues deferred leases back onto their
+class topics, lets in-flight tasks finish (heartbeating throughout, so the
+monitor never mistakes a draining agent for a dead one), and only then
+stops — no task is lost and none is double-run.
 """
 from __future__ import annotations
 
@@ -134,10 +141,16 @@ class AgentBase:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._crashed = threading.Event()  # test hook: simulate sudden death
+        # graceful-drain lifecycle (autoscale scale-down path): stop leasing,
+        # requeue deferred leases, let in-flight work finish, deregister.
+        self._draining = threading.Event()
+        self._drain_deadline: float | None = None
+        self._drain_entered = False
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.tasks_rerouted = 0
         self.tasks_deferred = 0
+        self.tasks_requeued = 0
         self.heartbeat_failures = 0
 
     # -- capacity -------------------------------------------------------------
@@ -173,37 +186,47 @@ class AgentBase:
     def _loop(self) -> None:
         while not self._stop.is_set() and not self._crashed.is_set():
             try:
-                self._tick()
+                if self._draining.is_set():
+                    if self._drain_tick():
+                        break
+                else:
+                    self._tick()
             except Exception:  # pragma: no cover - defensive
                 log.exception("agent %s tick failed", self.agent_id)
             self._stop.wait(self.poll_interval_s)
-        if not self._crashed.is_set():
-            self._drain()
         # crashed agents do NOT leave the group: the broker's session timeout
         # must evict them (that is the failure mode being simulated).
-        if not self._crashed.is_set():
-            self._consumer.close()
+        if self._crashed.is_set():
+            return
+        # cancel whatever is still running so it gets redelivered — a no-op
+        # after a completed graceful drain, and the stop() contract when
+        # stop() overrides a drain still in progress
+        self._drain()
+        # either path: leased-but-unstarted tasks must survive the agent —
+        # an offset this agent committed is a task nobody else will be given
+        self._flush_deferred()
+        self._consumer.close()
 
     def _tick(self) -> None:
         self._admit_deferred()
         cap = self._capacity()
         if cap > 0:
-            batches = self._consumer.poll(timeout=0.0, max_records=cap)
-            for recs in batches.values():
-                for rec in recs:
-                    task = TaskMessage.from_dict(rec.value)
-                    if not self._routable(task):
-                        continue
-                    # FIFO behind an existing deferral: admitting fresh
-                    # leases past the queue head would starve a big task
-                    # under a stream of small ones
-                    if not self._deferred and self._admit(task):
-                        self._accept(task)
-                    else:
-                        self._deferred.append(task)
-                        self.tasks_deferred += 1
-            if batches:
-                self._consumer.commit()  # lease-commit (see module docstring)
+            # lease-commit (see module docstring) — fetch and commit are
+            # one atomic broker operation, so a rebalance caused by a pool
+            # scaling up mid-tick can never redeliver (and double-run) a
+            # task this agent already leased
+            for rec in self._consumer.lease(timeout=0.0, max_records=cap):
+                task = TaskMessage.from_dict(rec.value)
+                if not self._routable(task):
+                    continue
+                # FIFO behind an existing deferral: admitting fresh
+                # leases past the queue head would starve a big task
+                # under a stream of small ones
+                if not self._deferred and self._admit(task):
+                    self._accept(task)
+                else:
+                    self._deferred.append(task)
+                    self.tasks_deferred += 1
         else:
             # still heartbeat group membership while saturated
             try:
@@ -302,6 +325,85 @@ class AgentBase:
         while time.time() < deadline and self._in_flight() > 0:
             time.sleep(0.01)
 
+    # -- graceful drain (autoscale scale-down) --------------------------------
+
+    def request_drain(self, timeout_s: float | None = None) -> None:
+        """Begin a graceful drain: the agent leaves its consumer group (the
+        rebalance hands unread partitions to the survivors), requeues every
+        deferred lease back onto its class topic, lets in-flight tasks run
+        to completion — no cancellation, so nothing is re-executed — and
+        then stops. Non-blocking; observe progress via :attr:`state` /
+        :attr:`alive`. With ``timeout_s``, tasks still running at the
+        deadline are cancelled (and redelivered by the watchdog) so the
+        drain always terminates."""
+        with self._lock:
+            if timeout_s is not None:
+                self._drain_deadline = time.time() + timeout_s
+        self._draining.set()
+
+    def _drain_tick(self) -> bool:
+        """One loop iteration while draining; True once fully drained."""
+        if not self._drain_entered:
+            self._drain_entered = True
+            log.info("agent %s draining: %d in flight, %d deferred",
+                     self.agent_id, self._in_flight(), len(self._deferred))
+            # leave the group first: no new leases, and partitions this
+            # agent held rebalance to the surviving members immediately
+            self._consumer.close()
+            self._flush_deferred()
+        # in-flight tasks still need the watchdog and liveness heartbeats —
+        # a silent draining agent would look dead to the monitor, which
+        # would resubmit (and therefore double-run) its tasks
+        self._watchdog()
+        self._heartbeat_running()
+        if self._drain_deadline is not None \
+                and time.time() > self._drain_deadline:
+            with self._lock:
+                runs = list(self._running.values())
+            for run in runs:
+                if not run.cancel.is_set():
+                    log.warning("agent %s drain deadline: cancelling %s for "
+                                "redelivery", self.agent_id, run.task.task_id)
+                    self._cancel_task(run)
+        return self._in_flight() == 0
+
+    def _flush_deferred(self) -> None:
+        """Requeue leased-but-unstarted tasks to their class topic with the
+        *same* attempt (a requeue, not a retry — the task never started, so
+        another agent running it is not a duplicate execution). Without
+        this, an agent removed mid-run would strand every task whose offset
+        it had committed until a watchdog timeout."""
+        while True:
+            with self._lock:
+                if not self._deferred:
+                    return
+                task = self._deferred.popleft()
+            try:
+                target = self.placement.route(self.prefix, task)
+            except ValueError:
+                # unroutable under our policy: the bare topic, where the
+                # monitor's legacy-forwarding or watchdog picks it up
+                target = self.topics["new"]
+            self._producer.send(target, task.to_dict(), key=task.task_id)
+            self._send_status(task, TaskStatus.SUBMITTED,
+                              requeued_by=self.agent_id)
+            self.tasks_requeued += 1
+
+    @property
+    def draining(self) -> bool:
+        return self._draining.is_set() and self.alive
+
+    @property
+    def state(self) -> str:
+        """``running`` | ``draining`` | ``stopped`` | ``crashed``."""
+        if self._crashed.is_set():
+            return "crashed"
+        if self._thread is None or not self._thread.is_alive():
+            return "stopped"
+        if self._draining.is_set():
+            return "draining"
+        return "running"
+
     def stop(self, timeout: float = 5.0) -> None:
         self._stop.set()
         if self._thread is not None:
@@ -333,6 +435,7 @@ class AgentBase:
             return {
                 "agent_id": self.agent_id,
                 "kind": self.kind,
+                "state": self.state,
                 "in_flight": len(self._running),
                 "completed": self.tasks_completed,
                 "failed": self.tasks_failed,
@@ -343,6 +446,8 @@ class AgentBase:
                 "subscriptions": list(self._subscriptions),
                 "rerouted": self.tasks_rerouted,
                 "deferred": self.tasks_deferred,
+                "deferred_pending": len(self._deferred),
+                "requeued": self.tasks_requeued,
                 "mem_in_flight_mb": sum(r.task.resources.mem_mb
                                         for r in self._running.values()),
                 "heartbeat_failures": self.heartbeat_failures,

@@ -33,7 +33,14 @@ Faithfully implemented Kafka semantics the paper relies on (§3, §6):
   ``PREFIX-campaigns`` to infinite retention even under a broker-wide cap),
 * **replay reads**: :meth:`Broker.read_from` scans a topic from an absolute
   offset outside any consumer group — the API the pipeline recovery path
-  uses to fold the campaign journal after an orchestrator crash.
+  uses to fold the campaign journal after an orchestrator crash,
+* **explicit prefix deletion**: :meth:`Broker.truncate_before` is the
+  ``AdminClient.delete_records`` analogue journal compaction uses to drop
+  snapshotted campaigns' events (durable logs persist a truncation marker),
+* **incremental backlog counters**: :meth:`Broker.queue_stats` reports
+  per-topic depth (produced − committed) for one consumer group from
+  counters maintained on the produce/commit paths — the autoscaler's
+  per-resource-class demand signal, with no O(records) scans.
 """
 from __future__ import annotations
 
@@ -128,13 +135,20 @@ class _PartitionLog:
                 break  # truncated tail frame (crash mid-write): drop it
             frame = msgpack.unpackb(data[pos:pos + length], raw=False)
             pos += length
+            if "trunc" in frame:  # truncation marker (see truncate_before)
+                cut = int(frame["trunc"])
+                self.records = [r for r in self.records if r.offset >= cut]
+                self.base_offset = max(self.base_offset, cut)
+                continue
             self.records.append(Record(
                 topic=self.topic, partition=self.partition,
                 offset=frame["o"], key=frame.get("k"), value=frame["v"],
                 timestamp=frame.get("t", 0.0)))
         if self.records:
-            self.base_offset = self.records[0].offset
+            self.base_offset = max(self.base_offset, self.records[0].offset)
             self.next_offset = self.records[-1].offset + 1
+        else:
+            self.next_offset = max(self.next_offset, self.base_offset)
 
     def append(self, key: str | None, value: Any, ts: float) -> Record:
         rec = Record(self.topic, self.partition, self.next_offset, key, value, ts)
@@ -164,6 +178,26 @@ class _PartitionLog:
 
     def end_offset(self) -> int:
         return self.next_offset
+
+    def truncate_before(self, offset: int) -> int:
+        """Drop every retained record with offset < ``offset`` (Kafka's
+        ``deleteRecords`` semantics). Returns the number of records dropped.
+        Durable logs append a truncation marker frame so a restart does not
+        resurrect the deleted prefix."""
+        offset = min(offset, self.next_offset)
+        if offset <= self.base_offset:
+            return 0
+        drop = min(offset - self.base_offset, len(self.records))
+        self.records = self.records[drop:]
+        self.base_offset = offset
+        if self._fh is not None and drop:
+            frame = msgpack.packb({"trunc": offset}, use_bin_type=True)
+            self._fh.write(_FRAME.pack(len(frame)))
+            self._fh.write(frame)
+            self._fh.flush()
+            if self._fsync:
+                os.fsync(self._fh.fileno())
+        return drop
 
     def close(self) -> None:
         if self._fh is not None:
@@ -315,10 +349,68 @@ class Broker:
                 out.extend(plog.fetch(offset, len(plog.records)))
             return out
 
+    def truncate_before(self, topic: str, offset: int, *,
+                        partition: int | None = None) -> int:
+        """Delete every retained record of ``topic`` with offset < ``offset``
+        (one partition, or all of them) — the embedded analogue of Kafka's
+        ``AdminClient.delete_records``, used by journal compaction to bound
+        the ``PREFIX-campaigns`` topic after terminal campaigns have been
+        snapshotted. Returns the number of records dropped. Committed
+        offsets are untouched; fetches below the new base offset clamp
+        forward to it."""
+        with self._lock:
+            self._ensure_topic(topic)
+            logs = self._topics[topic]
+            parts = logs if partition is None else [logs[partition]]
+            return sum(p.truncate_before(offset) for p in parts)
+
     def wait_for_data(self, timeout: float) -> None:
         """Block until any record is produced (or timeout)."""
         with self._lock:
             self._data_arrived.wait(timeout)
+
+    # -- backlog accounting (autoscaling signal) -----------------------------
+
+    def queue_stats(self, group_id: str,
+                    topics: Sequence[str] | None = None
+                    ) -> dict[str, dict[str, int]]:
+        """Per-topic backlog of one consumer group, from counters the broker
+        already maintains incrementally (partition end offsets and committed
+        offsets) — O(topics × partitions) with **no record scans**, safe to
+        poll at control-loop frequency.
+
+        For each topic: ``produced`` is the cumulative record count appended
+        since topic creation (monotonic — retention trimming does not rewind
+        it), ``consumed`` is the cumulative count the group has committed,
+        and ``depth`` = produced − consumed is the queue backlog. The
+        autoscaler's per-resource-class demand signal is the ``depth`` of
+        each ``PREFIX-new.<class>`` topic under the shared agents group;
+        drain *rate* falls out of successive ``consumed`` samples."""
+        with self._lock:
+            grp = self._groups.get(group_id)
+            names = list(topics) if topics is not None else sorted(self._topics)
+            out: dict[str, dict[str, int]] = {}
+            for t in names:
+                self._ensure_topic(t)
+                produced, consumed = self._topic_counters(grp, t)
+                out[t] = {"produced": produced,
+                          "consumed": min(consumed, produced),
+                          "depth": max(0, produced - consumed)}
+            return out
+
+    def _topic_counters(self, grp: _Group | None,
+                        topic: str) -> tuple[int, int]:
+        """(cumulative produced, cumulative committed) for one topic/group —
+        the single definition of the backlog counters behind queue_stats()
+        and the per-group ``lag`` in stats(). Call with the lock held and
+        the topic ensured."""
+        logs = self._topics[topic]
+        produced = sum(p.end_offset() for p in logs)
+        consumed = 0
+        if grp is not None:
+            consumed = sum(grp.committed.get(TopicPartition(topic, p), 0)
+                           for p in range(len(logs)))
+        return produced, consumed
 
     # -- consumer groups ----------------------------------------------------
 
@@ -373,11 +465,18 @@ class Broker:
                 self._evict_dead(grp)
 
     def _rebalance(self, grp: _Group) -> None:
+        # sticky (cooperative) assignor: a membership change moves only the
+        # partitions that *must* move — to a joining member, or away from a
+        # departed one. A live member keeps the partitions it is mid-lease
+        # on (up to its fair share), which is what makes elastic pool growth
+        # duplication-free: the paper's eager-style full reshuffle would
+        # hand a just-fetched partition to the new member, whose refetch
+        # from the committed offset re-runs the in-flight task.
+        prev = {m: set(tps) for m, tps in grp.assignment.items()}
         grp.generation += 1
         grp.assignment = {m: [] for m in grp.members}
         if not grp.members:
             return
-        # range assignor per topic, deterministic member order
         members = sorted(grp.members)
         topics = sorted({t for m in grp.members.values() for t in m.topics})
         for topic in topics:
@@ -385,9 +484,32 @@ class Broker:
             if not subs:
                 continue
             nparts = len(self._topics[topic])
-            for p in range(nparts):
-                owner = subs[p % len(subs)]
-                grp.assignment[owner].append(TopicPartition(topic, p))
+            # exact fair shares: every member gets floor or floor+1, with
+            # the +1 quotas going to the members holding the most already
+            # (maximum stickiness at perfect balance)
+            floor, rem = divmod(nparts, len(subs))
+            held = {m: sum(1 for tp in prev.get(m, ())
+                           if tp.topic == topic) for m in subs}
+            by_held = sorted(subs, key=lambda m: (-held[m], m))
+            quota = {m: floor + (1 if i < rem else 0)
+                     for i, m in enumerate(by_held)}
+            counts = {m: 0 for m in subs}
+            owner_of: dict[int, str] = {}
+            for p in range(nparts):  # sticky pass: keep current owners
+                tp = TopicPartition(topic, p)
+                for m in subs:
+                    if tp in prev.get(m, ()) and counts[m] < quota[m]:
+                        owner_of[p] = m
+                        counts[m] += 1
+                        break
+            for p in range(nparts):  # place the rest, least-loaded first
+                if p in owner_of:
+                    continue
+                m = min(subs, key=lambda s: (counts[s] - quota[s], s))
+                owner_of[p] = m
+                counts[m] += 1
+            for p in sorted(owner_of):
+                grp.assignment[owner_of[p]].append(TopicPartition(topic, p))
         self._data_arrived.notify_all()
 
     def assignment(self, group_id: str, member_id: str) -> list[TopicPartition]:
@@ -404,15 +526,30 @@ class Broker:
 
     # -- offsets -------------------------------------------------------------
 
+    def _check_fence(self, grp: _Group,
+                     offsets: Mapping[TopicPartition, int],
+                     member_id: str | None, generation: int | None) -> None:
+        """Cooperative-rebalance fencing: a commit from a stale generation
+        is still valid for partitions the member *retained* across the
+        bump (membership churn elsewhere in the group — e.g. an autoscaler
+        growing the pool mid-poll — must not void a live member's lease).
+        Only a commit for a partition the member no longer owns is fenced."""
+        if generation is None or generation == grp.generation:
+            return
+        owned = set(grp.assignment.get(member_id or "", []))
+        lost = [tp for tp in offsets if tp not in owned]
+        if lost:
+            raise FencedError(
+                f"commit from stale generation {generation} "
+                f"(current {grp.generation}) for reassigned partitions "
+                f"{[(tp.topic, tp.partition) for tp in lost]}")
+
     def commit(self, group_id: str, offsets: Mapping[TopicPartition, int],
                member_id: str | None = None,
                generation: int | None = None) -> None:
         with self._lock:
             grp = self._groups.setdefault(group_id, _Group(group_id))
-            if generation is not None and generation != grp.generation:
-                raise FencedError(
-                    f"commit from stale generation {generation} "
-                    f"(current {grp.generation})")
+            self._check_fence(grp, offsets, member_id, generation)
             for tp, off in offsets.items():
                 grp.committed[tp] = off
             self._persist_offsets(group_id, offsets)
@@ -423,6 +560,39 @@ class Broker:
             if grp is None:
                 return 0
             return grp.committed.get(tp, 0)
+
+    def lease_records(self, group_id: str, member_id: str,
+                      max_records: int = 500) -> list[Record]:
+        """Atomic fetch+commit ("lease") for one group member: records come
+        from the committed offset of each partition the member owns *right
+        now*, and the offsets advance in the same critical section. A
+        concurrent rebalance therefore can never hand an already-leased
+        record to another member — the poll-then-commit window that makes
+        eager-rebalance consumers re-run in-flight work during membership
+        churn (exactly what an autoscaler growing the pool would trigger).
+        This is the task-leasing path agents use; observers (monitor,
+        pipeline) keep at-least-once poll()/commit()."""
+        with self._lock:
+            grp = self._groups.get(group_id)
+            if grp is None or member_id not in grp.members:
+                raise FencedError(f"unknown member {member_id} in {group_id}")
+            grp.members[member_id].last_heartbeat = time.time()
+            out: list[Record] = []
+            budget = max_records
+            updates: dict[TopicPartition, int] = {}
+            for tp in grp.assignment.get(member_id, []):
+                if budget <= 0:
+                    break
+                off = grp.committed.get(tp, 0)
+                recs = self._topics[tp.topic][tp.partition].fetch(off, budget)
+                if recs:
+                    out.extend(recs)
+                    updates[tp] = recs[-1].offset + 1
+                    grp.committed[tp] = updates[tp]
+                    budget -= len(recs)
+            if updates:
+                self._persist_offsets(group_id, updates)
+            return out
 
     # -- transactions (exactly-once) -----------------------------------------
 
@@ -436,6 +606,11 @@ class Broker:
         processing; with the single broker lock it is genuinely atomic."""
         with self._lock:
             grp = self._groups.setdefault(group_id, _Group(group_id))
+            # exactly-once keeps the *strict* generation fence: the relaxed
+            # ownership check would let a member that lost and regained a
+            # partition across two rebalances replay its produces (the
+            # at-least-once commit path tolerates that; a transaction must
+            # not)
             if generation is not None and generation != grp.generation:
                 raise FencedError(
                     f"transaction from stale generation {generation} "
@@ -491,6 +666,20 @@ class Broker:
     # stats for the MonitorAgent REST API / benchmarks
     def stats(self) -> dict:
         with self._lock:
+            def _lag(grp: _Group) -> dict[str, int]:
+                # per-topic depth over the topics the group has touched —
+                # the queue_stats counters, surfaced for /broker
+                touched = sorted({tp.topic for tp in grp.committed} |
+                                 {t for m in grp.members.values()
+                                  for t in m.topics})
+                out = {}
+                for t in touched:
+                    if t not in self._topics:
+                        continue
+                    produced, consumed = self._topic_counters(grp, t)
+                    out[t] = max(0, produced - consumed)
+                return out
+
             return {
                 "topics": {
                     t: {str(p): logs[p].end_offset() for p in range(len(logs))}
@@ -506,6 +695,7 @@ class Broker:
                                 grp.committed.items(),
                                 key=lambda kv: (kv[0].topic, kv[0].partition))
                         },
+                        "lag": _lag(grp),
                     }
                     for g, grp in self._groups.items()
                 },
@@ -609,6 +799,28 @@ class Consumer:
                     budget -= len(recs)
             if out or time.time() >= deadline:
                 return out
+            self._broker.wait_for_data(max(0.0, deadline - time.time()))
+
+    # -- leasing (atomic fetch+commit) ------------------------------------------
+
+    def lease(self, timeout: float = 0.0,
+              max_records: int | None = None) -> list[Record]:
+        """Fetch records with their offsets committed atomically (see
+        :meth:`Broker.lease_records`) — the consumption mode for task
+        *leasing*: once returned, a record is this member's responsibility
+        and will never be redelivered by a rebalance. Liveness recovery for
+        a member that dies after leasing is the watchdog's job, exactly the
+        agents' two-level fault-tolerance contract."""
+        if self._closed:
+            raise BrokerError("consumer is closed")
+        deadline = time.time() + timeout
+        max_records = max_records or self._max_poll
+        while True:
+            self._sync_assignment()
+            recs = self._broker.lease_records(self._group, self.member_id,
+                                              max_records)
+            if recs or time.time() >= deadline:
+                return recs
             self._broker.wait_for_data(max(0.0, deadline - time.time()))
 
     # -- offsets ---------------------------------------------------------------

@@ -123,6 +123,11 @@ class MonitorAgent:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._http: ThreadingHTTPServer | None = None
+        # optional autoscale status source (wired by KsaCluster when an
+        # AutoscaleController runs): a zero-arg callable returning the
+        # /autoscale payload — per-pool membership, backlog history, and
+        # the scaling decision log.
+        self._autoscale_source: Any = None
         self.results_handled = 0
         self.resubmissions = 0
         self.legacy_forwards = 0
@@ -322,6 +327,17 @@ class MonitorAgent:
             time.sleep(poll)
         return False
 
+    def attach_autoscale(self, source: Any) -> None:
+        """Register the autoscaler's status callable; served on
+        ``GET /autoscale`` (and detachable with ``None``)."""
+        with self._lock:
+            self._autoscale_source = source
+
+    def autoscale(self) -> dict | None:
+        with self._lock:
+            source = self._autoscale_source
+        return None if source is None else source()
+
     def campaigns(self) -> dict[str, dict]:
         """Latest per-campaign progress snapshots (per-stage done/in-flight/
         failed counters published by pipeline agents), each annotated with
@@ -405,12 +421,19 @@ class MonitorAgent:
                     self._send(200, mon.summary())
                 elif parts == ["broker"]:
                     self._send(200, mon.broker.stats())
+                elif parts == ["autoscale"]:
+                    payload = mon.autoscale()
+                    if payload is None:
+                        self._send(404, {"error": "no autoscaler attached"})
+                    else:
+                        self._send(200, payload)
                 else:
                     self._send(404, {"error": "unknown endpoint",
                                      "endpoints": ["/tasks", "/tasks/<id>",
                                                    "/campaigns",
                                                    "/campaigns/<id>",
-                                                   "/summary", "/broker"]})
+                                                   "/summary", "/broker",
+                                                   "/autoscale"]})
 
         self._http = ThreadingHTTPServer(("127.0.0.1", port), Handler)
         t = threading.Thread(target=self._http.serve_forever,

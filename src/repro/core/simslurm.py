@@ -39,6 +39,11 @@ class NodeState:
     free_gpus: int
     mem_mb: int = 0
     free_mem_mb: int = 0
+    up_at: float = 0.0  # node boots at this wall-clock time (spin-up latency)
+
+    @property
+    def up(self) -> bool:
+        return time.time() >= self.up_at
 
 
 @dataclass
@@ -78,16 +83,23 @@ class SimSlurm:
 
     def __init__(self, nodes: int = 4, cpus_per_node: int = 8,
                  gpus_per_node: int = 0, mem_mb_per_node: int | None = None,
-                 scheduler_interval_s: float = 0.01):
+                 scheduler_interval_s: float = 0.01,
+                 spinup_s: float = 0.0):
         # default memory sizes the node to its cpu count at the control
         # plane's default request (1024 MB/task), so cpu-bound workloads
         # pack exactly as before memory became a packed resource.
         if mem_mb_per_node is None:
             mem_mb_per_node = 1024 * cpus_per_node
+        # ``spinup_s`` models node provisioning latency (powering on a
+        # drained partition / cloud-bursting a node): jobs queue PD until
+        # the node is up, which is exactly the cold-start cost an elastic
+        # autoscaler must weigh before scaling a Slurm pool to zero.
+        up_at = time.time() + spinup_s
+        self.spinup_s = spinup_s
         self.nodes = [
             NodeState(f"node{i:03d}", cpus_per_node, gpus_per_node,
                       cpus_per_node, gpus_per_node,
-                      mem_mb_per_node, mem_mb_per_node)
+                      mem_mb_per_node, mem_mb_per_node, up_at=up_at)
             for i in range(nodes)
         ]
         self.total_cpus = nodes * cpus_per_node
@@ -150,6 +162,7 @@ class SimSlurm:
         with self._lock:
             return {
                 "nodes": len(self.nodes),
+                "nodes_up": sum(n.up for n in self.nodes),
                 "total_cpus": self.total_cpus,
                 "free_cpus": sum(n.free_cpus for n in self.nodes),
                 "free_mem_mb": sum(n.free_mem_mb for n in self.nodes),
@@ -161,6 +174,8 @@ class SimSlurm:
 
     def _try_place(self, job: Job) -> NodeState | None:
         for node in self.nodes:  # first-fit over cpus, gpus, and memory
+            if not node.up:
+                continue  # still spinning up: jobs stay PD (cold start)
             if node.free_cpus >= job.cpus and node.free_gpus >= job.gpus \
                     and node.free_mem_mb >= job.mem_mb:
                 return node

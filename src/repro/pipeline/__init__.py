@@ -54,13 +54,14 @@ execution pools.
 from .agent import PipelineAgent, PipelineError
 from .driver import CampaignResult, run_campaign
 from .spec import PipelineSpec, RetryPolicy, SpecError, Stage
-from .state import (BarrierReleased, CampaignState, CampaignSubmitted,
-                    JournalEvent, LeaseGranted, StageDispatched, StageSkipped,
-                    TaskDone, TaskFailed)
+from .state import (BarrierReleased, CampaignSnapshot, CampaignState,
+                    CampaignSubmitted, JournalEvent, LeaseGranted,
+                    StageDispatched, StageSkipped, TaskDone, TaskFailed)
 from .status import CampaignStatus, StageStatus
 
 __all__ = [
-    "BarrierReleased", "CampaignResult", "CampaignState", "CampaignStatus",
+    "BarrierReleased", "CampaignResult", "CampaignSnapshot", "CampaignState",
+    "CampaignStatus",
     "CampaignSubmitted", "JournalEvent", "LeaseGranted", "PipelineAgent",
     "PipelineError", "PipelineSpec", "RetryPolicy", "SpecError", "Stage",
     "StageDispatched", "StageSkipped", "StageStatus", "TaskDone",

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import math
 import threading
 import time
 from typing import Any, Iterable, Mapping
@@ -56,9 +57,10 @@ from repro.core.scheduling import FairShare, LeasePolicy, PlacementPolicy
 from repro.core.submitter import Submitter
 
 from .spec import PipelineSpec, Stage
-from .state import (CampaignState, CampaignSubmitted, JournalEvent,
-                    LeaseGranted, StageSkipped, TaskDone, TaskFailed,
-                    group_journal, plan_downstream, plan_sources)
+from .state import (JOURNAL_KIND, CampaignSnapshot, CampaignState,
+                    CampaignSubmitted, JournalEvent, LeaseGranted,
+                    StageSkipped, TaskDone, TaskFailed, group_journal,
+                    plan_downstream, plan_sources, snapshot_event)
 from .status import CampaignStatus
 
 log = logging.getLogger(__name__)
@@ -83,6 +85,7 @@ class _CampaignRun:
         self.last_publish = 0.0
         self.recovered = recovered
         self.created_at = time.time()
+        self.compacted_seq = -1  # state.seq at the last compact() snapshot
 
     @property
     def status(self) -> CampaignStatus:
@@ -197,8 +200,13 @@ class PipelineAgent:
         ``weight`` sets this campaign's share of `-new` capacity under the
         agent's lease policy (FairShare: a weight-3 campaign drains three
         ready tasks for every one of a weight-1 peer)."""
-        if weight <= 0:
-            raise PipelineError(f"campaign weight must be positive ({weight})")
+        # a zero/negative weight starves the campaign under weighted round-
+        # robin and NaN poisons every credit comparison in FairShare —
+        # reject all of them here, at the API edge, with a clear error
+        if not math.isfinite(weight) or weight <= 0:
+            raise PipelineError(
+                f"campaign weight must be a positive finite number "
+                f"(got {weight!r})")
         # fail fast on unroutable stage resources (e.g. a label naming no
         # class) — raising here beats stalling mid-campaign in the loop
         for st in spec.topological():
@@ -470,11 +478,16 @@ class PipelineAgent:
             for cid, events in journals.items():
                 if cid in self._campaigns:
                     continue  # already live on this agent
+                # a compacted campaign's journal may start at its snapshot
+                # (the CampaignSubmitted was truncated away) — both carry
+                # the pipeline name needed to look up the spec
                 sub = next((e for e in events
-                            if isinstance(e, CampaignSubmitted)), None)
+                            if isinstance(e, (CampaignSubmitted,
+                                              CampaignSnapshot))), None)
                 if sub is None:
                     log.warning("journal for %s has no CampaignSubmitted "
-                                "(truncated head?) — skipping", cid)
+                                "or snapshot (truncated head?) — skipping",
+                                cid)
                     continue
                 spec = by_name.get(sub.pipeline)
                 if spec is None:
@@ -534,6 +547,120 @@ class PipelineAgent:
             self._emit(run, ev)
         for tid in [t for t, r in run.state.tasks.items() if r.terminal]:
             self._advance(run, tid)
+
+    # -- journal compaction -----------------------------------------------------
+
+    def compact(self, specs: Mapping[str, PipelineSpec]
+                | Iterable[PipelineSpec] | None = None) -> dict:
+        """Bound the ``PREFIX-campaigns`` journal (ROADMAP: the topic used to
+        retain every event forever, since recovery needs history back to the
+        oldest live campaign).
+
+        Two steps, both crash-safe:
+
+        1. **snapshot** — every terminal campaign is folded into a single
+           :class:`~repro.pipeline.state.CampaignSnapshot` journal record
+           (write-ahead, like any other event). Registered campaigns are
+           snapshotted directly; with ``specs`` supplied, journal-only
+           terminal campaigns (evicted past ``retain_finished``, or another
+           agent's finished runs whose pipeline we know) are folded from the
+           journal and snapshotted too.
+        2. **truncate** — each partition's prefix is deleted
+           (:meth:`~repro.core.broker.Broker.truncate_before`, the
+           ``delete_records`` analogue) up to the first record still needed:
+           a live/unknown campaign's journal event, or a compacted
+           campaign's snapshot. Because records are keyed by campaign id, a
+           compacted campaign's events that interleave *behind* a live
+           campaign's first record survive until a later compact — prefix
+           truncation is conservative, never lossy.
+
+        ``recover()`` then folds snapshot-then-events: applying a snapshot
+        wholesale-replaces whatever (possibly truncated) prefix preceded it,
+        so a compacted terminal campaign rebuilds with full result parity
+        (``include_finished=True``) and live campaigns are untouched.
+        Returns ``{"campaigns": [...], "truncated": n, "retained": n}``.
+        This scans the topic once — explicitly invoked maintenance, not the
+        control loop (broker *stats* stay scan-free)."""
+        if specs is None:
+            by_name: dict[str, PipelineSpec] = {}
+        elif isinstance(specs, Mapping):
+            by_name = dict(specs)
+        else:
+            by_name = {s.name: s for s in specs}
+        topic = self.topics["campaigns"]
+        truncated = retained = 0
+        with self._lock:
+            # 1a. snapshot registered terminal campaigns (write-ahead).
+            # Re-running compact as periodic maintenance must be churn-free:
+            # a campaign whose state is unchanged since its last snapshot
+            # (run.compacted_seq) is only re-marked for retention.
+            compacted: dict[str, int] = {}  # campaign_id -> snapshot seq
+            for run in self._campaigns.values():
+                if not run.state.done:
+                    continue
+                if run.compacted_seq != run.state.seq:
+                    self._emit(run, snapshot_event(run.state))
+                    run.compacted_seq = run.state.seq
+                compacted[run.campaign_id] = run.compacted_seq
+            # 1b. with specs: fold + snapshot journal-only terminal campaigns
+            if by_name:
+                journals = group_journal(
+                    [r.value for r in self.broker.read_from(topic)])
+                for cid, events in journals.items():
+                    if cid in self._campaigns or cid in compacted:
+                        continue
+                    if len(events) == 1 and \
+                            isinstance(events[0], CampaignSnapshot):
+                        # already fully compacted: just retain the snapshot
+                        compacted[cid] = events[0].seq
+                        continue
+                    sub = next((e for e in events
+                                if isinstance(e, (CampaignSubmitted,
+                                                  CampaignSnapshot))), None)
+                    spec = by_name.get(sub.pipeline) if sub else None
+                    if spec is None:
+                        continue  # unknown pipeline: keep its journal as-is
+                    state = CampaignState.fold(spec, cid, events)
+                    if not state.done:
+                        continue
+                    ev = dataclasses.replace(snapshot_event(state),
+                                             seq=state.seq + 1,
+                                             ts=time.time())
+                    self._producer.send(topic, ev.to_dict(), key=cid)
+                    self.events_journaled += 1
+                    compacted[cid] = ev.seq
+            # 2. per-partition prefix truncation up to the first keeper
+            for p in range(self.broker.partitions_for(topic)):
+                recs = self.broker.read_from(topic, partition=p)
+                cut = None
+                for rec in recs:
+                    if self._compact_keep(rec.value, compacted):
+                        cut = rec.offset
+                        break
+                if cut is None and recs:  # nothing to keep: drop everything
+                    cut = recs[-1].offset + 1
+                if cut is not None:
+                    truncated += self.broker.truncate_before(
+                        topic, cut, partition=p)
+            retained = len(self.broker.read_from(topic))
+        log.info("compacted %d campaign(s): %d records truncated, %d "
+                 "retained", len(compacted), truncated, retained)
+        return {"campaigns": sorted(compacted), "truncated": truncated,
+                "retained": retained}
+
+    def _compact_keep(self, value: Mapping[str, Any],
+                      compacted: Mapping[str, int]) -> bool:
+        """Must this ``-campaigns`` record survive the current compaction?"""
+        cid = value.get("campaign_id", "")
+        if value.get("kind") == JOURNAL_KIND:
+            if cid not in compacted:
+                return True  # live (or another agent's) campaign: keep all
+            # only the freshly-written snapshot replaces the history; older
+            # snapshots and per-event records are superseded
+            return (value.get("type") == CampaignSnapshot.__name__
+                    and int(value.get("seq", -1)) >= compacted[cid])
+        # progress snapshots: droppable once their campaign is compacted
+        return cid not in compacted
 
     # -- progress publishing (PREFIX-campaigns) -----------------------------------
 

@@ -23,7 +23,11 @@ typed event log:
     short-circuited one task; skips recorded here never re-run predicates
     during replay,
   - :class:`BarrierReleased` — a join barrier fired (followed by the join
-    task's own ``StageDispatched`` / ``StageSkipped``).
+    task's own ``StageDispatched`` / ``StageSkipped``),
+  - :class:`CampaignSnapshot` — a full fold of one (terminal) campaign in a
+    single record, appended by :meth:`PipelineAgent.compact`; applying it
+    replaces everything folded before it, which is what lets compaction
+    truncate the campaign's per-event history off the topic.
 
 * :class:`CampaignState` — the pure reducer. ``fold(spec, events)`` rebuilds
   the exact campaign progress from a journal; ``apply`` is idempotent per
@@ -126,10 +130,56 @@ class TaskFailed(JournalEvent):
     final: bool = False         # True: retry budget exhausted -> FAILED
 
 
+@dataclasses.dataclass(frozen=True)
+class CampaignSnapshot(JournalEvent):
+    """A full fold of one campaign's journal in a single record, written by
+    :meth:`~repro.pipeline.agent.PipelineAgent.compact` for terminal
+    campaigns. Applying it **replaces** whatever state was folded so far, so
+    ``fold(prefix + [snapshot])`` equals ``fold(full_history)`` even after
+    the prefix has been truncated off the topic — the journal-compaction
+    contract that keeps the ``-campaigns`` topic bounded over a stream of
+    campaigns. ``tasks`` carries :class:`TaskRecord` dicts in per-stage
+    creation order (results included, so an evicted campaign rebuilt from
+    its snapshot still answers ``results()``)."""
+
+    pipeline: str = ""
+    state: str = "RUNNING"
+    failure: str | None = None
+    items: tuple = ()
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    weight: float = 1.0
+    started_at: float = 0.0
+    finished_at: float | None = None
+    stages: Mapping[str, Mapping[str, Any]] = \
+        dataclasses.field(default_factory=dict)
+    tasks: tuple = ()
+    joins_fired: tuple = ()
+
+
+def snapshot_event(state: "CampaignState") -> CampaignSnapshot:
+    """Build the (unstamped) snapshot record folding ``state``."""
+    stages = {}
+    for n, ss in state.stages.items():
+        d = ss.to_dict()
+        for k in ("in_flight", "complete", "duplicates", "name", "script"):
+            d.pop(k, None)  # derived / respawned / observability-only
+        stages[n] = d
+    tasks = tuple(state.tasks[tid].to_dict()
+                  for n in state.by_stage for tid in state.by_stage[n])
+    return CampaignSnapshot(
+        campaign_id=state.campaign_id, pipeline=state.pipeline,
+        state=state.state, failure=state.failure, items=tuple(state.items),
+        params=dict(state.params), weight=state.weight,
+        started_at=state.started_at, finished_at=state.finished_at,
+        stages=stages, tasks=tasks,
+        joins_fired=tuple(sorted(state.joins_fired)))
+
+
 EVENT_TYPES: dict[str, type] = {
     cls.__name__: cls
     for cls in (CampaignSubmitted, StageDispatched, StageSkipped,
-                BarrierReleased, LeaseGranted, TaskDone, TaskFailed)
+                BarrierReleased, LeaseGranted, TaskDone, TaskFailed,
+                CampaignSnapshot)
 }
 
 
@@ -143,7 +193,7 @@ def event_from_dict(value: Mapping[str, Any]) -> JournalEvent:
     cls = EVENT_TYPES[value["type"]]
     data = dict(value.get("data", {}))
     # msgpack round-trips tuples as lists; restore the frozen-field shapes
-    for k in ("items", "dep_ids"):
+    for k in ("items", "dep_ids", "joins_fired", "tasks"):
         if k in data and isinstance(data[k], list):
             data[k] = tuple(data[k])
     return cls(campaign_id=value["campaign_id"], seq=int(value.get("seq", -1)),
@@ -247,6 +297,12 @@ class CampaignState:
             if ev.seq <= self.seq:
                 return False
             self.seq = ev.seq
+        if not self.initialized and \
+                not isinstance(ev, (CampaignSubmitted, CampaignSnapshot)):
+            # truncated head (journal compaction cut mid-history): events
+            # before the campaign's creation record are uninterpretable —
+            # skip them; the snapshot that follows restores state wholesale
+            return False
         handler = getattr(self, f"_apply_{type(ev).__name__}")
         return handler(ev)
 
@@ -341,6 +397,57 @@ class CampaignState:
             self.state = self.FAILED
             self.failure = ev.reason
             self.finished_at = ev.ts
+        return True
+
+    def _apply_CampaignSnapshot(self, ev: CampaignSnapshot) -> bool:
+        """Wholesale restore: a snapshot *replaces* everything folded so far
+        (which may be nothing, or a truncated — and therefore meaningless —
+        prefix of the original history)."""
+        self.pipeline = ev.pipeline or self.spec.name
+        self.state = ev.state
+        self.failure = ev.failure
+        self.items = list(ev.items)
+        self.params = dict(ev.params)
+        self.weight = float(ev.weight)
+        self.started_at = float(ev.started_at)
+        self.finished_at = ev.finished_at
+        self.stages = {}
+        self.tasks = {}
+        self.by_stage = {}
+        self.ready = {}
+        self._mapped = set()
+        for st in self.spec.topological():
+            sd = dict(ev.stages.get(st.name, {}))
+            self.stages[st.name] = StageStatus(
+                name=st.name, script=st.script,
+                expected=int(sd.get("expected", 0)),
+                submitted=int(sd.get("submitted", 0)),
+                done=int(sd.get("done", 0)),
+                failed=int(sd.get("failed", 0)),
+                retried=int(sd.get("retried", 0)),
+                errors=int(sd.get("errors", 0)),
+                skipped=int(sd.get("skipped", 0)))
+            self.by_stage[st.name] = []
+            self.ready[st.name] = []
+        for td in ev.tasks:  # per-stage creation order (see snapshot_event)
+            rec = TaskRecord(
+                task_id=td["task_id"], stage=td["stage"],
+                index=int(td.get("index", 0)),
+                params=dict(td.get("params", {})),
+                dep_ids=tuple(td.get("dep_ids", ())),
+                attempts=int(td.get("attempts", 0)),
+                done=bool(td.get("done", False)),
+                failed=bool(td.get("failed", False)),
+                skipped=bool(td.get("skipped", False)),
+                result=(dict(td["result"])
+                        if td.get("result") is not None else None))
+            self.tasks[rec.task_id] = rec
+            self.by_stage[rec.stage].append(rec.task_id)
+            for dep in rec.dep_ids:
+                self._mapped.add((dep, rec.stage))
+            if not rec.terminal and rec.attempts == 0:
+                self.ready[rec.stage].append(rec.task_id)
+        self.joins_fired = set(ev.joins_fired)
         return True
 
     def _maybe_complete(self, ts: float) -> None:

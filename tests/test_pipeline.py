@@ -857,3 +857,138 @@ def test_knots_pipeline_skips_localize_without_survivors():
     finally:
         w.stop()
         broker.close()
+
+
+# ---------------------------------------------------------------------------
+# journal compaction (ISSUE satellite: snapshot + truncate terminal campaigns)
+# ---------------------------------------------------------------------------
+
+def test_campaign_weight_validated_at_submit():
+    """ISSUE satellite: zero/negative weights starve (and NaN poisons) the
+    FairShare weighted round-robin — all rejected at the API edge."""
+    broker = Broker(default_partitions=2)
+    pipe = PipelineAgent(broker, "wv", poll_interval_s=0.01)
+    spec = PipelineSpec("tiny", [Stage("src", "pl_double", fan_out=4)])
+    try:
+        for bad in (0, -1.0, float("nan"), float("inf")):
+            with pytest.raises(PipelineError):
+                pipe.submit_campaign(spec, [1], weight=bad)
+        assert pipe.campaigns() == {}  # nothing half-registered
+    finally:
+        broker.close()
+
+
+def test_snapshot_fold_equals_full_history_fold():
+    """The compaction contract at the reducer level: folding just the
+    CampaignSnapshot record reproduces the exact domain state of folding
+    the full event history."""
+    from repro.pipeline.state import snapshot_event
+
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "sf", slots=2, poll_interval_s=0.005).start()
+    spec = _three_stage(fan_out=2)
+    try:
+        res = run_campaign(spec, [1, 2, 3, 4], broker=broker, prefix="sf",
+                           timeout_s=60.0)
+        events = _read_journal(broker, "sf", res.campaign_id)
+        full = CampaignState.fold(spec, res.campaign_id, events)
+        snap = dataclasses.replace(snapshot_event(full), seq=full.seq + 1)
+        restored = CampaignState.fold(spec, res.campaign_id, [snap])
+        assert restored == full  # domain-snapshot equality
+        # and folding a truncated prefix + the snapshot is equally exact
+        garbled = CampaignState.fold(spec, res.campaign_id,
+                                     events[3:7] + [snap])
+        assert garbled == full
+    finally:
+        w.stop()
+        broker.close()
+
+
+def test_compact_bounds_journal_and_keeps_recovery_parity():
+    """compact() collapses each terminal campaign to one snapshot record and
+    truncates its event history off the topic; recover(include_finished=True)
+    on a fresh agent still rebuilds results exactly."""
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "cp", slots=2, poll_interval_s=0.005).start()
+    spec = _three_stage(fan_out=2)
+    topics = topic_names("cp")
+    pipe = PipelineAgent(broker, "cp", poll_interval_s=0.005).start()
+    try:
+        cids, finals = [], {}
+        for i in range(3):
+            res = run_campaign(spec, list(range(4)), broker=broker,
+                               prefix="cp", agent=pipe, timeout_s=60.0)
+            cids.append(res.campaign_id)
+            finals[res.campaign_id] = res.final
+        before = len(broker.read_from(topics["campaigns"]))
+        out = pipe.compact()
+        after = len(broker.read_from(topics["campaigns"]))
+        assert sorted(out["campaigns"]) == sorted(cids)
+        assert out["truncated"] > 0
+        assert after < before / 3  # bounded: one snapshot per campaign
+        # repeat compaction is churn-free: no new snapshots, nothing cut
+        journaled = pipe.events_journaled
+        out2 = pipe.compact()
+        assert pipe.events_journaled == journaled
+        assert out2["truncated"] == 0
+        assert len(broker.read_from(topics["campaigns"])) == after
+        # a fresh agent folds snapshot-then-events back to full parity
+        rec = PipelineAgent(broker, "cp", agent_id="cp-rec",
+                            poll_interval_s=0.005).start()
+        assert rec.recover([spec]) == []  # terminal: not resurrected
+        assert sorted(rec.recover([spec], include_finished=True)) == \
+            sorted(cids)
+        for cid in cids:
+            st = rec.status(cid)
+            assert st.state == "COMPLETED"
+            assert rec.final_result(cid) == finals[cid]
+            assert len(rec.results(cid)["fwd"]) == 2
+        rec.stop()
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()
+
+
+def test_compact_preserves_live_campaigns_and_evicted_with_specs():
+    """Compaction must never touch a live campaign's journal (recovery needs
+    it), and with specs supplied it also folds + compacts terminal campaigns
+    already evicted from agent memory."""
+    broker = Broker(default_partitions=2)
+    w = WorkerAgent(broker, "cl", slots=2, poll_interval_s=0.005).start()
+    fast = PipelineSpec("tiny", [Stage("src", "pl_double", fan_out=4)])
+    slow = PipelineSpec("slow", [
+        Stage("w", "pl_slow", fan_out=1, params={"duration": 30.0}),
+    ])
+    topics = topic_names("cl")
+    pipe = PipelineAgent(broker, "cl", poll_interval_s=0.005,
+                         retain_finished=0).start()
+    try:
+        done_cid = pipe.submit_campaign(fast, [1, 2, 3])
+        assert _wait(lambda: done_cid not in pipe.campaigns(), timeout=30.0)
+        live_cid = pipe.submit_campaign(slow, [[9]], campaign_id="camp-live")
+        assert _wait(lambda: pipe.status(live_cid)
+                     .stages["w"].submitted == 1, timeout=10.0)
+        # without specs the evicted campaign is unknown -> kept verbatim
+        out = pipe.compact()
+        assert out["campaigns"] == []
+        assert len(_read_journal(broker, "cl", done_cid)) > 1
+        # with specs it is folded, snapshotted, and truncated to one record
+        out = pipe.compact({"tiny": fast})
+        assert out["campaigns"] == [done_cid]
+        done_events = _read_journal(broker, "cl", done_cid)
+        assert [type(e).__name__ for e in done_events] == \
+            ["CampaignSnapshot"]
+        # the live campaign's full journal survived and still recovers
+        live_events = _read_journal(broker, "cl", live_cid)
+        assert any(type(e).__name__ == "CampaignSubmitted"
+                   for e in live_events)
+        pipe.crash()
+        rec = PipelineAgent(broker, "cl", agent_id="cl-rec",
+                            poll_interval_s=0.005).start()
+        assert rec.recover([fast, slow]) == [live_cid]
+        rec.stop()
+    finally:
+        pipe.stop()
+        w.stop()
+        broker.close()

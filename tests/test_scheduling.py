@@ -130,6 +130,9 @@ def test_pipeline_routes_stage_resources_end_to_end():
         res = c.run_campaign(spec, list(range(4)), timeout_s=60.0)
         assert res.status.state == "COMPLETED"
         infer_ids = [f"{res.campaign_id}-infer-{i:05d}" for i in range(4)]
+        # run_campaign returns on the pipeline agent's own consumer; the
+        # monitor's mirror is async — wait for it before asserting on it
+        assert c.wait_all(infer_ids, timeout=10.0)
         for tid in infer_ids:
             assert c.task(tid).agent_id == gpu.agent_id, tid
 

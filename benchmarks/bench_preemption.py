@@ -1,0 +1,135 @@
+"""Preemptive fair share benchmark (ISSUE: lease-lifecycle tentpole).
+
+The over-share scenario FairShare alone cannot fix: a big campaign of long
+tasks is submitted first and its leases occupy every pool slot; a small,
+heavier-weight campaign arrives moments later. Submission-time arbitration
+(weighted round-robin at grant time) only helps once a slot frees *on its
+own* — the small campaign's tail latency is bounded below by the big
+campaign's task duration. Preemptive fair share
+(``FairShare(preempt_factor=...)`` + ``RetryPolicy(max_preemptions=...)``)
+revokes the over-share campaign's longest-running leases through
+``Broker.revoke_lease(reason="preempt")`` — cancel, commit fence, journaled
+``LeaseRevoked``, regrant through the pump — so the starved campaign runs
+immediately and the preempted work is requeued, not lost.
+
+Reported per config (submission-time-only vs preemptive): the small
+campaign's **tail latency** (time from its submission to its completion),
+the big campaign's makespan (the price paid for preempting), preemption
+count, and the loss/duplication audit. Acceptance bar (asserted here and
+in tests/test_lease.py): preemptive tail latency ≥ 2x better than
+submission-time-only FairShare, with zero lost and zero double-run tasks.
+
+A ``BENCH_preemption.json`` summary is written next to the repo root so
+the perf trajectory tracks preemption across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.cluster import KsaCluster
+from repro.core import FairShare
+from repro.pipeline import PipelineSpec, RetryPolicy, Stage
+
+BIG_TASKS = 8
+BIG_TASK_S = 1.0
+SMALL_TASKS = 2
+SMALL_TASK_S = 0.05
+HEAD_START_S = 0.3
+SLOTS = 2
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_preemption.json")
+
+
+def _spec(name: str, n_tasks_duration: float, *,
+          max_preemptions: int = 0) -> PipelineSpec:
+    return PipelineSpec(name, [
+        Stage("work", "sleep", fan_out=1,
+              params={"duration": n_tasks_duration},
+              retry=RetryPolicy(max_attempts=3, timeout_s=60.0,
+                                max_preemptions=max_preemptions)),
+    ])
+
+
+def _run_config(name: str, *, preemptive: bool) -> dict:
+    big = _spec(f"big-{name}", BIG_TASK_S,
+                max_preemptions=BIG_TASKS if preemptive else 0)
+    small = _spec(f"small-{name}", SMALL_TASK_S)
+    lease = FairShare(preempt_factor=1.5) if preemptive else FairShare()
+    with KsaCluster(prefix=f"pre-{name}", workers=1, worker_slots=SLOTS,
+                    poll_interval_s=0.005, lease=lease,
+                    max_in_flight_total=SLOTS) as c:
+        t0 = time.perf_counter()
+        bid = c.submit_campaign(big, list(range(BIG_TASKS)), weight=1.0)
+        time.sleep(HEAD_START_S)
+        t_small = time.perf_counter()
+        sid = c.submit_campaign(small, list(range(SMALL_TASKS)), weight=4.0)
+        st_small = c.wait_campaign(sid, timeout=120.0)
+        tail_s = time.perf_counter() - t_small
+        st_big = c.wait_campaign(bid, timeout=300.0)
+        big_makespan_s = time.perf_counter() - t0
+        assert st_small.state == "COMPLETED" and st_big.state == "COMPLETED"
+        done = sum(s.done for st in (st_big, st_small)
+                   for s in st.stages.values())
+        expect = sum(s.expected for st in (st_big, st_small)
+                     for s in st.stages.values())
+        dups = sum(s.duplicates for st in (st_big, st_small)
+                   for s in st.stages.values())
+        return {
+            "small_tail_s": round(tail_s, 3),
+            "big_makespan_s": round(big_makespan_s, 3),
+            "preemptions": st_big.preemptions,
+            "revoked": {k: v for k, v in
+                        c.status()["leases"]["revoked"].items() if v},
+            "tasks_done": done,
+            "tasks_expected": expect,
+            "lost": expect - done,
+            "duplicates_fenced": dups,
+        }
+
+
+def bench_preemption() -> list[tuple[str, float, str]]:
+    baseline = _run_config("base", preemptive=False)
+    preempt = _run_config("pe", preemptive=True)
+
+    speedup = baseline["small_tail_s"] / max(preempt["small_tail_s"], 1e-9)
+    # the acceptance contract: >= 2x tail improvement, nothing lost, nothing
+    # double-run — in either configuration
+    assert speedup >= 2.0, (baseline, preempt)
+    for cfg in (baseline, preempt):
+        assert cfg["lost"] == 0 and cfg["duplicates_fenced"] == 0, cfg
+    assert preempt["preemptions"] >= 1
+
+    payload = {
+        "over_share_tail_latency": {
+            "big_tasks": BIG_TASKS, "big_task_s": BIG_TASK_S,
+            "small_tasks": SMALL_TASKS, "small_task_s": SMALL_TASK_S,
+            "slots": SLOTS, "head_start_s": HEAD_START_S,
+            "submission_time_only": baseline,
+            "preemptive": preempt,
+            "tail_speedup": round(speedup, 2),
+            "zero_loss": baseline["lost"] == 0 and preempt["lost"] == 0,
+            "zero_duplicates": (baseline["duplicates_fenced"] == 0
+                                and preempt["duplicates_fenced"] == 0),
+        },
+    }
+    with open(_JSON_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+
+    return [
+        ("preemption_baseline_tail", baseline["small_tail_s"] * 1e6,
+         f"submission-time-only FairShare: starved campaign tail "
+         f"{baseline['small_tail_s']:.2f} s (blocked behind "
+         f"{BIG_TASK_S:.1f}s leases)"),
+        ("preemption_preemptive_tail", preempt["small_tail_s"] * 1e6,
+         f"preemptive FairShare: tail {preempt['small_tail_s']:.2f} s "
+         f"({speedup:.1f}x vs submission-time-only; target >= 2x), "
+         f"{preempt['preemptions']} preemptions, "
+         f"lost={preempt['lost']} dups={preempt['duplicates_fenced']}"),
+        ("preemption_big_makespan", preempt["big_makespan_s"] * 1e6,
+         f"preempted campaign makespan {preempt['big_makespan_s']:.2f} s "
+         f"vs {baseline['big_makespan_s']:.2f} s unpreempted — the requeue "
+         f"cost of giving slots back"),
+    ]

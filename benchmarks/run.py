@@ -10,7 +10,7 @@ import traceback
 
 def main() -> None:
     from . import (bench_apps, bench_autoscale, bench_core, bench_pipeline,
-                   bench_recovery, bench_routing)
+                   bench_preemption, bench_recovery, bench_routing)
 
     suites = [
         ("broker_throughput", bench_core.bench_broker_throughput),
@@ -29,6 +29,7 @@ def main() -> None:
         ("journal_overhead", bench_recovery.bench_journal_overhead),
         ("recovery_time", bench_recovery.bench_recovery_time),
         ("autoscale_burst", bench_autoscale.bench_autoscale_burst),
+        ("preemption", bench_preemption.bench_preemption),
         ("train_step", bench_apps.bench_train_step),
         ("serve_continuous_batching",
          bench_apps.bench_serve_continuous_batching),

@@ -24,10 +24,36 @@ history. The journal records, in per-campaign ``seq`` order::
     StageDispatched   {stage, task_id, index, params,     one task planned
                        dep_ids}
     LeaseGranted      {task_id, attempt}                  one (re)submission
+    LeaseRevoked      {task_id, reason}                   lease taken back
     TaskDone          {task_id, result}                   first result wins
     TaskFailed        {task_id, reason, cause, final}     error / exhaustion
     StageSkipped      {stage, task_id, index, dep_ids}    conditional edge
     BarrierReleased   {stage}                             join fired once
+
+Lease lifecycle — how work is taken *back*
+------------------------------------------
+Every task an agent accepts holds a broker-tracked lease
+(``repro.core.lease``): GRANTED → RUNNING → DONE/FAILED, or
+REVOKED(reason) when the control plane reclaims the slot. Revocation
+reasons: ``watchdog`` (hung/stale task — agent and monitor watchdogs),
+``drain`` (graceful agent removal / autoscale shrink), ``scancel``
+(Slurm walltime or operator cancel — also ``KsaCluster.revoke(task_id)``),
+``mem_overage`` (the task's reported RSS exceeded its ``Resources.mem_mb``
+request), and ``preempt`` (fair-share preemption, below).
+``Broker.revoke_lease`` fires the task's ``check_cancel``, fences the old
+holder's result at the commit gate, and requeues the record atomically —
+which is why the knot stages thread ``check_cancel`` through every
+O(chain-length) loop: a revoked localization stops within one shrink step,
+not after the whole batch. Campaign revocations are journaled
+(``LeaseRevoked`` above) so ``recover()`` replays them like completions.
+
+Preemptive FairShare knobs: ``KsaCluster(lease=FairShare(preempt_factor=
+2.0))`` names a campaign holding more than ``preempt_factor`` times its
+weighted share of in-flight leases while a peer with ready work is
+starved; ``RetryPolicy(max_preemptions=N)`` on a stage opts the campaign
+in (the bound is per campaign, the max over its stages, and preemptions
+do not consume the ``max_attempts`` retry budget). See
+``benchmarks/bench_preemption.py`` for the over-share tail-latency win.
 
 If this process is ``kill -9``'d mid-campaign, a fresh process on the same
 broker resumes it::

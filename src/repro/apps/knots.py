@@ -140,13 +140,16 @@ def writhe_and_acn(coords: jax.Array, *, use_pallas: bool = False,
 
 
 def knot_core(wmap: np.ndarray, threshold: float = WRITHE_KNOT_THRESHOLD,
-              min_len: int = 16) -> tuple[int, int] | None:
+              min_len: int = 16, check_cancel=None) -> tuple[int, int] | None:
     """Knot-core localization (paper §4: the subchain heuristic replacing
     the O(n²)-subchain Alexander knot map at AlphaFold scale).
 
     Shrinks [a, b) greedily from both ends while |writhe(subchain)| stays
     above threshold; O(n) evaluations over the precomputed map's prefix
-    sums instead of O(n²) invariant computations."""
+    sums instead of O(n²) invariant computations. ``check_cancel`` is
+    called once per shrink step — the O(chain-length) loop here is where a
+    long localization actually spends its time, so a revoked lease must be
+    observed *inside* it, not only between structures."""
     n = wmap.shape[0]
     # 2D prefix sums for O(1) subchain writhe
     ps = np.zeros((n + 1, n + 1))
@@ -160,6 +163,8 @@ def knot_core(wmap: np.ndarray, threshold: float = WRITHE_KNOT_THRESHOLD,
         return None
     changed = True
     while changed and b - a > min_len:
+        if check_cancel is not None:
+            check_cancel()
         changed = False
         if abs(sub_writhe(a + 1, b)) >= threshold:
             a += 1
@@ -201,11 +206,17 @@ def _screen_batch(ids: list[int], n_points: int, use_pallas: bool
 
 
 def _localize_cores(survivors: list[int], n_points: int, use_pallas: bool,
-                    check_cancel=None) -> dict[str, list[int]]:
+                    check_cancel) -> dict[str, list[int]]:
     """Knot-core localization for screen survivors. Shared by the flat
     ``knot_batch`` task and the pipeline ``knot_localize`` stage so the two
     paths cannot drift apart (flat-vs-campaign parity is asserted in tests
-    and examples)."""
+    and examples).
+
+    ``check_cancel`` is required and called unconditionally in every
+    O(chain-length) loop (here per structure, and inside each
+    :func:`knot_core` shrink loop): a revoked lease
+    (``Broker.revoke_lease`` — watchdog, preemption, drain, scancel) stops
+    the task promptly instead of after the whole batch."""
     cores: dict[str, list[int]] = {}
     if not survivors:
         return cores
@@ -214,11 +225,10 @@ def _localize_cores(survivors: list[int], n_points: int, use_pallas: bool,
                                 interpret=use_pallas)
     wmap_np = np.asarray(wmap)
     for k, i in enumerate(survivors):
-        core = knot_core(wmap_np[k])
+        check_cancel()
+        core = knot_core(wmap_np[k], check_cancel=check_cancel)
         if core is not None:
             cores[str(i)] = list(core)
-        if check_cancel is not None:
-            check_cancel()
     return cores
 
 

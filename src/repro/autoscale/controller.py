@@ -285,4 +285,9 @@ class AutoscaleController:
                 "policy": type(self.config.policy).__name__,
                 "pools": pools,
                 "decisions": list(self._decisions),
+                # unified stop-path telemetry: every scale-down drain's
+                # requeues show up as reason="drain" revocations here,
+                # alongside watchdog/preempt/mem_overage/scancel ones — one
+                # ledger for every way the control plane takes work back
+                "leases": self.cluster.broker.lease_stats(),
             }

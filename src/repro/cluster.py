@@ -32,6 +32,7 @@ from typing import TYPE_CHECKING, Any, Callable, Iterable, Mapping
 
 from repro.core.broker import Broker
 from repro.core.agents import AgentBase, ClusterAgent, WorkerAgent
+from repro.core.lease import RevokeReason
 from repro.core.monitor import MonitorAgent, TaskEntry
 from repro.core.scheduling import (LeasePolicy, PlacementPolicy,
                                    ResourceClassPolicy, ResourceProfile)
@@ -82,6 +83,8 @@ class KsaCluster:
                  pipeline_task_timeout_s: float | None = None,
                  pipeline_journal: bool = True,
                  max_in_flight_total: int | None = None,
+                 compact_interval_s: float | None = None,
+                 compact_every_events: int | None = None,
                  poll_interval_s: float = 0.01,
                  session_timeout_s: float | None = None,
                  default_partitions: int = 4,
@@ -101,6 +104,11 @@ class KsaCluster:
         self.pipeline_task_timeout_s = pipeline_task_timeout_s
         self.pipeline_journal = pipeline_journal
         self.max_in_flight_total = max_in_flight_total
+        # scheduled journal compaction (ROADMAP open item): with either knob
+        # set, the monitor loop runs pipeline compact() on a period and/or
+        # whenever that many new journal events have been ingested.
+        self.compact_interval_s = compact_interval_s
+        self.compact_every_events = compact_every_events
         self.poll_interval_s = poll_interval_s
         self._agent_kw = dict(agent_kw or {})
         self._monitor_kw = dict(monitor_kw or {})
@@ -152,6 +160,12 @@ class KsaCluster:
                                                 **kw).start()
                     if self._http:
                         self._http_port = self.monitor.start_http(0)
+                    if self.compact_interval_s is not None or \
+                            self.compact_every_events is not None:
+                        self.monitor.attach_compaction(
+                            self._auto_compact,
+                            interval_s=self.compact_interval_s,
+                            every_events=self.compact_every_events)
                 for _ in range(self._spec["workers"]):
                     self.add_worker(slots=self._spec["worker_slots"])
                 for _ in range(self._spec["gpu_workers"]):
@@ -409,6 +423,36 @@ class KsaCluster:
         and compacted too. See :meth:`~repro.pipeline.PipelineAgent.compact`."""
         return self.pipeline.compact(specs)
 
+    def _auto_compact(self) -> dict | None:
+        """Scheduled-compaction callback run from the monitor loop; a no-op
+        (None) until a pipeline agent exists — flat deployments never
+        compact, and never pay for a pipeline consumer either."""
+        with self._lock:
+            pipeline = self._pipeline
+        if pipeline is None or self._stopped:
+            return None
+        return pipeline.compact()
+
+    # -- lease lifecycle --------------------------------------------------------
+
+    def revoke(self, task_id: str, reason: str = RevokeReason.SCANCEL, *,
+               requeue: bool | None = None) -> bool:
+        """Operator-facing ``scancel`` analogue: revoke a task's live lease
+        through :meth:`~repro.core.broker.Broker.revoke_lease` — the holder
+        is cancelled, its commit fenced, and the task requeued onto its
+        class topic for another pool to pick up. ``requeue=None`` (default)
+        applies the same split as every internal stop-path: flat tasks are
+        broker-requeued; campaign tasks are only cancelled+fenced, and the
+        owning PipelineAgent resubmits them on its journaled ``RetryPolicy``
+        (a broker requeue behind its back would race its watchdog into a
+        double execution). Returns False if the task holds no live lease
+        (finished, or not yet leased)."""
+        self._require_started()
+        if requeue is None:
+            view = self.broker.lease_view(task_id)
+            requeue = view is None or view.get("campaign_id") is None
+        return self.broker.revoke_lease(task_id, reason, requeue=requeue)
+
     def campaign_status(self, campaign_id: str):
         return self.pipeline.status(campaign_id)
 
@@ -434,12 +478,17 @@ class KsaCluster:
             "started": self.started,
             "agents": agents,
             "broker": self.broker.stats(),
+            # unified stop-path telemetry: grants, completions, and
+            # revocations by reason (watchdog / preempt / mem_overage /
+            # drain / scancel) across every pool and campaign
+            "leases": self.broker.lease_stats(),
         }
         if self.monitor is not None:
             out["monitor"] = self.monitor.summary()
         if pipeline is not None:
             out["campaigns"] = {c: s.to_dict()
                                 for c, s in pipeline.campaigns().items()}
+            out["preemptions"] = pipeline.preemptions
         if self.autoscaler is not None:
             out["autoscale"] = self.autoscaler.status()
         return out

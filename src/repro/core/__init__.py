@@ -31,6 +31,7 @@ from .broker import (Broker, BrokerError, Consumer, FencedError, Producer,
                      Record, TopicPartition)
 from .computing import (ClusterComputing, TaskCancelled, register_script,
                         registered_scripts, resolve_script)
+from .lease import Lease, RevokeReason
 from .scheduling import (FairShare, FifoLease, LeasePolicy, PlacementPolicy,
                          ResourceClassPolicy, ResourceProfile,
                          SingleTopicPolicy, class_topic)
@@ -46,8 +47,9 @@ __all__ = [
     "AgentBase", "Broker", "BrokerError", "CampaignEvent", "ClusterAgent",
     "ClusterComputing",
     "Consumer", "ErrorMessage", "FairShare", "FencedError", "FifoLease",
-    "LeasePolicy", "MonitorAgent", "PlacementPolicy", "Producer",
+    "Lease", "LeasePolicy", "MonitorAgent", "PlacementPolicy", "Producer",
     "Record", "ResourceClassPolicy", "ResourceProfile", "Resources",
+    "RevokeReason",
     "ResultMessage", "SimSlurm", "SingleTopicPolicy", "StatusUpdate",
     "Submitter", "TaskCancelled", "TaskEntry", "TaskMessage", "TaskStatus",
     "TopicPartition", "WorkerAgent", "class_topic", "new_task_id",

@@ -34,6 +34,19 @@ partitions rebalance to survivors, requeues deferred leases back onto their
 class topics, lets in-flight tasks finish (heartbeating throughout, so the
 monitor never mistakes a draining agent for a dead one), and only then
 stops — no task is lost and none is double-run.
+
+Every stop-path above routes through the unified lease layer
+(:mod:`repro.core.lease`): an accepted task holds a broker-tracked
+:class:`~repro.core.lease.Lease` whose execution is started through
+:meth:`~repro.core.broker.Broker.claim_start` (binding the cancel event),
+committed through the :meth:`~repro.core.broker.Broker.complete_lease`
+fence, and taken back through :meth:`~repro.core.broker.Broker.revoke_lease`
+— the agent watchdog (``reason="watchdog"``), drain requeues
+(``reason="drain"``), SimSlurm walltime/scancel policing
+(``reason="scancel"``), and memory-overage policing
+(``reason="mem_overage"``) are all callers of that one primitive, so a
+revoked task is cancelled, its stale verdict fenced, and its record
+requeued in one atomic broker operation.
 """
 from __future__ import annotations
 
@@ -46,7 +59,9 @@ from typing import Any
 
 from .broker import Broker, Consumer, Producer
 from .computing import ClusterComputing, resolve_script
-from .messages import StatusUpdate, TaskMessage, TaskStatus, topic_names
+from .lease import RevokeReason
+from .messages import (ErrorMessage, StatusUpdate, TaskMessage, TaskStatus,
+                       topic_names)
 from .scheduling import PlacementPolicy, ResourceClassPolicy, ResourceProfile
 from .simslurm import SimSlurm
 
@@ -93,6 +108,8 @@ class _Running:
     slurm_job_id: int | None = None
     started_at: float = field(default_factory=time.time)
     last_heartbeat: float = field(default_factory=time.time)
+    computing: Any = None            # live ClusterComputing (mem sampling)
+    mem_tolerated: bool = False      # over-budget but past the revoke limit
 
 
 class AgentBase:
@@ -108,7 +125,8 @@ class AgentBase:
                  placement: PlacementPolicy | None = None,
                  poll_interval_s: float = 0.05,
                  heartbeat_interval_s: float = 0.5,
-                 default_timeout_s: float | None = None):
+                 default_timeout_s: float | None = None,
+                 max_revoke_requeues: int = 3):
         self.broker = broker
         self.prefix = prefix
         self.topics = topic_names(prefix)
@@ -146,11 +164,18 @@ class AgentBase:
         self._draining = threading.Event()
         self._drain_deadline: float | None = None
         self._drain_entered = False
+        # revocation-requeue bound: past this many attempts, mem-overage
+        # policing tolerates the task instead of revoke-looping it forever
+        # (the same spirit as the oversized-task admission escape hatch).
+        self.max_revoke_requeues = max_revoke_requeues
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.tasks_rerouted = 0
         self.tasks_deferred = 0
         self.tasks_requeued = 0
+        self.tasks_revoked = 0
+        self.tasks_dropped_revoked = 0
+        self.mem_revoked = 0
         self.heartbeat_failures = 0
 
     # -- capacity -------------------------------------------------------------
@@ -256,6 +281,9 @@ class AgentBase:
         self.tasks_rerouted += 1
         log.warning("agent %s: rerouting misplaced task %s to %s",
                     self.agent_id, task.task_id, target)
+        # give the lease up without a verdict: the rerouted record grants a
+        # fresh one to whichever equipped agent leases it
+        self.broker.forget_lease(task.task_id, self._consumer.member_id)
         self._producer.send(target, task.to_dict(), key=task.task_id)
         return False
 
@@ -275,6 +303,18 @@ class AgentBase:
 
     # -- watchdog (paper §3: cancel hung / timed-out tasks) -----------------------
 
+    def _revoke_run(self, run: _Running, reason: str, *,
+                    requeue: bool) -> bool:
+        """Route one in-flight task through the unified reclamation
+        primitive (:meth:`Broker.revoke_lease`): cancel + commit fence
+        (+ requeue). False when no live lease exists — caller falls back to
+        the plain cancel_event (legacy direct-wired agents)."""
+        if not self.broker.revoke_lease(run.task.task_id, reason,
+                                        requeue=requeue):
+            return False
+        self.tasks_revoked += 1
+        return True
+
     def _watchdog(self) -> None:
         now = time.time()
         with self._lock:
@@ -284,11 +324,64 @@ class AgentBase:
             if timeout is None:
                 continue
             if now - run.started_at > timeout and not run.cancel.is_set():
-                log.warning("agent %s: task %s exceeded %.1fs — cancelling",
+                log.warning("agent %s: task %s exceeded %.1fs — revoking",
                             self.agent_id, tid, timeout)
-                self._cancel_task(run)
+                # revoke without requeue: the TIMEOUT status keeps the
+                # redelivery *decision* where the attempt budget lives (the
+                # MonitorAgent for flat tasks, the PipelineAgent's
+                # RetryPolicy for campaign tasks); the revocation itself
+                # fences this attempt's late verdict either way.
+                if not self._revoke_run(run, RevokeReason.WATCHDOG,
+                                        requeue=False):
+                    self._cancel_task(run)
                 self._send_status(run.task, TaskStatus.TIMEOUT,
                                   timeout_s=timeout)
+        self._police_mem(items)
+
+    def _police_mem(self, items: list[tuple[str, _Running]]) -> None:
+        """Mem-overage policing: sample each running task's self-reported
+        RSS against its ``Resources.mem_mb`` request and revoke over-budget
+        leases (admission packs requests; this polices *usage*). Flat tasks
+        are requeued with a bumped attempt up to ``max_revoke_requeues``,
+        then tolerated (mirroring the oversized-task admission escape
+        hatch); campaign tasks get an ErrorMessage instead of a broker
+        requeue so the owning PipelineAgent retries them on its journaled
+        ``RetryPolicy`` budget."""
+        for tid, run in items:
+            comp = run.computing
+            if comp is None or run.cancel.is_set() or run.mem_tolerated:
+                continue
+            used = float(getattr(comp, "mem_used_mb", 0.0) or 0.0)
+            budget = run.task.resources.mem_mb
+            if budget <= 0 or used <= budget:
+                continue
+            task = run.task
+            if task.campaign_id is None \
+                    and task.attempt >= self.max_revoke_requeues:
+                run.mem_tolerated = True
+                log.warning("agent %s: task %s over budget (%.0f > %d MB) "
+                            "past %d requeues — tolerating", self.agent_id,
+                            tid, used, budget, self.max_revoke_requeues)
+                continue
+            requeue = task.campaign_id is None
+            if not self._revoke_run(run, RevokeReason.MEM_OVERAGE,
+                                    requeue=requeue):
+                continue
+            self.mem_revoked += 1
+            log.warning("agent %s: task %s exceeded mem budget "
+                        "(%.0f > %d MB) — lease revoked%s", self.agent_id,
+                        tid, used, budget, " and requeued" if requeue else "")
+            self._send_status(task, TaskStatus.REVOKED,
+                              reason=RevokeReason.MEM_OVERAGE,
+                              mem_used_mb=used, mem_budget_mb=budget)
+            if task.campaign_id is not None:
+                err = ErrorMessage(
+                    task_id=tid, agent_id=self.agent_id,
+                    error=(f"mem overage: {used:.0f} MB used > "
+                           f"{budget} MB requested"),
+                    attempt=task.attempt)
+                self._producer.send(self.topics["error"], err.to_dict(),
+                                    key=tid)
 
     def _cancel_task(self, run: _Running) -> None:
         run.cancel.set()
@@ -316,11 +409,16 @@ class AgentBase:
     # -- lifecycle ------------------------------------------------------------------
 
     def _drain(self) -> None:
-        """On graceful stop, cancel in-flight work so it gets redelivered."""
+        """On graceful stop, revoke in-flight work so it gets redelivered:
+        flat tasks are requeued by the broker in the same critical section;
+        campaign tasks are only cancelled+fenced (their PipelineAgent owns
+        resubmission, exactly like the watchdog split)."""
         with self._lock:
             runs = list(self._running.values())
         for run in runs:
-            self._cancel_task(run)
+            if not self._revoke_run(run, RevokeReason.DRAIN,
+                                    requeue=run.task.campaign_id is None):
+                self._cancel_task(run)
         deadline = time.time() + 2.0
         while time.time() < deadline and self._in_flight() > 0:
             time.sleep(0.01)
@@ -362,29 +460,36 @@ class AgentBase:
                 runs = list(self._running.values())
             for run in runs:
                 if not run.cancel.is_set():
-                    log.warning("agent %s drain deadline: cancelling %s for "
+                    log.warning("agent %s drain deadline: revoking %s for "
                                 "redelivery", self.agent_id, run.task.task_id)
-                    self._cancel_task(run)
+                    if not self._revoke_run(
+                            run, RevokeReason.DRAIN,
+                            requeue=run.task.campaign_id is None):
+                        self._cancel_task(run)
         return self._in_flight() == 0
 
     def _flush_deferred(self) -> None:
-        """Requeue leased-but-unstarted tasks to their class topic with the
-        *same* attempt (a requeue, not a retry — the task never started, so
-        another agent running it is not a duplicate execution). Without
-        this, an agent removed mid-run would strand every task whose offset
-        it had committed until a watchdog timeout."""
+        """Requeue leased-but-unstarted tasks with the *same* attempt (a
+        requeue, not a retry — the task never started, so another agent
+        running it is not a duplicate execution). A deferred lease is still
+        GRANTED, so :meth:`Broker.revoke_lease` with ``reason="drain"``
+        requeues it onto the topic it was leased from in one atomic step;
+        the manual reroute below only covers leases the broker no longer
+        tracks. Without this, an agent removed mid-run would strand every
+        task whose offset it had committed until a watchdog timeout."""
         while True:
             with self._lock:
                 if not self._deferred:
                     return
                 task = self._deferred.popleft()
-            try:
-                target = self.placement.route(self.prefix, task)
-            except ValueError:
-                # unroutable under our policy: the bare topic, where the
-                # monitor's legacy-forwarding or watchdog picks it up
-                target = self.topics["new"]
-            self._producer.send(target, task.to_dict(), key=task.task_id)
+            if not self.broker.revoke_lease(task.task_id, RevokeReason.DRAIN):
+                try:
+                    target = self.placement.route(self.prefix, task)
+                except ValueError:
+                    # unroutable under our policy: the bare topic, where the
+                    # monitor's legacy-forwarding or watchdog picks it up
+                    target = self.topics["new"]
+                self._producer.send(target, task.to_dict(), key=task.task_id)
             self._send_status(task, TaskStatus.SUBMITTED,
                               requeued_by=self.agent_id)
             self.tasks_requeued += 1
@@ -448,6 +553,9 @@ class AgentBase:
                 "deferred": self.tasks_deferred,
                 "deferred_pending": len(self._deferred),
                 "requeued": self.tasks_requeued,
+                "revoked": self.tasks_revoked,
+                "dropped_revoked": self.tasks_dropped_revoked,
+                "mem_revoked": self.mem_revoked,
                 "mem_in_flight_mb": sum(r.task.resources.mem_mb
                                         for r in self._running.values()),
                 "heartbeat_failures": self.heartbeat_failures,
@@ -485,6 +593,15 @@ class WorkerAgent(AgentBase):
 
     def _accept(self, task: TaskMessage) -> None:
         cancel = threading.Event()
+        member = self._consumer.member_id
+        # GRANTED → RUNNING through the lease layer: a lease revoked while
+        # the task waited in the deferral queue (drain flush, preemption,
+        # operator scancel) was already requeued — starting it here would
+        # double-run it.
+        if not self.broker.claim_start(task.task_id, member, task.attempt,
+                                       cancel):
+            self.tasks_dropped_revoked += 1
+            return
         run = _Running(task=task, cancel=cancel)
         with self._lock:
             self._running[task.task_id] = run
@@ -495,7 +612,10 @@ class WorkerAgent(AgentBase):
                 return
             cls = resolve_script(task.script)
             comp = cls(task, self._producer, self.prefix, self.agent_id,
-                       cancel_event=cancel)
+                       cancel_event=cancel,
+                       commit=lambda ok: self.broker.complete_lease(
+                           task.task_id, member, task.attempt, ok=ok))
+            run.computing = comp
             ok = False
             try:
                 ok = comp.execute()
@@ -547,7 +667,19 @@ class ClusterAgent(AgentBase):
 
     def _accept(self, task: TaskMessage) -> None:
         cancel = threading.Event()
+        member = self._consumer.member_id
         run = _Running(task=task, cancel=cancel)
+
+        def _on_revoke() -> None:
+            # a revocation must also free the simulated node: scancel the
+            # Slurm job (late-bound — the job id exists once sbatch returns)
+            if run.slurm_job_id is not None:
+                self.slurm.scancel(run.slurm_job_id)
+
+        if not self.broker.claim_start(task.task_id, member, task.attempt,
+                                       cancel, on_revoke=_on_revoke):
+            self.tasks_dropped_revoked += 1
+            return
 
         def _job(cancel_event: threading.Event | None = None) -> None:
             # runs inside a SimSlurm slot; honour both the agent's cancel and
@@ -558,7 +690,10 @@ class ClusterAgent(AgentBase):
                       else _AnyEvent(cancel, cancel_event))
             cls = resolve_script(task.script)
             comp = cls(task, self._producer, self.prefix, self.agent_id,
-                       cancel_event=merged)
+                       cancel_event=merged,
+                       commit=lambda ok: self.broker.complete_lease(
+                           task.task_id, member, task.attempt, ok=ok))
+            run.computing = comp
             ok = False
             try:
                 ok = comp.execute()
@@ -583,6 +718,33 @@ class ClusterAgent(AgentBase):
         # target: running-or-pending jobs < slots + oversubscribe.
         q = len(self.slurm.squeue(user=self.user))
         return (self.slots + self.oversubscribe) - max(q, self._in_flight())
+
+    def _watchdog(self) -> None:
+        super()._watchdog()
+        self._police_slurm()
+
+    def _police_slurm(self) -> None:
+        """Slurm-side stops become lease revocations: a job the scheduler
+        cancelled (walltime ``TO``) or an operator ``scancel``'d (``CA``)
+        still holds a live lease — revoke it with ``reason="scancel"`` so
+        the stale attempt is fenced at the broker instead of limping to a
+        CANCELLED status the monitor has to notice going stale. Flat tasks
+        are requeued in the same step; campaign resubmission stays with the
+        PipelineAgent (watchdog split)."""
+        with self._lock:
+            items = list(self._running.items())
+        for tid, run in items:
+            if run.slurm_job_id is None:
+                continue
+            job = self.slurm.job(run.slurm_job_id)
+            if job is None or job.state not in ("TO", "CA"):
+                continue
+            if self._revoke_run(run, RevokeReason.SCANCEL,
+                                requeue=run.task.campaign_id is None):
+                self._send_status(run.task, TaskStatus.REVOKED,
+                                  reason=RevokeReason.SCANCEL,
+                                  slurm_state=job.state,
+                                  slurm_job_id=run.slurm_job_id)
 
     def _cancel_task(self, run: _Running) -> None:
         run.cancel.set()

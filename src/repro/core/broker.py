@@ -40,7 +40,15 @@ Faithfully implemented Kafka semantics the paper relies on (§3, §6):
 * **incremental backlog counters**: :meth:`Broker.queue_stats` reports
   per-topic depth (produced − committed) for one consumer group from
   counters maintained on the produce/commit paths — the autoscaler's
-  per-resource-class demand signal, with no O(records) scans.
+  per-resource-class demand signal, with no O(records) scans,
+* **task leases** (:mod:`repro.core.lease`): every task record fetched
+  through :meth:`Broker.lease_records` registers a :class:`~repro.core.lease.Lease`
+  (GRANTED → RUNNING → DONE/FAILED/REVOKED). :meth:`Broker.revoke_lease` is
+  the single reclamation primitive — it fences the holder's commit, fires
+  the task's ``cancel_event``, and (optionally) requeues the record onto
+  the topic it was leased from, atomically under the broker lock; every
+  legacy stop-path (watchdog, drain, scancel/walltime, retry fencing,
+  preemption, memory policing) routes through it.
 """
 from __future__ import annotations
 
@@ -54,6 +62,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import msgpack
+
+from .lease import LeaseTable
 
 
 # --------------------------------------------------------------------------
@@ -247,6 +257,7 @@ class Broker:
         self._fsync = fsync
         self.session_timeout_s = session_timeout_s
         self._member_seq = 0
+        self._lease_table = LeaseTable()
         self._closed = False
         self._offsets_path = (os.path.join(log_dir, "_offsets.log")
                               if log_dir else None)
@@ -592,7 +603,87 @@ class Broker:
                     budget -= len(recs)
             if updates:
                 self._persist_offsets(group_id, updates)
+            for rec in out:
+                # task records (keyed, self-describing) get a GRANTED lease —
+                # the handle every stop-path revokes through
+                if rec.key and isinstance(rec.value, dict) \
+                        and rec.value.get("task_id") == rec.key:
+                    self._lease_table.grant(
+                        rec.key, member_id, rec.topic,
+                        int(rec.value.get("attempt", 0)), dict(rec.value))
             return out
+
+    # -- task leases (repro.core.lease) -------------------------------------
+
+    def claim_start(self, task_id: str, holder: str, attempt: int,
+                    cancel: Any, on_revoke: Callable[[], None] | None = None
+                    ) -> bool:
+        """GRANTED → RUNNING for the holder's lease, binding the task's
+        ``cancel_event`` (and an optional ``on_revoke`` hook, e.g. the
+        ClusterAgent's ``scancel``). False means the lease was revoked or
+        superseded while queued — the holder must drop the task, its record
+        has already been requeued (or belongs to someone else)."""
+        with self._lock:
+            return self._lease_table.claim_start(task_id, holder, attempt,
+                                                 cancel, on_revoke)
+
+    def complete_lease(self, task_id: str, holder: str | None = None,
+                       attempt: int | None = None, *, ok: bool = True) -> bool:
+        """The commit gate: atomically RUNNING → DONE/FAILED. Returns False
+        when the lease was revoked (or superseded) — the holder's result or
+        error is stale and must be suppressed, because the revocation
+        already requeued the task."""
+        with self._lock:
+            return self._lease_table.complete(task_id, holder, attempt, ok)
+
+    def revoke_lease(self, task_id: str, reason: str, *,
+                     requeue: bool = True) -> bool:
+        """**The** reclamation primitive: atomically (one critical section)
+        fence the holder's commit, fire the task's ``cancel_event`` /
+        ``on_revoke`` hook, and — with ``requeue`` — put the task record
+        back on the topic it was leased from (same attempt if it never
+        started; bumped attempt if it was running, so the stale holder's
+        status updates are fenced downstream too). Returns False when there
+        is no live lease — already terminal, never leased, or lost the race
+        to a concurrent :meth:`complete_lease` — in which case nothing is
+        cancelled and nothing is requeued (a completed task is never
+        double-run)."""
+        with self._lock:
+            lease = self._lease_table.revoke(task_id, reason)
+            if lease is None:
+                return False
+            if requeue:
+                value = dict(lease.value)
+                if lease.started_at is not None:
+                    value["attempt"] = lease.attempt + 1
+                self._lease_table.requeued += 1
+                self.produce(lease.topic, value, key=task_id)
+            return True
+
+    def forget_lease(self, task_id: str, holder: str) -> None:
+        """Drop the holder's lease without a verdict (misroute bounce: the
+        rerouted record grants a fresh lease to whoever leases it)."""
+        with self._lock:
+            self._lease_table.forget(task_id, holder)
+
+    def lease_view(self, task_id: str) -> dict | None:
+        """Observability snapshot of one task's lease (None if untracked)."""
+        with self._lock:
+            lease = self._lease_table.get(task_id)
+            return None if lease is None else lease.view()
+
+    def live_leases(self, task_ids: Sequence[str] | None = None,
+                    holder: str | None = None) -> list[dict]:
+        """Views of live (GRANTED/RUNNING) leases, optionally filtered —
+        the preemption victim-selection query."""
+        with self._lock:
+            return self._lease_table.live_views(task_ids, holder)
+
+    def lease_stats(self) -> dict:
+        """Cumulative lease counters: granted/completed/failed/requeued and
+        revocations by reason — the unified stop-path telemetry."""
+        with self._lock:
+            return self._lease_table.stats()
 
     # -- transactions (exactly-once) -----------------------------------------
 
@@ -699,6 +790,7 @@ class Broker:
                     }
                     for g, grp in self._groups.items()
                 },
+                "leases": self._lease_table.stats(),
             }
 
 

@@ -38,7 +38,8 @@ class ClusterComputing:
     """
 
     def __init__(self, task: TaskMessage, producer: Producer, prefix: str,
-                 agent_id: str, cancel_event: threading.Event | None = None):
+                 agent_id: str, cancel_event: threading.Event | None = None,
+                 commit: Callable[[bool], bool] | None = None):
         self.task = task
         self.task_id = task.task_id
         self.params: dict = task.params
@@ -47,6 +48,14 @@ class ClusterComputing:
         self._topics = topic_names(prefix)
         self.agent_id = agent_id
         self._cancel = cancel_event or threading.Event()
+        # the lease commit gate (Broker.complete_lease via the agent): the
+        # verdict may only be published while the lease is unrevoked — a
+        # revoked lease's task was already requeued, so a late result or
+        # error from this holder must be suppressed, not fenced downstream.
+        self._commit_cb = commit
+        # self-reported resident memory (MB) for mem-overage policing; the
+        # agent samples it against Resources.mem_mb each watchdog tick.
+        self.mem_used_mb: float = 0.0
 
     # -- API used by subclasses ------------------------------------------------
 
@@ -76,20 +85,46 @@ class ClusterComputing:
     def cancelled(self) -> bool:
         return self._cancel.is_set()
 
+    def report_mem(self, mem_mb: float) -> None:
+        """Report the task's current resident memory. Long-running scripts
+        that grow (structure batches, feature caches) should call this so
+        the agent's mem-overage policing can compare usage against the
+        task's ``Resources.mem_mb`` request and revoke the lease instead of
+        letting one task blow the pool budget."""
+        self.mem_used_mb = float(mem_mb)
+
+    def _commit(self, ok: bool) -> bool:
+        """Commit the verdict through the lease gate; False = fenced."""
+        if self._commit_cb is None:
+            return True
+        return self._commit_cb(ok)
+
     # -- driver used by agents ---------------------------------------------------
 
     def execute(self) -> bool:
         """Full lifecycle: RUNNING → run() → DONE + result (or ERROR).
-        Returns True on success."""
+        Returns True on success. Every verdict passes the lease commit gate
+        first: if the lease was revoked mid-run, the (already requeued)
+        task's stale result/error is suppressed and only a REVOKED status
+        is emitted."""
         t0 = time.time()
         self.send_status(TaskStatus.RUNNING)
         try:
             result = self.run()
             self.check_cancel()
         except TaskCancelled:
-            self.send_status(TaskStatus.CANCELLED)
+            if not self._commit(False):
+                # the cancel came from a lease revocation: the revoker
+                # already owns redelivery (requeue or journaled retry), so
+                # the monitor must not treat this as a recoverable CANCELLED
+                self.send_status(TaskStatus.REVOKED)
+            else:
+                self.send_status(TaskStatus.CANCELLED)
             return False
         except Exception as exc:  # noqa: BLE001 - error flow is a feature
+            if not self._commit(False):
+                self.send_status(TaskStatus.REVOKED, error=repr(exc))
+                return False
             err = ErrorMessage(task_id=self.task_id, agent_id=self.agent_id,
                                error=repr(exc), traceback=traceback.format_exc(),
                                attempt=self.attempt)
@@ -98,6 +133,9 @@ class ClusterComputing:
             self.send_status(TaskStatus.ERROR, error=repr(exc))
             return False
         elapsed = time.time() - t0
+        if not self._commit(True):
+            self.send_status(TaskStatus.REVOKED, elapsed_s=elapsed)
+            return False
         if not isinstance(result, dict):
             result = {"value": result}
         self.send_results(result, elapsed_s=elapsed)
@@ -170,3 +208,25 @@ class HangComputing(ClusterComputing):
         while True:
             self.check_cancel()
             time.sleep(0.005)
+
+
+@register_script("memhog")
+class MemHogComputing(ClusterComputing):
+    """Reports a resident set that overshoots the task's request —
+    exercises mem-overage lease revocation. ``peak_mb`` is the reported
+    RSS; from attempt ``calm_after_attempt`` onward the task behaves and
+    stays at its requested budget (so a revoked-and-requeued hog can be
+    observed completing on a later attempt)."""
+
+    def run(self) -> Any:
+        duration = float(self.params.get("duration", 0.3))
+        peak = float(self.params.get("peak_mb", 0.0))
+        calm_after = int(self.params.get("calm_after_attempt", 1))
+        misbehave = self.attempt < calm_after
+        deadline = time.time() + duration
+        while time.time() < deadline:
+            self.check_cancel()
+            if misbehave:
+                self.report_mem(peak)
+            time.sleep(0.005)
+        return {"attempt": self.attempt, "peak_mb": self.mem_used_mb}

@@ -1,0 +1,304 @@
+"""Unified task-lease lifecycle — the one way work is taken back.
+
+The control plane used to have four disjoint stop-work mechanisms: the
+MonitorAgent watchdog resubmitted stale tasks, the autoscaler's graceful
+drain requeued deferred leases, SimSlurm's ``scancel``/walltime fired a
+``cancel_event``, and the PipelineAgent fenced late results of retried
+tasks — each with its own bookkeeping and its own races. The paper's own
+ClusterAgent already treats reclamation as a first-class operation ("if a
+task hangs or exceeds the predefined timeout, the ClusterAgent intervenes
+by canceling the associated Slurm job", §3), and both ParaFold
+(arXiv:2111.06340) and the Summit proteome-scale deployment
+(arXiv:2201.10024) show heterogeneous campaigns stay fast only when the
+scheduler can actively take resources *back*, not just hand them out.
+
+This module is that primitive. A :class:`Lease` is the broker-tracked
+handle for one attempt of one task on one holder, with a single state
+machine::
+
+    GRANTED ──→ RUNNING ──→ DONE
+       │           │    └──→ FAILED
+       └───────────┴───────→ REVOKED(reason)
+
+* **GRANTED** — the holder committed the record's offset via
+  :meth:`~repro.core.broker.Broker.lease_records` (the task is its
+  responsibility; it may still be waiting in a deferral queue),
+* **RUNNING** — execution started (:meth:`~repro.core.broker.Broker.claim_start`
+  bound the task's ``cancel_event`` so a revocation can actually stop it),
+* **DONE** / **FAILED** — the holder committed its verdict through the
+  :meth:`~repro.core.broker.Broker.complete_lease` gate,
+* **REVOKED** — :meth:`~repro.core.broker.Broker.revoke_lease` took the
+  lease back: the ``cancel_event`` fires (``check_cancel`` raises inside
+  the computation), any late ``complete_lease`` from the old holder
+  returns False (the commit is *fenced* — no stale result or error ever
+  leaves the agent), and, when requested, the task record is requeued
+  onto the topic it was leased from — all in one critical section under
+  the broker lock, so a revoked task is never both requeued and completed.
+
+Every stopper is now a caller: the agent/monitor watchdogs revoke with
+``reason="watchdog"``, graceful drain flushes deferred leases with
+``reason="drain"``, SimSlurm walltime/scancel policing uses
+``reason="scancel"``, memory policing uses ``reason="mem_overage"``, and
+the PipelineAgent's preemptive fair share revokes with
+``reason="preempt"`` (journaled as a ``LeaseRevoked`` event so recovery
+replays revocations exactly like completions).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+# -- lease states ------------------------------------------------------------
+
+GRANTED = "GRANTED"
+RUNNING = "RUNNING"
+DONE = "DONE"
+FAILED = "FAILED"
+REVOKED = "REVOKED"
+
+LIVE_STATES = (GRANTED, RUNNING)
+
+
+class RevokeReason:
+    """Why a lease was taken back (the ``REVOKED(reason=...)`` tag)."""
+
+    WATCHDOG = "watchdog"        # hung / timed-out / stale-heartbeat task
+    PREEMPT = "preempt"          # fair-share preemption of an over-share campaign
+    MEM_OVERAGE = "mem_overage"  # task exceeded its Resources.mem_mb request
+    DRAIN = "drain"              # agent leaving (autoscale shrink / stop)
+    SCANCEL = "scancel"          # slurm-side stop (walltime / external scancel)
+
+    ALL = (WATCHDOG, PREEMPT, MEM_OVERAGE, DRAIN, SCANCEL)
+
+
+# how long an unacknowledged REVOKED entry is kept for commit fencing before
+# the periodic sweep drops it (holders that crashed never ack)
+_REVOKED_TTL_S = 120.0
+
+# completion tombstones retained for duplicate-execution fencing (a stale
+# requeued/resubmitted record of an already-accepted task must never run)
+_DONE_CAP = 4096
+
+
+@dataclass
+class Lease:
+    """One attempt of one task held by one agent (broker-internal record).
+
+    ``value`` keeps the leased record's payload so a revocation can requeue
+    the task without a topic scan; ``seq`` is the broker-wide monotonic
+    grant sequence (journaled observability, not a fencing token — fencing
+    is by ``(holder, attempt)``)."""
+
+    task_id: str
+    holder: str
+    topic: str
+    attempt: int
+    value: dict
+    seq: int
+    granted_at: float = field(default_factory=time.time)
+    state: str = GRANTED
+    started_at: float | None = None
+    revoked_at: float | None = None
+    reason: str | None = None
+    cancel: threading.Event | None = None
+    on_revoke: Callable[[], None] | None = None
+
+    @property
+    def live(self) -> bool:
+        return self.state in LIVE_STATES
+
+    def view(self) -> dict:
+        """JSON-safe snapshot for observability / victim selection."""
+        return {
+            "task_id": self.task_id,
+            "holder": self.holder,
+            "topic": self.topic,
+            "attempt": self.attempt,
+            "seq": self.seq,
+            "state": self.state,
+            "granted_at": self.granted_at,
+            "started_at": self.started_at,
+            "revoked_at": self.revoked_at,
+            "reason": self.reason,
+            "campaign_id": self.value.get("campaign_id"),
+        }
+
+
+class LeaseTable:
+    """The broker's lease registry. **Not** thread-safe on its own — every
+    method is called by :class:`~repro.core.broker.Broker` with the broker
+    lock held, which is what makes revoke-vs-complete atomic."""
+
+    def __init__(self) -> None:
+        self._leases: dict[str, Lease] = {}
+        # task_id -> accepted attempt: completion tombstones. Stop-path
+        # requeues and watchdog resubmissions race the attempt they
+        # replace; when the older attempt wins, its sibling record is
+        # still on a topic and will be leased later — the tombstone makes
+        # claim_start refuse it, so a finished task is never re-executed
+        # (exactly-once *execution*, not just exactly-once result).
+        # A deliberate rerun of a finished task id needs a higher attempt.
+        self._done: dict[str, int] = {}
+        self._seq = 0
+        self.granted = 0
+        self.completed = 0
+        self.failed = 0
+        self.requeued = 0
+        self.stale_drops = 0
+        self.revoked: dict[str, int] = {r: 0 for r in RevokeReason.ALL}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def grant(self, task_id: str, holder: str, topic: str, attempt: int,
+              value: dict) -> Lease | None:
+        """Register a fresh GRANTED lease (replaces any stale entry for the
+        task — a requeued task's new lease supersedes the fenced old one).
+        A record whose attempt is *behind* a live lease is the stale
+        sibling of a requeue race: it must not clobber the newer lease
+        (its claim will be refused instead)."""
+        cur = self._leases.get(task_id)
+        if cur is not None and cur.live and cur.attempt > attempt:
+            self.stale_drops += 1
+            return None
+        self._seq += 1
+        lease = Lease(task_id=task_id, holder=holder, topic=topic,
+                      attempt=attempt, value=value, seq=self._seq)
+        self._leases[task_id] = lease
+        self.granted += 1
+        return lease
+
+    def claim_start(self, task_id: str, holder: str, attempt: int,
+                    cancel: threading.Event,
+                    on_revoke: Callable[[], None] | None = None) -> bool:
+        """GRANTED → RUNNING iff ``(holder, attempt)`` still owns an
+        unrevoked lease; binds the cancel event so a later revocation can
+        stop the execution. Returns False (and acks/drops a revoked or
+        superseded entry) when the holder must *not* start the task."""
+        if task_id in self._done:
+            # the task already completed (possibly on a sibling attempt
+            # that won a requeue/resubmission race): no attempt of a
+            # completed task ever executes again — every resubmitter
+            # (monitor, pipeline, recovery) checks terminality first, so a
+            # late record here is always a stale race artifact
+            lease = self._leases.get(task_id)
+            if lease is not None and lease.holder == holder \
+                    and lease.attempt == attempt:
+                del self._leases[task_id]
+            self.stale_drops += 1
+            return False
+        lease = self._leases.get(task_id)
+        if lease is None:
+            return True  # unregistered execution (direct wiring): no fencing
+        if lease.holder != holder or lease.attempt != attempt:
+            return False  # superseded: another holder owns the task now
+        if lease.state == REVOKED:
+            del self._leases[task_id]  # ack: the revocation already requeued
+            return False
+        if lease.state != GRANTED:
+            # already RUNNING: a same-attempt duplicate record (e.g. the
+            # requeued copy of a deferred lease the same agent re-leased)
+            # must not start a second concurrent execution
+            return False
+        lease.state = RUNNING
+        lease.started_at = time.time()
+        lease.cancel = cancel
+        lease.on_revoke = on_revoke
+        return True
+
+    def complete(self, task_id: str, holder: str | None, attempt: int | None,
+                 ok: bool) -> bool:
+        """The commit gate: True iff the holder may publish its verdict
+        (result or error). A revoked or superseded lease returns False —
+        the work was already requeued, so the stale outcome must not leave
+        the agent. Terminal either way: the entry is dropped."""
+        lease = self._leases.get(task_id)
+        if lease is None:
+            # no lease tracked: either direct wiring (no fencing) or a
+            # stale sibling whose task already completed — the tombstone
+            # tells the two apart
+            return task_id not in self._done
+        if holder is not None and lease.holder != holder:
+            return False  # superseded: not this holder's lease any more
+        if attempt is not None and lease.attempt != attempt:
+            return False
+        del self._leases[task_id]
+        if lease.state == REVOKED:
+            return False
+        lease.state = DONE if ok else FAILED
+        if ok:
+            self.completed += 1
+            self._done[task_id] = lease.attempt
+            if len(self._done) > _DONE_CAP:
+                self._done.pop(next(iter(self._done)))
+        else:
+            self.failed += 1
+        return True
+
+    def revoke(self, task_id: str, reason: str) -> Lease | None:
+        """Take a live lease back: fire the cancel event (and the holder's
+        ``on_revoke`` hook, e.g. ``scancel``), tag the reason, and return
+        the lease so the broker can requeue its record in the same critical
+        section. None if there is nothing live to revoke (already terminal,
+        unknown, or mid-completion — the race the gate exists for)."""
+        lease = self._leases.get(task_id)
+        if lease is None or not lease.live:
+            return None
+        lease.state = REVOKED
+        lease.reason = reason
+        lease.revoked_at = time.time()
+        self.revoked[reason] = self.revoked.get(reason, 0) + 1
+        if lease.cancel is not None:
+            lease.cancel.set()
+        if lease.on_revoke is not None:
+            try:
+                lease.on_revoke()
+            except Exception:  # pragma: no cover - defensive
+                pass
+        self._sweep(lease.revoked_at)
+        return lease
+
+    def forget(self, task_id: str, holder: str) -> None:
+        """Drop a lease the holder gave up without executing (reroute of a
+        misplaced task — the rerouted record grants a fresh lease)."""
+        lease = self._leases.get(task_id)
+        if lease is not None and lease.holder == holder:
+            del self._leases[task_id]
+
+    def _sweep(self, now: float) -> None:
+        """GC revoked entries whose (dead) holder will never ack."""
+        stale = [t for t, l in self._leases.items()
+                 if l.state == REVOKED and l.revoked_at is not None
+                 and now - l.revoked_at > _REVOKED_TTL_S]
+        for t in stale:
+            del self._leases[t]
+
+    # -- queries -----------------------------------------------------------
+
+    def get(self, task_id: str) -> Lease | None:
+        return self._leases.get(task_id)
+
+    def live_views(self, task_ids=None, holder: str | None = None) -> list[dict]:
+        out = []
+        leases = ([self._leases.get(t) for t in task_ids]
+                  if task_ids is not None else list(self._leases.values()))
+        for lease in leases:
+            if lease is None or not lease.live:
+                continue
+            if holder is not None and lease.holder != holder:
+                continue
+            out.append(lease.view())
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "active": sum(1 for l in self._leases.values() if l.live),
+            "granted": self.granted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "requeued": self.requeued,
+            "stale_drops": self.stale_drops,
+            "revoked": dict(self.revoked),
+            "revoked_total": sum(self.revoked.values()),
+        }

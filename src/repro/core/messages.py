@@ -34,6 +34,10 @@ class TaskStatus(str, enum.Enum):
     ERROR = "ERROR"
     TIMEOUT = "TIMEOUT"
     CANCELLED = "CANCELLED"
+    # the lease layer (repro.core.lease) took the task back: the attempt is
+    # fenced and the record was (or will be) requeued by the revoker — the
+    # monitor must NOT resubmit on this status, unlike TIMEOUT/CANCELLED.
+    REVOKED = "REVOKED"
     # custom statuses may be emitted by computing scripts at any point (§5);
     # anything not in this enum is passed through verbatim as a string.
 
@@ -252,6 +256,7 @@ class CampaignEvent:
     agent_id: str = ""
     stages: dict = dataclasses.field(default_factory=dict)
     recovered: bool = False
+    preemptions: int = 0  # fair-share lease revocations taken so far
     kind: str = "snapshot"
     ts: float = dataclasses.field(default_factory=time.time)
 
@@ -267,6 +272,7 @@ class CampaignEvent:
             agent_id=d.get("agent_id", ""),
             stages=dict(d.get("stages", {})),
             recovered=bool(d.get("recovered", False)),
+            preemptions=int(d.get("preemptions", 0)),
             kind=str(d.get("kind", "snapshot")),
             ts=float(d.get("ts", time.time())),
         )

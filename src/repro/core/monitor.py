@@ -24,6 +24,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any
 
 from .broker import Broker, Consumer, Producer
+from .lease import RevokeReason
 from .messages import (CampaignEvent, ErrorMessage, ResultMessage,
                        StatusUpdate, TaskMessage, TaskStatus, topic_names)
 from .scheduling import PlacementPolicy, ResourceClassPolicy
@@ -128,8 +129,18 @@ class MonitorAgent:
         # /autoscale payload — per-pool membership, backlog history, and
         # the scaling decision log.
         self._autoscale_source: Any = None
+        # scheduled journal compaction (attach_compaction): a periodic /
+        # event-count trigger that invokes the pipeline's compact() from
+        # this loop so operators never have to remember the maintenance.
+        self._compact_cb: Any = None
+        self._compact_interval_s: float | None = None
+        self._compact_every_events: int | None = None
+        self._last_compact = time.time()
+        self._events_at_compact = 0
         self.results_handled = 0
         self.resubmissions = 0
+        self.revocations = 0
+        self.compactions = 0
         self.legacy_forwards = 0
 
     # -- ingestion --------------------------------------------------------------
@@ -236,6 +247,32 @@ class MonitorAgent:
             log.warning("task %s exhausted %d attempts (%s)",
                         e.task.task_id, e.attempts_seen, reason)
             return
+        # unified stop-path: if a live lease exists (a stale holder is — or
+        # was — still on the hook for the task, e.g. a crashed agent that
+        # never heartbeats again), Broker.revoke_lease cancels it, fences
+        # its late verdict, and requeues the record in one atomic step.
+        # Only when there is nothing to revoke (never leased, or the
+        # agent-side watchdog already revoked and deliberately left the
+        # requeue decision here) does the monitor produce a fresh attempt.
+        lease = self.broker.lease_view(e.task.task_id)
+        if lease is not None and lease["attempt"] > e.attempt:
+            # a newer attempt than this table knows is already leased —
+            # the requeue beat our ingestion; revoking (or resubmitting)
+            # now would kill or duplicate healthy work. Let it run.
+            e.last_update = time.time()
+            return
+        if reason != "error" and \
+                self.broker.revoke_lease(e.task.task_id,
+                                         RevokeReason.WATCHDOG):
+            self.revocations += 1
+            e.attempts_seen += 1
+            # e.attempt is refreshed when the requeued record is ingested
+            # (same attempt for a never-started lease, +1 for a running one)
+            e.status = TaskStatus.SUBMITTED.value
+            e.last_update = time.time()
+            log.info("revoked lease of %s (reason=%s)", e.task.task_id,
+                     reason)
+            return
         nxt = TaskMessage.from_dict(e.task.to_dict())
         nxt.attempt = e.attempt
         self._submitter.resubmit(nxt)
@@ -259,9 +296,15 @@ class MonitorAgent:
                                 TaskStatus.WAITING.value,
                                 TaskStatus.RUNNING.value,
                                 TaskStatus.TIMEOUT.value,
-                                TaskStatus.CANCELLED.value):
+                                TaskStatus.CANCELLED.value,
+                                TaskStatus.REVOKED.value):
                     # CANCELLED-without-result means the work did not finish
                     # (graceful agent shutdown mid-task) — recover it too.
+                    # REVOKED normally supersedes itself (the revoker's
+                    # requeued record arrives and resets the entry to
+                    # SUBMITTED); one going *stale* means that redelivery
+                    # never happened — _maybe_resubmit's newer-lease guard
+                    # keeps this from duplicating a healthy requeue.
                     stale_for = now - e.last_update
                     if e.status == TaskStatus.TIMEOUT.value or \
                             stale_for > self.task_timeout_s:
@@ -286,6 +329,7 @@ class MonitorAgent:
                 if batches:
                     self._consumer.commit()
                 self._watchdog()
+                self._maybe_compact()
                 self.broker.evict_expired_members()
             except Exception:  # pragma: no cover - defensive
                 log.exception("monitor %s loop error", self.monitor_id)
@@ -333,6 +377,59 @@ class MonitorAgent:
         with self._lock:
             self._autoscale_source = source
 
+    # -- scheduled journal compaction (ROADMAP open item) -----------------------
+
+    def attach_compaction(self, cb: Any, *, interval_s: float | None = None,
+                          every_events: int | None = None) -> None:
+        """Run ``cb()`` (normally ``KsaCluster``'s pipeline ``compact()``)
+        from the monitor loop whenever ``interval_s`` has elapsed or
+        ``every_events`` new journal records have been ingested since the
+        last compaction — scheduled maintenance instead of an operator
+        chore. ``cb`` returning a truthy value counts as a compaction
+        (surfaced as ``compactions`` in ``/summary``); returning ``None``
+        (e.g. no pipeline agent started yet) does not."""
+        with self._lock:
+            self._compact_cb = cb
+            self._compact_interval_s = interval_s
+            self._compact_every_events = every_events
+            self._last_compact = time.time()
+            self._events_at_compact = self._journal_events()
+
+    def _journal_events(self) -> int:
+        return sum(j["events"] for j in self._journal.values())
+
+    def _maybe_compact(self) -> None:
+        with self._lock:
+            cb = self._compact_cb
+            if cb is None:
+                return
+            now = time.time()
+            events = self._journal_events()
+            due = False
+            if self._compact_interval_s is not None and \
+                    now - self._last_compact >= self._compact_interval_s:
+                due = True
+            if self._compact_every_events is not None and \
+                    events - self._events_at_compact >= \
+                    self._compact_every_events:
+                due = True
+            if not due:
+                return
+            self._last_compact = now
+            self._events_at_compact = events
+        try:
+            result = cb()
+        except Exception:  # pragma: no cover - defensive
+            log.exception("monitor %s: scheduled compaction failed",
+                          self.monitor_id)
+            return
+        if result:
+            with self._lock:
+                self.compactions += 1
+            log.info("monitor %s: scheduled compaction truncated %s records",
+                     self.monitor_id, result.get("truncated", "?")
+                     if isinstance(result, dict) else "?")
+
     def autoscale(self) -> dict | None:
         with self._lock:
             source = self._autoscale_source
@@ -372,6 +469,8 @@ class MonitorAgent:
                 "by_status": by_status,
                 "results_handled": self.results_handled,
                 "resubmissions": self.resubmissions,
+                "revocations": self.revocations,
+                "compactions": self.compactions,
                 "legacy_forwards": self.legacy_forwards,
                 "duplicates_fenced": sum(e.duplicate_results
                                          for e in self._table.values()),

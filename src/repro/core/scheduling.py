@@ -239,6 +239,20 @@ class LeasePolicy:
     def select(self, candidates: Mapping[str, float]) -> str:
         raise NotImplementedError
 
+    def preempt(self, shares: Mapping[str, tuple[float, int, bool, bool]]
+                ) -> str | None:
+        """The preemption hook: name the campaign whose longest-running
+        lease should be revoked (and requeued) to make room, or ``None``
+        to leave everything running. ``shares`` maps campaign_id ->
+        ``(weight, in_flight, has_ready_waiting, preemptible)`` over the
+        live campaigns — fairness is judged over all of them, but only a
+        ``preemptible`` campaign (one with ``RetryPolicy.max_preemptions``
+        budget left) may be named. Submission-time arbitration alone
+        cannot reclaim a slot a long-running task already holds — this
+        hook can. Default: never preempt (``FifoLease`` keeps the paper's
+        run-to-completion behaviour)."""
+        return None
+
     def forget(self, campaign_id: str) -> None:
         """Drop any per-campaign state (campaign finished/evicted)."""
 
@@ -256,9 +270,25 @@ class FairShare(LeasePolicy):
     every candidate's credit grows by its weight; the max-credit candidate is
     picked and pays the total weight back. Weights 3:1 yield the interleaving
     A A B A, A A B A, ... — task completions track the weight ratio instead
-    of first-come-first-served campaign ordering."""
+    of first-come-first-served campaign ordering.
 
-    def __init__(self) -> None:
+    **Preemptive** fair share: when some campaign is *severely* over its
+    share — holding more than ``preempt_factor`` times its weighted slice of
+    the total in-flight leases — while another campaign with ready work sits
+    below its own slice, :meth:`preempt` names the over-share campaign; the
+    PipelineAgent then revokes its longest-running lease
+    (``Broker.revoke_lease(reason="preempt")``, journaled as
+    ``LeaseRevoked``) and the freed capacity drains through the normal
+    weighted round-robin. Bounded per campaign by
+    ``RetryPolicy.max_preemptions``."""
+
+    def __init__(self, preempt_factor: float = 2.0) -> None:
+        if not (preempt_factor > 1.0):
+            raise ValueError(
+                f"preempt_factor must exceed 1.0 (got {preempt_factor!r}); "
+                f"at 1.0 every campaign at exactly its fair share would be "
+                f"preempted")
+        self.preempt_factor = preempt_factor
         self._credit: dict[str, float] = {}
 
     def select(self, candidates: Mapping[str, float]) -> str:
@@ -272,6 +302,32 @@ class FairShare(LeasePolicy):
         assert best is not None, "select() called with no candidates"
         self._credit[best] -= total
         return best
+
+    def preempt(self, shares: Mapping[str, tuple[float, int, bool, bool]]
+                ) -> str | None:
+        total_w = sum(w for w, _, _, _ in shares.values())
+        total_in = sum(f for _, f, _, _ in shares.values())
+        if total_w <= 0 or total_in <= 0:
+            return None
+        fair = {cid: w / total_w * total_in
+                for cid, (w, _, _, _) in shares.items()}
+        # someone must actually be starved: ready work waiting while the
+        # campaign sits below its slice — otherwise a lone campaign using
+        # the whole pool is work conservation, not unfairness
+        if not any(ready and f < fair[cid]
+                   for cid, (_, f, ready, _) in shares.items()):
+            return None
+        # fairness is computed over every campaign, but only a preemptible
+        # one may pay — an opted-out hog must not shield a lesser (but
+        # still severely over-share) opted-in peer from preemption
+        worst, worst_ratio = None, self.preempt_factor
+        for cid, (_, f, _, preemptible) in shares.items():
+            if f <= 0 or not preemptible:
+                continue
+            ratio = f / max(fair[cid], 1e-9)
+            if ratio > worst_ratio:
+                worst, worst_ratio = cid, ratio
+        return worst
 
     def forget(self, campaign_id: str) -> None:
         self._credit.pop(campaign_id, None)

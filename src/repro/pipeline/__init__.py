@@ -56,13 +56,15 @@ from .driver import CampaignResult, run_campaign
 from .spec import PipelineSpec, RetryPolicy, SpecError, Stage
 from .state import (BarrierReleased, CampaignSnapshot, CampaignState,
                     CampaignSubmitted, JournalEvent, LeaseGranted,
-                    StageDispatched, StageSkipped, TaskDone, TaskFailed)
+                    LeaseRevoked, StageDispatched, StageSkipped, TaskDone,
+                    TaskFailed)
 from .status import CampaignStatus, StageStatus
 
 __all__ = [
     "BarrierReleased", "CampaignResult", "CampaignSnapshot", "CampaignState",
     "CampaignStatus",
-    "CampaignSubmitted", "JournalEvent", "LeaseGranted", "PipelineAgent",
+    "CampaignSubmitted", "JournalEvent", "LeaseGranted", "LeaseRevoked",
+    "PipelineAgent",
     "PipelineError", "PipelineSpec", "RetryPolicy", "SpecError", "Stage",
     "StageDispatched", "StageSkipped", "StageStatus", "TaskDone",
     "TaskFailed", "run_campaign",

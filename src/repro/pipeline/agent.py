@@ -28,7 +28,17 @@ Responsibilities (unchanged semantics, now journal-backed):
 * **watchdog**: a task with no result after ``RetryPolicy.timeout_s`` is
   resubmitted with a bumped attempt; the retry budget is the journaled
   ``LeaseGranted`` count in ``CampaignState``, so resubmissions after a
-  recovery never double-count attempts taken before the crash,
+  recovery never double-count attempts taken before the crash. Every
+  resubmission first revokes the stale holder's lease
+  (:meth:`~repro.core.broker.Broker.revoke_lease`) so the old execution is
+  cancelled and its late verdict fenced at the broker, not merely ignored,
+* **preemptive fair share**: when the lease policy reports a severely
+  over-share campaign while a peer with ready work is starved
+  (:meth:`~repro.core.scheduling.LeasePolicy.preempt`), the over-share
+  campaign's longest-running lease is revoked
+  (``reason="preempt"``, journaled as ``LeaseRevoked``) and requeued
+  through the normal pump — bounded per campaign by
+  ``RetryPolicy.max_preemptions``, without consuming the retry budget,
 * progress snapshots are still published on ``PREFIX-campaigns`` for the
   MonitorAgent's ``/campaigns`` REST endpoint (interleaved with the journal;
   records carry a ``kind`` discriminator).
@@ -51,6 +61,7 @@ import time
 from typing import Any, Iterable, Mapping
 
 from repro.core.broker import Broker, Consumer, Producer
+from repro.core.lease import RevokeReason
 from repro.core.messages import (CampaignEvent, ErrorMessage, ResultMessage,
                                  TaskMessage, new_task_id, topic_names)
 from repro.core.scheduling import FairShare, LeasePolicy, PlacementPolicy
@@ -59,8 +70,9 @@ from repro.core.submitter import Submitter
 from .spec import PipelineSpec, Stage
 from .state import (JOURNAL_KIND, CampaignSnapshot, CampaignState,
                     CampaignSubmitted, JournalEvent, LeaseGranted,
-                    StageSkipped, TaskDone, TaskFailed, group_journal,
-                    plan_downstream, plan_sources, snapshot_event)
+                    LeaseRevoked, StageSkipped, TaskDone, TaskFailed,
+                    group_journal, plan_downstream, plan_sources,
+                    snapshot_event)
 from .status import CampaignStatus
 
 log = logging.getLogger(__name__)
@@ -98,7 +110,14 @@ class _CampaignRun:
         st.started_at = self.state.started_at or self.created_at
         st.finished_at = self.state.finished_at
         st.failure = self.state.failure
+        st.preemptions = self.state.preemptions
         return st
+
+    def max_preemptions(self) -> int:
+        """The campaign-wide preemption bound: max over its stages'
+        ``RetryPolicy.max_preemptions`` (0 = never preempt this campaign)."""
+        return max((st.retry.max_preemptions
+                    for st in self.spec.stages.values()), default=0)
 
 
 class PipelineAgent:
@@ -148,6 +167,7 @@ class PipelineAgent:
         self._campaigns: dict[str, _CampaignRun] = {}
         self._task_index: dict[str, str] = {}  # task_id -> campaign_id
         self.events_journaled = 0
+        self.preemptions = 0  # fair-share lease revocations issued (all runs)
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._crashed = threading.Event()  # test hook: simulate kill -9
@@ -172,6 +192,14 @@ class PipelineAgent:
         """Grant a lease (journaled) and put the task on ``-new``."""
         rec = run.state.tasks[task_id]
         attempt = rec.attempts
+        if attempt > 0:
+            # a retry / regrant: revoke whatever lease a stale holder still
+            # has on the previous attempt — the unified retry fencing. The
+            # old execution is cancelled and its late verdict fenced at the
+            # broker commit gate, not merely ignored at ingest; no requeue
+            # (this very call is the resubmission).
+            self.broker.revoke_lease(task_id, RevokeReason.WATCHDOG,
+                                     requeue=False)
         self._emit(run, LeaseGranted(campaign_id=run.campaign_id,
                                      task_id=task_id, attempt=attempt))
         run.last_submit[task_id] = time.time()
@@ -347,7 +375,9 @@ class PipelineAgent:
                        cause: str, reason: str) -> None:
         rec = run.state.tasks[task_id]
         st = run.spec.stages[rec.stage]
-        if rec.attempts < st.retry.max_attempts:
+        # preemption regrants (journaled LeaseRevoked) are requeues, not
+        # failures — they do not consume the retry budget
+        if rec.attempts - rec.revokes < st.retry.max_attempts:
             if cause == "error":
                 self._emit(run, TaskFailed(campaign_id=run.campaign_id,
                                            task_id=task_id, reason=reason,
@@ -356,6 +386,10 @@ class PipelineAgent:
             log.info("campaign %s: resubmitted %s (attempt %d, %s)",
                      run.campaign_id, task_id, rec.attempts - 1, reason)
         else:
+            # budget exhausted: revoke any still-running zombie so it stops
+            # burning a slot and its eventual verdict is fenced at the broker
+            self.broker.revoke_lease(task_id, RevokeReason.WATCHDOG,
+                                     requeue=False)
             self._emit(run, TaskFailed(
                 campaign_id=run.campaign_id, task_id=task_id,
                 reason=(f"stage {rec.stage!r} task {task_id} exhausted "
@@ -377,7 +411,11 @@ class PipelineAgent:
                         continue
                     for tid in run.state.by_stage[st.name]:
                         rec = run.state.tasks[tid]
-                        if rec.terminal or rec.attempts == 0:
+                        if rec.terminal or rec.attempts == 0 \
+                                or rec.revoke_pending:
+                            # revoke-pending tasks are in the ready queue
+                            # awaiting a regrant — the pump owns them, not
+                            # the watchdog
                             continue
                         last = run.last_submit.get(tid, run.created_at)
                         if now - last > timeout:
@@ -386,6 +424,61 @@ class PipelineAgent:
                                 reason=f"no result after {timeout:.1f}s")
                         if run.state.done:
                             return
+
+    # -- preemptive fair share ---------------------------------------------------
+
+    def _maybe_preempt(self) -> None:
+        """Ask the lease policy whether some campaign is severely over its
+        share while a peer with ready work is starved; if so, revoke the
+        over-share campaign's longest-running lease through
+        :meth:`Broker.revoke_lease` and journal it as ``LeaseRevoked`` so
+        recovery replays the revocation. Revoke-then-journal: the revoke is
+        the atomic authority (it returns False if the task completed
+        concurrently — a finished task is never preempted), and a crash
+        between the two degrades to a plain watchdog retry."""
+        with self._lock:
+            shares: dict[str, tuple[float, int, bool, bool]] = {}
+            for cid, r in self._campaigns.items():
+                if r.state.done:
+                    continue
+                in_flight = sum(ss.in_flight
+                                for ss in r.state.stages.values())
+                shares[cid] = (r.state.weight, in_flight,
+                               self._next_stage(r) is not None,
+                               r.state.preemptions < r.max_preemptions())
+            if len(shares) < 2:
+                return
+            victim_cid = self._lease.preempt(shares)
+            if victim_cid is None:
+                return
+            run = self._campaigns[victim_cid]
+            cap = run.max_preemptions()
+            if run.state.preemptions >= cap:
+                return  # policy ignored the preemptible flag: hold the line
+            # longest-running live lease of the victim campaign (RUNNING
+            # beats GRANTED: a deferred lease holds no compute yet)
+            candidates = [tid for tid, rec in run.state.tasks.items()
+                          if rec.attempts > 0 and not rec.terminal
+                          and not rec.revoke_pending]
+            best, best_key = None, None
+            for view in self.broker.live_leases(candidates):
+                key = (0 if view["state"] == "RUNNING" else 1,
+                       view.get("started_at") or view["granted_at"])
+                if best_key is None or key < best_key:
+                    best, best_key = view["task_id"], key
+            if best is None:
+                return
+            if not self.broker.revoke_lease(best, RevokeReason.PREEMPT,
+                                            requeue=False):
+                return  # lost the race to a completion: nothing to take back
+            self._emit(run, LeaseRevoked(campaign_id=victim_cid,
+                                         task_id=best,
+                                         reason=RevokeReason.PREEMPT))
+            self.preemptions += 1
+            log.info("campaign %s: preempted %s (%d/%d preemptions used)",
+                     victim_cid, best, run.state.preemptions, cap)
+            self._pump_all()
+            self._publish(run)
 
     def _finalize(self, run: _CampaignRun) -> None:
         """Latch a terminal reducer state into the runtime side effects
@@ -517,10 +610,13 @@ class PipelineAgent:
                     self._advance(run, res.task_id)
                 now = time.time()
                 for tid, rec in list(state.tasks.items()):
-                    if rec.terminal or rec.attempts == 0:
+                    if rec.terminal or rec.attempts == 0 or rec.revoke_pending:
+                        # revoke-pending: the journaled revocation already
+                        # returned the task to its ready queue; the pump
+                        # regrants it (replayed exactly like a completion)
                         continue
                     st = run.spec.stages[rec.stage]
-                    if rec.attempts < st.retry.max_attempts:
+                    if rec.attempts - rec.revokes < st.retry.max_attempts:
                         # no terminal event for this lease: resubmit with a
                         # bumped (journaled) attempt; the stale attempt's
                         # result, if it ever lands, is fenced as a duplicate
@@ -673,7 +769,7 @@ class PipelineAgent:
             campaign_id=run.campaign_id, pipeline=run.state.pipeline,
             state=run.state.state, agent_id=self.agent_id,
             stages={n: s.to_dict() for n, s in run.state.stages.items()},
-            recovered=run.recovered)
+            recovered=run.recovered, preemptions=run.state.preemptions)
         self._producer.send(self.topics["campaigns"], ev.to_dict(),
                             key=run.campaign_id)
 
@@ -730,6 +826,7 @@ class PipelineAgent:
                             if not r.state.done},
                 "journal": self.journal,
                 "events_journaled": self.events_journaled,
+                "preemptions": self.preemptions,
                 "recovered_campaigns": sum(
                     1 for r in self._campaigns.values() if r.recovered),
             }
@@ -755,6 +852,7 @@ class PipelineAgent:
                 self._watchdog()
                 with self._lock:
                     self._pump_all()
+                self._maybe_preempt()
             except Exception:  # pragma: no cover - defensive
                 log.exception("pipeline agent %s loop error", self.agent_id)
                 time.sleep(self.poll_interval_s)

@@ -39,10 +39,20 @@ class RetryPolicy:
     ``max_attempts`` counts total submissions of one task (initial + retries);
     ``timeout_s`` is the pipeline agent's per-task watchdog — a task with no
     result after this long is resubmitted with a bumped attempt (straggler
-    mitigation; duplicate results are fenced downstream)."""
+    mitigation; duplicate results are fenced downstream).
+
+    ``max_preemptions`` opts the campaign into **preemptive fair share**: how
+    many times the lease policy may revoke one of the campaign's running
+    leases (``Broker.revoke_lease(reason="preempt")``, journaled as
+    ``LeaseRevoked``) to hand the slot to a starved peer. The bound is
+    per *campaign* — the effective cap is the maximum over its stages —
+    and preemptions do **not** consume the ``max_attempts`` retry budget
+    (a requeue is not a failure). 0 (the default) disables preemption of
+    this campaign entirely."""
 
     max_attempts: int = 3
     timeout_s: float | None = None
+    max_preemptions: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

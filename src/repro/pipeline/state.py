@@ -19,6 +19,11 @@ typed event log:
     retry budget is therefore journaled, not agent memory),
   - :class:`TaskDone` / :class:`TaskFailed` — a terminal (or, for
     ``final=False``, a to-be-retried) verdict for one task,
+  - :class:`LeaseRevoked` — a running lease was taken back
+    (``Broker.revoke_lease``; reason ``"preempt"`` for fair-share
+    preemption) and the task returned to its stage's ready queue awaiting
+    a regrant — replayed by recovery exactly like completions, so a crash
+    between a revocation and its regrant loses nothing,
   - :class:`StageSkipped` — a conditional edge (``Stage.skip_when``)
     short-circuited one task; skips recorded here never re-run predicates
     during replay,
@@ -117,6 +122,17 @@ class LeaseGranted(JournalEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class LeaseRevoked(JournalEvent):
+    """A granted/running lease was revoked (the task goes back to ready).
+    Not a failure: the retry budget is untouched; ``reason`` follows
+    :class:`repro.core.lease.RevokeReason` (``"preempt"`` counts toward the
+    campaign's ``RetryPolicy.max_preemptions`` bound)."""
+
+    task_id: str = ""
+    reason: str = "preempt"
+
+
+@dataclasses.dataclass(frozen=True)
 class TaskDone(JournalEvent):
     task_id: str = ""
     result: Mapping[str, Any] | None = None
@@ -154,6 +170,7 @@ class CampaignSnapshot(JournalEvent):
         dataclasses.field(default_factory=dict)
     tasks: tuple = ()
     joins_fired: tuple = ()
+    preemptions: int = 0
 
 
 def snapshot_event(state: "CampaignState") -> CampaignSnapshot:
@@ -172,14 +189,15 @@ def snapshot_event(state: "CampaignState") -> CampaignSnapshot:
         params=dict(state.params), weight=state.weight,
         started_at=state.started_at, finished_at=state.finished_at,
         stages=stages, tasks=tasks,
-        joins_fired=tuple(sorted(state.joins_fired)))
+        joins_fired=tuple(sorted(state.joins_fired)),
+        preemptions=state.preemptions)
 
 
 EVENT_TYPES: dict[str, type] = {
     cls.__name__: cls
     for cls in (CampaignSubmitted, StageDispatched, StageSkipped,
-                BarrierReleased, LeaseGranted, TaskDone, TaskFailed,
-                CampaignSnapshot)
+                BarrierReleased, LeaseGranted, LeaseRevoked, TaskDone,
+                TaskFailed, CampaignSnapshot)
 }
 
 
@@ -218,6 +236,8 @@ class TaskRecord:
     done: bool = False
     failed: bool = False
     skipped: bool = False           # conditional edge: never submitted
+    revokes: int = 0                # journaled LeaseRevoked events
+    revoke_pending: bool = False    # revoked, back in ready, not regranted
     result: dict | None = None
 
     @property
@@ -260,6 +280,7 @@ class CampaignState:
         self.by_stage: dict[str, list[str]] = {}
         self.ready: dict[str, list[str]] = {}
         self.joins_fired: set[str] = set()
+        self.preemptions = 0              # journaled reason="preempt" revokes
         self.seq = -1                     # highest applied journal seq
         # derived index: (upstream_task_id, stage) pairs already planned —
         # what makes plan_downstream() repair-idempotent without O(n^2) scans
@@ -368,11 +389,42 @@ class CampaignState:
             ss.submitted += 1
         else:
             ss.retried += 1
+        self._clear_revoke_pending(rec)
         try:
             self.ready[rec.stage].remove(ev.task_id)
         except ValueError:
             pass
         return True
+
+    def _apply_LeaseRevoked(self, ev: LeaseRevoked) -> bool:
+        rec = self.tasks.get(ev.task_id)
+        if rec is None or rec.terminal or rec.attempts == 0 \
+                or rec.revoke_pending or self.done:
+            return False
+        rec.revokes += 1
+        rec.revoke_pending = True
+        ss = self.stages[rec.stage]
+        ss.revoked += 1
+        ss.revoke_pending += 1
+        if ev.reason == "preempt":
+            self.preemptions += 1
+        # back of the ready queue: the lease pump regrants it under the
+        # normal fair-share arbitration (journaled as a fresh LeaseGranted)
+        self.ready[rec.stage].append(ev.task_id)
+        return True
+
+    def _clear_revoke_pending(self, rec: TaskRecord) -> None:
+        if rec.revoke_pending:
+            rec.revoke_pending = False
+            ss = self.stages[rec.stage]
+            ss.revoke_pending = max(0, ss.revoke_pending - 1)
+            # a pending task sits in its ready queue awaiting a regrant; a
+            # terminal verdict arriving first must pull it back out so the
+            # pump can never grant a finished task
+            try:
+                self.ready[rec.stage].remove(rec.task_id)
+            except ValueError:
+                pass
 
     def _apply_TaskDone(self, ev: TaskDone) -> bool:
         rec = self.tasks.get(ev.task_id)
@@ -380,6 +432,7 @@ class CampaignState:
             return False
         rec.done = True
         rec.result = dict(ev.result) if ev.result is not None else None
+        self._clear_revoke_pending(rec)
         self.stages[rec.stage].done += 1
         self._maybe_complete(ev.ts)
         return True
@@ -393,6 +446,7 @@ class CampaignState:
             ss.errors += 1
         if ev.final:
             rec.failed = True
+            self._clear_revoke_pending(rec)
             ss.failed += 1
             self.state = self.FAILED
             self.failure = ev.reason
@@ -426,7 +480,9 @@ class CampaignState:
                 failed=int(sd.get("failed", 0)),
                 retried=int(sd.get("retried", 0)),
                 errors=int(sd.get("errors", 0)),
-                skipped=int(sd.get("skipped", 0)))
+                skipped=int(sd.get("skipped", 0)),
+                revoked=int(sd.get("revoked", 0)),
+                revoke_pending=int(sd.get("revoke_pending", 0)))
             self.by_stage[st.name] = []
             self.ready[st.name] = []
         for td in ev.tasks:  # per-stage creation order (see snapshot_event)
@@ -439,15 +495,18 @@ class CampaignState:
                 done=bool(td.get("done", False)),
                 failed=bool(td.get("failed", False)),
                 skipped=bool(td.get("skipped", False)),
+                revokes=int(td.get("revokes", 0)),
+                revoke_pending=bool(td.get("revoke_pending", False)),
                 result=(dict(td["result"])
                         if td.get("result") is not None else None))
             self.tasks[rec.task_id] = rec
             self.by_stage[rec.stage].append(rec.task_id)
             for dep in rec.dep_ids:
                 self._mapped.add((dep, rec.stage))
-            if not rec.terminal and rec.attempts == 0:
+            if not rec.terminal and (rec.attempts == 0 or rec.revoke_pending):
                 self.ready[rec.stage].append(rec.task_id)
         self.joins_fired = set(ev.joins_fired)
+        self.preemptions = int(ev.preemptions)
         return True
 
     def _maybe_complete(self, ts: float) -> None:
@@ -489,6 +548,7 @@ class CampaignState:
             "by_stage": self.by_stage,
             "ready": self.ready,
             "joins_fired": sorted(self.joins_fired),
+            "preemptions": self.preemptions,
         }
 
     def __eq__(self, other: object) -> bool:

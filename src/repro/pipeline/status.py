@@ -25,10 +25,14 @@ class StageStatus:
     ``expected`` is fixed at submit time (source = #batches, map = 1:1 with
     upstream, join = 1); ``submitted``/``done``/``failed`` advance as the DAG
     executes; ``retried`` counts watchdog/error resubmissions;
-    ``duplicates`` counts fenced duplicate results (late attempts); and
+    ``duplicates`` counts fenced duplicate results (late attempts);
     ``skipped`` counts tasks short-circuited by the stage's ``skip_when``
     conditional-edge predicate (they count toward completion — a fully
-    skipped stage finishes the campaign instead of stalling it)."""
+    skipped stage finishes the campaign instead of stalling it);
+    ``revoked`` counts journaled lease revocations (``LeaseRevoked``, e.g.
+    fair-share preemption) and ``revoke_pending`` how many of those are
+    back in the ready queue awaiting a regrant — they no longer hold a
+    slot, so they are excluded from ``in_flight``."""
 
     name: str
     script: str
@@ -40,10 +44,13 @@ class StageStatus:
     duplicates: int = 0
     errors: int = 0
     skipped: int = 0
+    revoked: int = 0
+    revoke_pending: int = 0
 
     @property
     def in_flight(self) -> int:
-        return max(0, self.submitted - self.done - self.failed)
+        return max(0, self.submitted - self.done - self.failed
+                   - self.revoke_pending)
 
     @property
     def complete(self) -> bool:
@@ -65,6 +72,7 @@ class CampaignStatus:
     started_at: float = dataclasses.field(default_factory=time.time)
     finished_at: float | None = None
     failure: str | None = None
+    preemptions: int = 0  # fair-share lease revocations this campaign took
 
     @property
     def done(self) -> bool:
@@ -88,6 +96,7 @@ class CampaignStatus:
             "progress": round(self.progress(), 4),
             "elapsed_s": round(self.elapsed_s(), 3),
             "failure": self.failure,
+            "preemptions": self.preemptions,
             "stages": {n: s.to_dict() for n, s in self.stages.items()},
         }
 
@@ -95,7 +104,8 @@ class CampaignStatus:
     def from_snapshot(cls, d: Mapping[str, Any]) -> "CampaignStatus":
         """Rebuild from a ``to_dict`` snapshot (monitor-side mirroring)."""
         st = cls(campaign_id=d["campaign_id"], pipeline=d.get("pipeline", ""),
-                 state=d.get("state", "RUNNING"))
+                 state=d.get("state", "RUNNING"),
+                 preemptions=int(d.get("preemptions", 0)))
         for name, sd in d.get("stages", {}).items():
             st.stages[name] = StageStatus(
                 name=name, script=sd.get("script", ""),
@@ -106,5 +116,7 @@ class CampaignStatus:
                 retried=int(sd.get("retried", 0)),
                 duplicates=int(sd.get("duplicates", 0)),
                 errors=int(sd.get("errors", 0)),
-                skipped=int(sd.get("skipped", 0)))
+                skipped=int(sd.get("skipped", 0)),
+                revoked=int(sd.get("revoked", 0)),
+                revoke_pending=int(sd.get("revoke_pending", 0)))
         return st

@@ -69,6 +69,9 @@ class _PoolState:
         self.consumed: deque[tuple[float, int]] = deque(maxlen=history)
         self.scale_ups = 0
         self.scale_downs = 0
+        # when the class backlog last went 0 -> nonzero; the age of this
+        # mark at the moment a grow is decided is the decision lag
+        self.pressure_since: float | None = None
 
 
 class AutoscaleController:
@@ -102,6 +105,24 @@ class AutoscaleController:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self.ticks = 0
+        metrics = cluster.broker.metrics
+        self._c_scaled = metrics.counter(
+            "ksa_autoscale_decisions_total",
+            "Scaling decisions recorded, by pool and direction",
+            labels=("pool", "action"))
+        self._h_tick = metrics.histogram(
+            "ksa_autoscale_tick_seconds",
+            "Sense/decide/act duration of one control-loop pass")
+        self._h_lag = metrics.histogram(
+            "ksa_autoscale_decision_lag_seconds",
+            "Backlog appearing -> scale-up decision lag, per pool",
+            labels=("pool",))
+        self._g_agents = metrics.gauge(
+            "ksa_pool_agents", "Serving agents per elastic pool",
+            labels=("pool",))
+        self._g_backlog = metrics.gauge(
+            "ksa_pool_backlog", "Class-topic backlog per elastic pool",
+            labels=("pool",))
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -137,6 +158,7 @@ class AutoscaleController:
         """One control-loop pass over every pool (public for deterministic
         tests: drive ticks by hand with the loop thread never started)."""
         now = time.time()
+        t_tick = time.perf_counter()
         topics = {cls: class_topic(self.cluster.prefix, cls)
                   for cls in self._pools}
         qs = self.cluster.broker.queue_stats(self._group,
@@ -147,6 +169,10 @@ class AutoscaleController:
                 self._reap(pool)
                 stats = qs[topics[cls]]
                 backlog = stats["depth"]
+                if backlog <= 0:
+                    pool.pressure_since = None
+                elif pool.pressure_since is None:
+                    pool.pressure_since = now
                 pool.consumed.append((now, stats["consumed"]))
                 in_flight = 0
                 for a in pool.agents:
@@ -168,6 +194,12 @@ class AutoscaleController:
                 desired = max(pool.spec.min_agents,
                               min(pool.spec.max_agents, desired))
                 if desired > sig.agents:
+                    if pool.pressure_since is not None:
+                        # the lag this pool's backlog waited for capacity;
+                        # the episode is answered, so re-arm the mark
+                        self._h_lag.labels(pool=cls).observe(
+                            now - pool.pressure_since)
+                        pool.pressure_since = None
                     self._grow(pool, desired - sig.agents,
                                reason=f"backlog {backlog} "
                                       f"({sig.backlog_per_slot:.1f}/slot)")
@@ -176,6 +208,9 @@ class AutoscaleController:
                                  reason=f"idle {sig.idle_for_s:.2f}s")
                 pool.history.append((now, backlog, len(pool.agents),
                                      in_flight))
+                self._g_agents.labels(pool=cls).set(len(pool.agents))
+                self._g_backlog.labels(pool=cls).set(backlog)
+        self._h_tick.observe(time.perf_counter() - t_tick)
 
     def _drain_rate(self, pool: _PoolState, now: float) -> float:
         if not pool.consumed:
@@ -237,6 +272,7 @@ class AutoscaleController:
              "count": n, "agents": len(pool.agents),
              "draining": len(pool.draining), "reason": reason}
         self._decisions.append(d)
+        self._c_scaled.labels(pool=pool.spec.cls, action=action).inc()
         log.info("autoscale %s: %s x%d -> %d agents (%s)", pool.spec.cls,
                  action, n, len(pool.agents), reason)
 

@@ -88,6 +88,7 @@ class KsaCluster:
                  poll_interval_s: float = 0.01,
                  session_timeout_s: float | None = None,
                  default_partitions: int = 4,
+                 obs: bool = True,
                  agent_kw: Mapping[str, Any] | None = None,
                  monitor_kw: Mapping[str, Any] | None = None):
         self.prefix = prefix
@@ -115,7 +116,8 @@ class KsaCluster:
 
         self._owns_broker = broker is None
         if broker is None:
-            broker_kw: dict[str, Any] = {"default_partitions": default_partitions}
+            broker_kw: dict[str, Any] = {"default_partitions": default_partitions,
+                                         "obs": obs}
             if session_timeout_s is not None:
                 broker_kw["session_timeout_s"] = session_timeout_s
             broker = Broker(**broker_kw)
@@ -492,3 +494,74 @@ class KsaCluster:
         if self.autoscaler is not None:
             out["autoscale"] = self.autoscaler.status()
         return out
+
+    def metrics_text(self) -> str:
+        """Prometheus text-format snapshot of the broker's metrics registry
+        — the same payload the monitor serves at ``GET /metrics``."""
+        return self.broker.metrics.render()
+
+    def trace(self, task_id: str) -> list[dict]:
+        """Full span chain for a task, sorted by start time: ``submit``,
+        ``route``, ``grant`` (duration = queue wait), ``claim``, ``run``,
+        ``revoke``, ``commit``, and ``journal`` spans across every attempt
+        (attempts share one ``trace_id``, so a preempted-and-retried task
+        yields one linked chain). Empty list if the task is unknown, its
+        spans were evicted from the bounded store, or ``obs=False``."""
+        return self.broker.spans.trace(task_id)
+
+    def campaign_report(self, campaign_id: str) -> dict:
+        """Per-stage critical-path breakdown for a campaign, joined from the
+        span store: where wall-clock went — queue wait vs run time vs time
+        burnt on pre-terminal attempts (retries/preemptions).
+
+        Per stage (topological order): ``queue_s``/``run_s`` sum the
+        terminal attempt's grant/run span durations across its tasks,
+        ``retry_s`` sums wall time spent inside earlier attempts, ``retries``
+        counts non-terminal attempts, ``wall_s`` is the stage's span extent
+        (first span start → last span end). ``dominant_stage`` names the
+        stage with the largest wall_s."""
+        st = self.pipeline.status(campaign_id)
+        stages: dict[str, dict] = {}
+        for stage_name, task_ids in self.pipeline.stage_tasks(campaign_id):
+            agg = {"tasks": len(task_ids), "traced": 0, "queue_s": 0.0,
+                   "run_s": 0.0, "retry_s": 0.0, "retries": 0, "wall_s": 0.0}
+            lo, hi = None, None
+            for tid in task_ids:
+                spans = self.broker.spans.trace(tid)
+                if not spans:
+                    continue
+                agg["traced"] += 1
+                lo = min(lo, spans[0]["start"]) if lo is not None else spans[0]["start"]
+                end = max(s["end"] for s in spans)
+                hi = max(hi, end) if hi is not None else end
+                # terminal attempt = the attempt of the last run span (the
+                # one whose result actually committed); everything before
+                # it is retry overhead.
+                runs = [s for s in spans if s["name"] == "run"]
+                term = runs[-1]["attempt"] if runs else None
+                for s in spans:
+                    if s["name"] == "grant" and s.get("attempt") == term:
+                        agg["queue_s"] += s["dur_s"]
+                    elif s["name"] == "run" and s.get("attempt") == term:
+                        agg["run_s"] += s["dur_s"]
+                if term is not None:
+                    earlier = [s for s in spans
+                               if s["name"] in ("grant", "claim", "run", "revoke")
+                               and s.get("attempt", term) < term]
+                    if earlier:
+                        agg["retry_s"] += (max(s["end"] for s in earlier)
+                                           - min(s["start"] for s in earlier))
+                        agg["retries"] += len({s["attempt"] for s in earlier})
+            if lo is not None and hi is not None:
+                agg["wall_s"] = hi - lo
+            stages[stage_name] = agg
+        dominant = max(stages, key=lambda n: stages[n]["wall_s"]) if stages else None
+        return {
+            "campaign_id": campaign_id,
+            "pipeline": st.pipeline,
+            "state": st.state,
+            "preemptions": st.preemptions,
+            "wall_s": st.elapsed_s(),
+            "stages": stages,
+            "dominant_stage": dominant,
+        }

@@ -168,15 +168,54 @@ class AgentBase:
         # policing tolerates the task instead of revoke-looping it forever
         # (the same spirit as the oversized-task admission escape hatch).
         self.max_revoke_requeues = max_revoke_requeues
-        self.tasks_completed = 0
-        self.tasks_failed = 0
-        self.tasks_rerouted = 0
-        self.tasks_deferred = 0
-        self.tasks_requeued = 0
-        self.tasks_revoked = 0
-        self.tasks_dropped_revoked = 0
-        self.mem_revoked = 0
-        self.heartbeat_failures = 0
+        # lifecycle counters live in the broker's obs registry as one
+        # labeled family; the legacy ``tasks_*`` attributes below are
+        # read-only views over the same children (see properties)
+        events = broker.metrics.counter(
+            "ksa_agent_events_total",
+            "Per-agent task lifecycle events", labels=("agent", "event"))
+        self._c = {e: events.labels(agent=self.agent_id, event=e)
+                   for e in ("completed", "failed", "rerouted", "deferred",
+                             "requeued", "revoked", "dropped_revoked",
+                             "mem_revoked", "heartbeat_failures")}
+
+    # -- counter views (registry-backed; names predate repro.obs) ----------
+
+    @property
+    def tasks_completed(self) -> int:
+        return self._c["completed"].value
+
+    @property
+    def tasks_failed(self) -> int:
+        return self._c["failed"].value
+
+    @property
+    def tasks_rerouted(self) -> int:
+        return self._c["rerouted"].value
+
+    @property
+    def tasks_deferred(self) -> int:
+        return self._c["deferred"].value
+
+    @property
+    def tasks_requeued(self) -> int:
+        return self._c["requeued"].value
+
+    @property
+    def tasks_revoked(self) -> int:
+        return self._c["revoked"].value
+
+    @property
+    def tasks_dropped_revoked(self) -> int:
+        return self._c["dropped_revoked"].value
+
+    @property
+    def mem_revoked(self) -> int:
+        return self._c["mem_revoked"].value
+
+    @property
+    def heartbeat_failures(self) -> int:
+        return self._c["heartbeat_failures"].value
 
     # -- capacity -------------------------------------------------------------
 
@@ -251,14 +290,14 @@ class AgentBase:
                     self._accept(task)
                 else:
                     self._deferred.append(task)
-                    self.tasks_deferred += 1
+                    self._c["deferred"].inc()
         else:
             # still heartbeat group membership while saturated
             try:
                 self.broker.heartbeat(f"{self.prefix}-agents",
                                       self._consumer.member_id)
             except Exception as exc:
-                self.heartbeat_failures += 1
+                self._c["heartbeat_failures"].inc()
                 log.debug("agent %s: broker heartbeat failed: %r",
                           self.agent_id, exc)
         self._watchdog()
@@ -278,12 +317,16 @@ class AgentBase:
                         "executing anyway", self.agent_id, task.task_id,
                         self.profile)
             return True
-        self.tasks_rerouted += 1
+        self._c["rerouted"].inc()
         log.warning("agent %s: rerouting misplaced task %s to %s",
                     self.agent_id, task.task_id, target)
         # give the lease up without a verdict: the rerouted record grants a
         # fresh one to whichever equipped agent leases it
         self.broker.forget_lease(task.task_id, self._consumer.member_id)
+        now = time.time()
+        self.broker.spans.add(task.task_id, "route", now, now,
+                              attempt=task.attempt, agent=self.agent_id,
+                              target=target)
         self._producer.send(target, task.to_dict(), key=task.task_id)
         return False
 
@@ -312,7 +355,7 @@ class AgentBase:
         if not self.broker.revoke_lease(run.task.task_id, reason,
                                         requeue=requeue):
             return False
-        self.tasks_revoked += 1
+        self._c["revoked"].inc()
         return True
 
     def _watchdog(self) -> None:
@@ -339,8 +382,11 @@ class AgentBase:
         self._police_mem(items)
 
     def _police_mem(self, items: list[tuple[str, _Running]]) -> None:
-        """Mem-overage policing: sample each running task's self-reported
-        RSS against its ``Resources.mem_mb`` request and revoke over-budget
+        """Mem-overage policing: sample each running task's resident memory
+        — kernel-accounted RSS growth by default, the task's
+        ``report_mem()`` value when it self-reports (see
+        :attr:`ClusterComputing.mem_used_mb`) — against its
+        ``Resources.mem_mb`` request and revoke over-budget
         leases (admission packs requests; this polices *usage*). Flat tasks
         are requeued with a bumped attempt up to ``max_revoke_requeues``,
         then tolerated (mirroring the oversized-task admission escape
@@ -367,7 +413,7 @@ class AgentBase:
             if not self._revoke_run(run, RevokeReason.MEM_OVERAGE,
                                     requeue=requeue):
                 continue
-            self.mem_revoked += 1
+            self._c["mem_revoked"].inc()
             log.warning("agent %s: task %s exceeded mem budget "
                         "(%.0f > %d MB) — lease revoked%s", self.agent_id,
                         tid, used, budget, " and requeued" if requeue else "")
@@ -402,9 +448,9 @@ class AgentBase:
         with self._lock:
             self._running.pop(task.task_id, None)
         if ok:
-            self.tasks_completed += 1
+            self._c["completed"].inc()
         else:
-            self.tasks_failed += 1
+            self._c["failed"].inc()
 
     # -- lifecycle ------------------------------------------------------------------
 
@@ -492,7 +538,7 @@ class AgentBase:
                 self._producer.send(target, task.to_dict(), key=task.task_id)
             self._send_status(task, TaskStatus.SUBMITTED,
                               requeued_by=self.agent_id)
-            self.tasks_requeued += 1
+            self._c["requeued"].inc()
 
     @property
     def draining(self) -> bool:
@@ -600,7 +646,7 @@ class WorkerAgent(AgentBase):
         # double-run it.
         if not self.broker.claim_start(task.task_id, member, task.attempt,
                                        cancel):
-            self.tasks_dropped_revoked += 1
+            self._c["dropped_revoked"].inc()
             return
         run = _Running(task=task, cancel=cancel)
         with self._lock:
@@ -678,7 +724,7 @@ class ClusterAgent(AgentBase):
 
         if not self.broker.claim_start(task.task_id, member, task.attempt,
                                        cancel, on_revoke=_on_revoke):
-            self.tasks_dropped_revoked += 1
+            self._c["dropped_revoked"].inc()
             return
 
         def _job(cancel_event: threading.Event | None = None) -> None:

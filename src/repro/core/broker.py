@@ -63,6 +63,8 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import msgpack
 
+from repro.obs import MetricsRegistry, NullSpanStore, SpanStore, topic_class
+
 from .lease import LeaseTable
 
 
@@ -246,7 +248,8 @@ class Broker:
                  default_partitions: int = 4,
                  retention_records: int | None = None,
                  session_timeout_s: float = 10.0,
-                 fsync: bool = False):
+                 fsync: bool = False,
+                 obs: bool = True):
         self._lock = threading.RLock()
         self._data_arrived = threading.Condition(self._lock)
         self._topics: dict[str, list[_PartitionLog]] = {}
@@ -257,7 +260,29 @@ class Broker:
         self._fsync = fsync
         self.session_timeout_s = session_timeout_s
         self._member_seq = 0
-        self._lease_table = LeaseTable()
+        # observability substrate (repro.obs): the broker owns the one
+        # registry and span store every co-located component shares.
+        # obs=False nulls histograms and spans; counters stay live (the
+        # legacy stats views are built on them).
+        self.metrics = MetricsRegistry(enabled=obs)
+        self.spans = SpanStore() if obs else NullSpanStore()
+        self._h_queue_wait = self.metrics.histogram(
+            "ksa_task_queue_wait_seconds",
+            "Record produce -> lease grant wait, per resource class",
+            labels=("cls",))
+        self._h_claim = self.metrics.histogram(
+            "ksa_lease_claim_latency_seconds",
+            "Lease grant -> claim (execution start), per resource class",
+            labels=("cls",))
+        self._h_run = self.metrics.histogram(
+            "ksa_task_run_seconds",
+            "Claim -> commit execution time, per resource class",
+            labels=("cls",))
+        self.metrics.register_callback(
+            "ksa_leases_active",
+            lambda: self.lease_stats()["active"],
+            "Live (GRANTED/RUNNING) leases")
+        self._lease_table = LeaseTable(metrics=self.metrics)
         self._closed = False
         self._offsets_path = (os.path.join(log_dir, "_offsets.log")
                               if log_dir else None)
@@ -603,14 +628,27 @@ class Broker:
                     budget -= len(recs)
             if updates:
                 self._persist_offsets(group_id, updates)
+            now = time.time()
             for rec in out:
                 # task records (keyed, self-describing) get a GRANTED lease —
                 # the handle every stop-path revokes through
                 if rec.key and isinstance(rec.value, dict) \
                         and rec.value.get("task_id") == rec.key:
-                    self._lease_table.grant(
+                    lease = self._lease_table.grant(
                         rec.key, member_id, rec.topic,
                         int(rec.value.get("attempt", 0)), dict(rec.value))
+                    if lease is not None:
+                        # the grant span's duration IS the queue wait:
+                        # record append -> this lease
+                        cls = topic_class(rec.topic)
+                        self._h_queue_wait.labels(cls=cls).observe(
+                            now - rec.timestamp)
+                        trace = rec.value.get("trace") or {}
+                        self.spans.add(
+                            rec.key, "grant", rec.timestamp, now,
+                            attempt=lease.attempt, holder=member_id,
+                            topic=rec.topic, cls=cls,
+                            trace_id=trace.get("trace_id", rec.key))
             return out
 
     # -- task leases (repro.core.lease) -------------------------------------
@@ -624,8 +662,17 @@ class Broker:
         superseded while queued — the holder must drop the task, its record
         has already been requeued (or belongs to someone else)."""
         with self._lock:
-            return self._lease_table.claim_start(task_id, holder, attempt,
-                                                 cancel, on_revoke)
+            lease = self._lease_table.get(task_id)
+            ok = self._lease_table.claim_start(task_id, holder, attempt,
+                                               cancel, on_revoke)
+            if ok and lease is not None and lease.started_at is not None:
+                cls = topic_class(lease.topic)
+                self._h_claim.labels(cls=cls).observe(
+                    lease.started_at - lease.granted_at)
+                self.spans.add(task_id, "claim", lease.granted_at,
+                               lease.started_at, attempt=attempt,
+                               holder=holder, cls=cls)
+            return ok
 
     def complete_lease(self, task_id: str, holder: str | None = None,
                        attempt: int | None = None, *, ok: bool = True) -> bool:
@@ -634,7 +681,18 @@ class Broker:
         error is stale and must be suppressed, because the revocation
         already requeued the task."""
         with self._lock:
-            return self._lease_table.complete(task_id, holder, attempt, ok)
+            lease = self._lease_table.get(task_id)
+            committed = self._lease_table.complete(task_id, holder, attempt,
+                                                   ok)
+            if committed and lease is not None \
+                    and lease.started_at is not None:
+                now = time.time()
+                cls = topic_class(lease.topic)
+                self._h_run.labels(cls=cls).observe(now - lease.started_at)
+                self.spans.add(task_id, "run", lease.started_at, now,
+                               attempt=lease.attempt, holder=lease.holder,
+                               ok=ok, cls=cls)
+            return committed
 
     def revoke_lease(self, task_id: str, reason: str, *,
                      requeue: bool = True) -> bool:
@@ -652,11 +710,15 @@ class Broker:
             lease = self._lease_table.revoke(task_id, reason)
             if lease is None:
                 return False
+            self.spans.add(task_id, "revoke",
+                           lease.revoked_at, lease.revoked_at,
+                           attempt=lease.attempt, holder=lease.holder,
+                           reason=reason, requeued=requeue)
             if requeue:
                 value = dict(lease.value)
                 if lease.started_at is not None:
                     value["attempt"] = lease.attempt + 1
-                self._lease_table.requeued += 1
+                self._lease_table.count_requeued()
                 self.produce(lease.topic, value, key=task_id)
             return True
 

@@ -19,6 +19,8 @@ import time
 import traceback
 from typing import Any, Callable, Type
 
+from repro.obs import sample_rss_mb
+
 from .broker import Broker, Producer
 from .messages import (ErrorMessage, ResultMessage, StatusUpdate, TaskMessage,
                        TaskStatus, topic_names)
@@ -53,9 +55,14 @@ class ClusterComputing:
         # revoked lease's task was already requeued, so a late result or
         # error from this holder must be suppressed, not fenced downstream.
         self._commit_cb = commit
-        # self-reported resident memory (MB) for mem-overage policing; the
-        # agent samples it against Resources.mem_mb each watchdog tick.
-        self.mem_used_mb: float = 0.0
+        # mem-overage policing input (the agent samples mem_used_mb against
+        # Resources.mem_mb each watchdog tick). Default: kernel-accounted
+        # RSS *growth* since this task started (repro.obs.sample_rss_mb) —
+        # a delta, because in-process tasks share the interpreter whose
+        # baseline footprint is not this task's doing. report_mem() remains
+        # as an explicit override for scripts that track their own usage.
+        self._mem_reported: float | None = None
+        self._rss_baseline_mb: float = sample_rss_mb()
 
     # -- API used by subclasses ------------------------------------------------
 
@@ -85,13 +92,28 @@ class ClusterComputing:
     def cancelled(self) -> bool:
         return self._cancel.is_set()
 
+    @property
+    def mem_used_mb(self) -> float:
+        """Resident memory (MB) charged to this task: the explicit
+        :meth:`report_mem` value when set, else the process RSS growth since
+        the task was constructed (kernel-accounted via ``/proc/self/status``,
+        so a misbehaving task cannot hide by simply not reporting)."""
+        if self._mem_reported is not None:
+            return self._mem_reported
+        return max(0.0, sample_rss_mb() - self._rss_baseline_mb)
+
+    @mem_used_mb.setter
+    def mem_used_mb(self, mem_mb: float) -> None:
+        self._mem_reported = float(mem_mb)
+
     def report_mem(self, mem_mb: float) -> None:
-        """Report the task's current resident memory. Long-running scripts
-        that grow (structure batches, feature caches) should call this so
-        the agent's mem-overage policing can compare usage against the
-        task's ``Resources.mem_mb`` request and revoke the lease instead of
+        """Report the task's current resident memory, overriding the RSS
+        sampler. Long-running scripts that track their own usage (structure
+        batches, feature caches) should call this so the agent's
+        mem-overage policing can compare usage against the task's
+        ``Resources.mem_mb`` request and revoke the lease instead of
         letting one task blow the pool budget."""
-        self.mem_used_mb = float(mem_mb)
+        self._mem_reported = float(mem_mb)
 
     def _commit(self, ok: bool) -> bool:
         """Commit the verdict through the lease gate; False = fenced."""

@@ -131,7 +131,29 @@ class LeaseTable:
     method is called by :class:`~repro.core.broker.Broker` with the broker
     lock held, which is what makes revoke-vs-complete atomic."""
 
-    def __init__(self) -> None:
+    def __init__(self, metrics=None) -> None:
+        # counters live in the obs registry (repro.obs) so /metrics and the
+        # legacy stats() dict are the same numbers; a standalone table (unit
+        # tests, direct wiring) gets a private registry
+        from repro.obs import MetricsRegistry
+        reg = metrics if metrics is not None else MetricsRegistry()
+        self._c_granted = reg.counter(
+            "ksa_leases_granted_total", "Leases granted (GRANTED entered)")
+        self._c_completed = reg.counter(
+            "ksa_leases_completed_total", "Leases committed DONE")
+        self._c_failed = reg.counter(
+            "ksa_leases_failed_total", "Leases committed FAILED")
+        self._c_requeued = reg.counter(
+            "ksa_leases_requeued_total",
+            "Revoked lease records requeued by the broker")
+        self._c_stale = reg.counter(
+            "ksa_lease_stale_drops_total",
+            "Stale sibling records refused (grant or claim)")
+        self._c_revoked = reg.counter(
+            "ksa_leases_revoked_total", "Leases revoked, by reason",
+            labels=("reason",))
+        for r in RevokeReason.ALL:  # pre-create so stats() always lists ALL
+            self._c_revoked.labels(reason=r)
         self._leases: dict[str, Lease] = {}
         # task_id -> accepted attempt: completion tombstones. Stop-path
         # requeues and watchdog resubmissions race the attempt they
@@ -142,12 +164,36 @@ class LeaseTable:
         # A deliberate rerun of a finished task id needs a higher attempt.
         self._done: dict[str, int] = {}
         self._seq = 0
-        self.granted = 0
-        self.completed = 0
-        self.failed = 0
-        self.requeued = 0
-        self.stale_drops = 0
-        self.revoked: dict[str, int] = {r: 0 for r in RevokeReason.ALL}
+
+    # -- counter views (registry-backed; the attribute names predate obs) --
+
+    @property
+    def granted(self) -> int:
+        return self._c_granted.value
+
+    @property
+    def completed(self) -> int:
+        return self._c_completed.value
+
+    @property
+    def failed(self) -> int:
+        return self._c_failed.value
+
+    @property
+    def requeued(self) -> int:
+        return self._c_requeued.value
+
+    @property
+    def stale_drops(self) -> int:
+        return self._c_stale.value
+
+    @property
+    def revoked(self) -> dict:
+        return {key[0]: child.value for key, child in self._c_revoked.items()}
+
+    def count_requeued(self) -> None:
+        """Called by the broker when it requeues a revoked lease's record."""
+        self._c_requeued.inc()
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -160,13 +206,13 @@ class LeaseTable:
         (its claim will be refused instead)."""
         cur = self._leases.get(task_id)
         if cur is not None and cur.live and cur.attempt > attempt:
-            self.stale_drops += 1
+            self._c_stale.inc()
             return None
         self._seq += 1
         lease = Lease(task_id=task_id, holder=holder, topic=topic,
                       attempt=attempt, value=value, seq=self._seq)
         self._leases[task_id] = lease
-        self.granted += 1
+        self._c_granted.inc()
         return lease
 
     def claim_start(self, task_id: str, holder: str, attempt: int,
@@ -186,7 +232,7 @@ class LeaseTable:
             if lease is not None and lease.holder == holder \
                     and lease.attempt == attempt:
                 del self._leases[task_id]
-            self.stale_drops += 1
+            self._c_stale.inc()
             return False
         lease = self._leases.get(task_id)
         if lease is None:
@@ -228,12 +274,12 @@ class LeaseTable:
             return False
         lease.state = DONE if ok else FAILED
         if ok:
-            self.completed += 1
+            self._c_completed.inc()
             self._done[task_id] = lease.attempt
             if len(self._done) > _DONE_CAP:
                 self._done.pop(next(iter(self._done)))
         else:
-            self.failed += 1
+            self._c_failed.inc()
         return True
 
     def revoke(self, task_id: str, reason: str) -> Lease | None:
@@ -248,7 +294,7 @@ class LeaseTable:
         lease.state = REVOKED
         lease.reason = reason
         lease.revoked_at = time.time()
-        self.revoked[reason] = self.revoked.get(reason, 0) + 1
+        self._c_revoked.labels(reason=reason).inc()
         if lease.cancel is not None:
             lease.cancel.set()
         if lease.on_revoke is not None:

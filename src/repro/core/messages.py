@@ -129,6 +129,12 @@ class TaskMessage:
     campaign_id: str | None = None
     stage: str | None = None
     dep_ids: list = dataclasses.field(default_factory=list)
+    # trace context (repro.obs): carried end-to-end so every control-plane
+    # hop can attach spans to the same logical task. The submitter stamps
+    # ``trace_id`` (defaults to the task_id) if unset; pipeline tasks also
+    # carry ``parent`` = campaign_id. Redeliveries share the dict, which is
+    # what links attempt spans into one chain.
+    trace: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -148,6 +154,7 @@ class TaskMessage:
             campaign_id=d.get("campaign_id"),
             stage=d.get("stage"),
             dep_ids=list(d.get("dep_ids", [])),
+            trace=dict(d.get("trace") or {}),
         )
 
     def retry(self) -> "TaskMessage":

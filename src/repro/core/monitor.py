@@ -32,6 +32,22 @@ from .submitter import Submitter
 
 log = logging.getLogger(__name__)
 
+# Every endpoint the REST API serves, as advertised on ``GET /`` and in 404
+# payloads. tests/test_obs.py lint-checks that the do_GET dispatch below
+# never grows a route that is missing from this index.
+ROUTES = (
+    "/",
+    "/tasks",
+    "/tasks/<id>",
+    "/campaigns",
+    "/campaigns/<id>",
+    "/summary",
+    "/broker",
+    "/autoscale",
+    "/metrics",
+    "/trace/<task_id>",
+)
+
 
 @dataclass
 class TaskEntry:
@@ -137,11 +153,52 @@ class MonitorAgent:
         self._compact_every_events: int | None = None
         self._last_compact = time.time()
         self._events_at_compact = 0
-        self.results_handled = 0
-        self.resubmissions = 0
-        self.revocations = 0
-        self.compactions = 0
-        self.legacy_forwards = 0
+        # counters live in the broker's obs registry (one labeled family);
+        # the bare attribute names below are read-only property views
+        events = broker.metrics.counter(
+            "ksa_monitor_events_total",
+            "Per-monitor ingestion/watchdog events",
+            labels=("monitor", "event"))
+        self._c = {e: events.labels(monitor=monitor_id, event=e)
+                   for e in ("results_handled", "resubmissions",
+                             "revocations", "compactions", "legacy_forwards")}
+        self._h_commit = broker.metrics.histogram(
+            "ksa_result_commit_seconds",
+            "Result publish -> monitor ingestion (commit) latency, "
+            "per resource class", labels=("cls",))
+
+    # -- counter views (registry-backed; names predate repro.obs) ----------
+
+    @property
+    def results_handled(self) -> int:
+        return self._c["results_handled"].value
+
+    @property
+    def resubmissions(self) -> int:
+        return self._c["resubmissions"].value
+
+    @property
+    def revocations(self) -> int:
+        return self._c["revocations"].value
+
+    @property
+    def compactions(self) -> int:
+        return self._c["compactions"].value
+
+    @property
+    def legacy_forwards(self) -> int:
+        return self._c["legacy_forwards"].value
+
+    def _task_class(self, task: TaskMessage | None) -> str:
+        if task is None:
+            return "flat"
+        classify = getattr(self.placement, "classify", None)
+        if classify is None:
+            return "flat"
+        try:
+            return classify(task)
+        except ValueError:
+            return "flat"
 
     # -- ingestion --------------------------------------------------------------
 
@@ -177,9 +234,14 @@ class MonitorAgent:
                                     "for the watchdog", task.task_id, topic)
                     else:
                         if target != topic:
+                            now = time.time()
+                            self.broker.spans.add(
+                                task.task_id, "route", now, now,
+                                attempt=task.attempt,
+                                monitor=self.monitor_id, target=target)
                             self._producer.send(target, task.to_dict(),
                                                 key=task.task_id)
-                            self.legacy_forwards += 1
+                            self._c["legacy_forwards"].inc()
             elif topic == self.topics["jobs"]:
                 upd = StatusUpdate.from_dict(value)
                 e = self._entry(upd.task_id)
@@ -202,8 +264,16 @@ class MonitorAgent:
                 e.result_attempt = res.attempt
                 e.status = TaskStatus.DONE.value
                 e.agent_id = res.agent_id
-                e.last_update = time.time()
-                self.results_handled += 1
+                now = time.time()
+                e.last_update = now
+                self._c["results_handled"].inc()
+                # commit span: result published -> accepted here (terminal)
+                self._h_commit.labels(cls=self._task_class(e.task)).observe(
+                    max(0.0, now - res.ts))
+                self.broker.spans.add(res.task_id, "commit", res.ts, now,
+                                      attempt=res.attempt,
+                                      agent=res.agent_id,
+                                      monitor=self.monitor_id)
             elif topic == self.topics["campaigns"]:
                 if value.get("kind") == "journal":
                     # a write-ahead journal event (repro.pipeline.state):
@@ -264,7 +334,7 @@ class MonitorAgent:
         if reason != "error" and \
                 self.broker.revoke_lease(e.task.task_id,
                                          RevokeReason.WATCHDOG):
-            self.revocations += 1
+            self._c["revocations"].inc()
             e.attempts_seen += 1
             # e.attempt is refreshed when the requeued record is ingested
             # (same attempt for a never-started lease, +1 for a running one)
@@ -280,7 +350,7 @@ class MonitorAgent:
         e.attempt = nxt.attempt + 1
         e.status = TaskStatus.SUBMITTED.value
         e.last_update = time.time()
-        self.resubmissions += 1
+        self._c["resubmissions"].inc()
         log.info("resubmitted %s (attempt %d, reason=%s)",
                  e.task.task_id, e.attempt, reason)
 
@@ -425,7 +495,7 @@ class MonitorAgent:
             return
         if result:
             with self._lock:
-                self.compactions += 1
+                self._c["compactions"].inc()
             log.info("monitor %s: scheduled compaction truncated %s records",
                      self.monitor_id, result.get("truncated", "?")
                      if isinstance(result, dict) else "?")
@@ -496,9 +566,33 @@ class MonitorAgent:
                 self.end_headers()
                 self.wfile.write(body)
 
+            def _send_text(self, code: int, body: str, content_type: str =
+                           "text/plain; version=0.0.4; charset=utf-8") -> None:
+                raw = body.encode()
+                self.send_response(code)
+                self.send_header("Content-Type", content_type)
+                self.send_header("Content-Length", str(len(raw)))
+                self.end_headers()
+                self.wfile.write(raw)
+
             def do_GET(self) -> None:  # noqa: N802 - http.server API
                 parts = [p for p in self.path.split("/") if p]
-                if parts == ["tasks"]:
+                if not parts:
+                    self._send(200, {"service": "ksa-monitor",
+                                     "monitor_id": mon.monitor_id,
+                                     "endpoints": list(ROUTES)})
+                elif parts == ["metrics"]:
+                    self._send_text(200, mon.broker.metrics.render())
+                elif len(parts) == 2 and parts[0] == "trace":
+                    spans = mon.broker.spans.trace(parts[1])
+                    if not spans:
+                        self._send(404, {"error": "no spans for task "
+                                                  "(unknown, evicted, or "
+                                                  "tracing disabled)"})
+                    else:
+                        self._send(200, {"task_id": parts[1],
+                                         "spans": spans})
+                elif parts == ["tasks"]:
                     with mon._lock:
                         self._send(200, {t: e.to_dict()
                                          for t, e in mon._table.items()})
@@ -528,11 +622,7 @@ class MonitorAgent:
                         self._send(200, payload)
                 else:
                     self._send(404, {"error": "unknown endpoint",
-                                     "endpoints": ["/tasks", "/tasks/<id>",
-                                                   "/campaigns",
-                                                   "/campaigns/<id>",
-                                                   "/summary", "/broker",
-                                                   "/autoscale"]})
+                                     "endpoints": list(ROUTES)})
 
         self._http = ThreadingHTTPServer(("127.0.0.1", port), Handler)
         t = threading.Thread(target=self._http.serve_forever,

@@ -16,6 +16,7 @@ layout.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Sequence
 
 from .broker import Broker, Producer
@@ -67,7 +68,13 @@ class Submitter:
         agent, which constructs stage tasks itself). The placement policy
         picks the class topic; the SUBMITTED status update carries the routed
         topic for observability."""
+        task.trace.setdefault("trace_id", task.task_id)
         topic = self.placement.route(self.prefix, task)
+        now = time.time()
+        self.broker.spans.add(task.task_id, "submit", now, now,
+                              attempt=task.attempt, topic=topic,
+                              trace_id=task.trace["trace_id"],
+                              campaign=task.campaign_id)
         self._producer.send(topic, task.to_dict(), key=task.task_id)
         self._producer.send(
             self.topics["jobs"],
@@ -83,8 +90,14 @@ class Submitter:
         at-least-once path used by the MonitorAgent watchdog). Routed through
         the same placement policy as the original submission."""
         nxt = task.retry()
-        self._producer.send(self.placement.route(self.prefix, nxt),
-                            nxt.to_dict(), key=nxt.task_id)
+        nxt.trace.setdefault("trace_id", nxt.task_id)
+        topic = self.placement.route(self.prefix, nxt)
+        now = time.time()
+        self.broker.spans.add(nxt.task_id, "submit", now, now,
+                              attempt=nxt.attempt, topic=topic,
+                              trace_id=nxt.trace["trace_id"],
+                              campaign=nxt.campaign_id, resubmitted=True)
+        self._producer.send(topic, nxt.to_dict(), key=nxt.task_id)
         self._producer.send(
             self.topics["jobs"],
             StatusUpdate(task_id=nxt.task_id,

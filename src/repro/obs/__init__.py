@@ -1,0 +1,40 @@
+"""repro.obs — observability substrate for the KSA control plane.
+
+Three pieces (ISSUE 6):
+
+- :class:`MetricsRegistry` — counters / gauges / histograms (with exact
+  p50/p95/p99 over a bounded sample ring) that the broker, lease table,
+  agents, monitor, pipeline agent and autoscale controller all register
+  into. Rendered as Prometheus text by the monitor's ``GET /metrics``.
+- :class:`SpanStore` — a bounded in-memory per-task span store on the
+  broker; the trace context rides in ``TaskMessage.trace`` and every
+  control-plane hop (submit → route → grant → claim → run → commit /
+  revoke → journal) records a span, linked across attempts. Surfaced via
+  ``GET /trace/<task_id>`` and :meth:`repro.cluster.KsaCluster.trace` /
+  ``campaign_report``.
+- :func:`sample_rss_mb` — kernel-accounted process RSS for the agents'
+  memory watchdog (self-reporting via ``report_mem`` stays as an
+  override).
+
+The whole layer is switchable: ``KsaCluster(obs=False)`` (or
+``Broker(obs=False)``) nulls out histograms and spans while keeping
+counters/gauges live, since the legacy ``stats()`` dictionaries are views
+over them. Overhead with ``obs=True`` is budgeted at ≤5% wall on a no-op
+DAG (``benchmarks/bench_obs.py`` → ``BENCH_obs.json``).
+"""
+from .metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry, topic_class)
+from .rss import sample_rss_mb
+from .trace import NullSpanStore, SpanStore
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_BUCKETS",
+    "topic_class",
+    "SpanStore",
+    "NullSpanStore",
+    "sample_rss_mb",
+]

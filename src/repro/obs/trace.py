@@ -1,0 +1,111 @@
+"""Bounded in-memory span store: per-task lifecycle traces.
+
+Every task carries a trace context in its :class:`~repro.core.messages.TaskMessage`
+(``trace={"trace_id": ..., "parent": <campaign_id>}``) and each control-plane
+hop records a *span* — a named, timestamped interval attached to the task id:
+
+    submit → route → grant → claim → run → commit
+                                   ↘ revoke → (journal) → submit(attempt+1) …
+
+Spans survive across attempts (retries, preemptions): every span carries the
+``attempt`` it belongs to, so ``trace(task_id)`` returns the full linked
+chain of all attempts of one logical task, and
+:meth:`repro.cluster.KsaCluster.campaign_report` can split a campaign's wall
+time into queue vs run vs retry per stage.
+
+The store is deliberately *lossy at the edges* — a fixed number of tasks
+(LRU-evicted) and a fixed number of spans per task — so tracing a week-long
+campaign cannot exhaust broker memory. Eviction counters are exposed via
+:meth:`stats` so silently dropped history is visible.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+__all__ = ["SpanStore", "NullSpanStore"]
+
+
+class SpanStore:
+    """Thread-safe bounded map ``task_id -> [span dict, ...]``.
+
+    A span is a plain dict (JSON/REST friendly) with at least ``name``,
+    ``task_id``, ``start``, ``end``, ``dur_s`` and ``seq`` (a store-wide
+    monotonic tiebreaker for same-timestamp ordering); extra keyword
+    arguments to :meth:`add` become span attributes (``attempt``,
+    ``holder``, ``reason``, ...).
+    """
+
+    def __init__(self, max_tasks: int = 4096,
+                 max_spans_per_task: int = 128) -> None:
+        self.max_tasks = max_tasks
+        self.max_spans_per_task = max_spans_per_task
+        self._lock = threading.Lock()
+        self._spans: OrderedDict = OrderedDict()
+        self._seq = 0
+        self.evicted_tasks = 0
+        self.dropped_spans = 0
+        self.enabled = True
+
+    def add(self, task_id: str, name: str, start: float,
+            end: float | None = None, **attrs) -> None:
+        if not task_id:
+            return
+        end = start if end is None else end
+        span = {"name": name, "task_id": task_id, "start": float(start),
+                "end": float(end), "dur_s": max(0.0, float(end) - float(start))}
+        span.update(attrs)
+        with self._lock:
+            self._seq += 1
+            span["seq"] = self._seq
+            spans = self._spans.get(task_id)
+            if spans is None:
+                spans = self._spans[task_id] = []
+                while len(self._spans) > self.max_tasks:
+                    self._spans.popitem(last=False)
+                    self.evicted_tasks += 1
+            if len(spans) >= self.max_spans_per_task:
+                self.dropped_spans += 1
+                return
+            spans.append(span)
+
+    def trace(self, task_id: str) -> list:
+        """All spans of a task (every attempt), ordered by start time then
+        insertion order. Returns copies; ``[]`` for unknown tasks."""
+        with self._lock:
+            spans = list(self._spans.get(task_id, ()))
+        return [dict(s) for s in
+                sorted(spans, key=lambda s: (s["start"], s["seq"]))]
+
+    def tasks(self) -> list:
+        with self._lock:
+            return list(self._spans)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"tasks": len(self._spans),
+                    "spans": sum(len(v) for v in self._spans.values()),
+                    "evicted_tasks": self.evicted_tasks,
+                    "dropped_spans": self.dropped_spans}
+
+
+class NullSpanStore:
+    """Drop-in stand-in when tracing is disabled (``obs=False``)."""
+
+    enabled = False
+    evicted_tasks = 0
+    dropped_spans = 0
+
+    def add(self, task_id: str, name: str, start: float,
+            end: float | None = None, **attrs) -> None:
+        pass
+
+    def trace(self, task_id: str) -> list:
+        return []
+
+    def tasks(self) -> list:
+        return []
+
+    def stats(self) -> dict:
+        return {"tasks": 0, "spans": 0, "evicted_tasks": 0,
+                "dropped_spans": 0}

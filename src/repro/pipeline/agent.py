@@ -166,12 +166,38 @@ class PipelineAgent:
             group_id=gid, member_id=f"{gid}-member")
         self._campaigns: dict[str, _CampaignRun] = {}
         self._task_index: dict[str, str] = {}  # task_id -> campaign_id
-        self.events_journaled = 0
-        self.preemptions = 0  # fair-share lease revocations issued (all runs)
+        # counters live in the broker's obs registry; the old attribute
+        # names (events_journaled / preemptions) are property views below
+        metrics = broker.metrics
+        self._c_journal = metrics.counter(
+            "ksa_journal_events_total",
+            "Write-ahead campaign journal events appended",
+            labels=("agent",)).labels(agent=self.agent_id)
+        self._c_preempt = metrics.counter(
+            "ksa_pipeline_preemptions_total",
+            "Fair-share preemptive lease revocations issued",
+            labels=("agent",)).labels(agent=self.agent_id)
+        self._h_fold = metrics.histogram(
+            "ksa_journal_fold_seconds",
+            "Journal -> CampaignState fold time (recovery / compaction)")
+        self._h_compact = metrics.histogram(
+            "ksa_journal_compact_seconds",
+            "Full journal compaction pass duration")
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._crashed = threading.Event()  # test hook: simulate kill -9
         self._thread: threading.Thread | None = None
+
+    # -- counter views (registry-backed; names predate repro.obs) ----------
+
+    @property
+    def events_journaled(self) -> int:
+        return self._c_journal.value
+
+    @property
+    def preemptions(self) -> int:
+        """Fair-share lease revocations issued (all runs)."""
+        return self._c_preempt.value
 
     # -- journal / fold plumbing ----------------------------------------------
 
@@ -182,11 +208,15 @@ class PipelineAgent:
         if self.journal:
             self._producer.send(self.topics["campaigns"], ev.to_dict(),
                                 key=run.campaign_id)
-            self.events_journaled += 1
+            self._c_journal.inc()
         run.state.apply(ev)
         tid = getattr(ev, "task_id", "")
         if tid:  # planned/skipped tasks become addressable for fencing
             self._task_index[tid] = run.campaign_id
+            self.broker.spans.add(tid, "journal", ev.ts, ev.ts,
+                                  event=type(ev).__name__, seq=ev.seq,
+                                  campaign=run.campaign_id,
+                                  agent=self.agent_id)
 
     def _submit_record(self, run: _CampaignRun, task_id: str) -> None:
         """Grant a lease (journaled) and put the task on ``-new``."""
@@ -214,6 +244,7 @@ class PipelineAgent:
             campaign_id=run.campaign_id,
             stage=rec.stage,
             dep_ids=list(rec.dep_ids),
+            trace={"trace_id": task_id, "parent": run.campaign_id},
         )
         self._submitter.submit_task(task)
 
@@ -474,7 +505,7 @@ class PipelineAgent:
             self._emit(run, LeaseRevoked(campaign_id=victim_cid,
                                          task_id=best,
                                          reason=RevokeReason.PREEMPT))
-            self.preemptions += 1
+            self._c_preempt.inc()
             log.info("campaign %s: preempted %s (%d/%d preemptions used)",
                      victim_cid, best, run.state.preemptions, cap)
             self._pump_all()
@@ -587,7 +618,9 @@ class PipelineAgent:
                     log.warning("no spec supplied for pipeline %r — skipping "
                                 "campaign %s", sub.pipeline, cid)
                     continue
+                t_fold = time.perf_counter()
                 state = CampaignState.fold(spec, cid, events)
+                self._h_fold.observe(time.perf_counter() - t_fold)
                 if state.done and not include_finished:
                     continue  # finished (possibly evicted) campaign
                 run = _CampaignRun(spec, cid, recovered=True)
@@ -685,6 +718,7 @@ class PipelineAgent:
             by_name = {s.name: s for s in specs}
         topic = self.topics["campaigns"]
         truncated = retained = 0
+        t_compact = time.perf_counter()
         with self._lock:
             # 1a. snapshot registered terminal campaigns (write-ahead).
             # Re-running compact as periodic maintenance must be churn-free:
@@ -716,14 +750,16 @@ class PipelineAgent:
                     spec = by_name.get(sub.pipeline) if sub else None
                     if spec is None:
                         continue  # unknown pipeline: keep its journal as-is
+                    t_fold = time.perf_counter()
                     state = CampaignState.fold(spec, cid, events)
+                    self._h_fold.observe(time.perf_counter() - t_fold)
                     if not state.done:
                         continue
                     ev = dataclasses.replace(snapshot_event(state),
                                              seq=state.seq + 1,
                                              ts=time.time())
                     self._producer.send(topic, ev.to_dict(), key=cid)
-                    self.events_journaled += 1
+                    self._c_journal.inc()
                     compacted[cid] = ev.seq
             # 2. per-partition prefix truncation up to the first keeper
             for p in range(self.broker.partitions_for(topic)):
@@ -739,6 +775,7 @@ class PipelineAgent:
                     truncated += self.broker.truncate_before(
                         topic, cut, partition=p)
             retained = len(self.broker.read_from(topic))
+        self._h_compact.observe(time.perf_counter() - t_compact)
         log.info("compacted %d campaign(s): %d records truncated, %d "
                  "retained", len(compacted), truncated, retained)
         return {"campaigns": sorted(compacted), "truncated": truncated,
@@ -788,6 +825,16 @@ class PipelineAgent:
             run = self._campaigns[campaign_id]
         run.completion.wait(timeout)
         return run.status
+
+    def stage_tasks(self, campaign_id: str) -> list:
+        """``[(stage_name, [task_id, ...]), ...]`` in topological order —
+        the per-stage task map :meth:`repro.cluster.KsaCluster.campaign_report`
+        joins against the broker span store."""
+        with self._lock:
+            run = self._campaigns[campaign_id]
+            by_stage = run.state.by_stage
+            return [(st.name, list(by_stage.get(st.name, ())))
+                    for st in run.spec.topological()]
 
     def results(self, campaign_id: str) -> dict[str, list]:
         """Per-stage results in task-creation order (completed tasks only)."""

@@ -9,9 +9,9 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_apps, bench_autoscale, bench_core, bench_obs,
-                   bench_pipeline, bench_preemption, bench_recovery,
-                   bench_routing)
+    from . import (bench_apps, bench_autoscale, bench_core, bench_federation,
+                   bench_obs, bench_pipeline, bench_preemption,
+                   bench_recovery, bench_routing)
 
     suites = [
         ("broker_throughput", bench_core.bench_broker_throughput),
@@ -30,6 +30,7 @@ def main() -> None:
         ("journal_overhead", bench_recovery.bench_journal_overhead),
         ("recovery_time", bench_recovery.bench_recovery_time),
         ("autoscale_burst", bench_autoscale.bench_autoscale_burst),
+        ("federation", bench_federation.bench_federation),
         ("preemption", bench_preemption.bench_preemption),
         ("obs_overhead", bench_obs.bench_obs_overhead),
         ("train_step", bench_apps.bench_train_step),

@@ -106,8 +106,40 @@ example). ``KsaCluster(obs=False)`` turns off histograms and spans
 always-on default costs ≤5% even on a no-op DAG
 (``benchmarks/bench_obs.py``).
 
+Federated mode (``--sites 2``)
+------------------------------
+With ``--sites 2`` the same campaign runs on a two-site
+:class:`~repro.federation.FederatedCluster`: a small home site (``edge``,
+where submissions enter) plus a bigger remote HPC pool behind a modeled
+WAN link. Each site keeps its own broker/pools/monitor; remote work flows
+only through bridge relays holding *home* leases, so exactly-once
+commits and ``KsaCluster``-style recovery carry over unchanged. The knobs
+this mode demonstrates:
+
+* **Site affinity** — ``knots_pipeline(localize_site="hpc")`` pins the
+  kernel-heavy localize stage to the remote site via ``Resources.site``
+  (flat tasks: ``fed.submit(..., site="hpc", input_mb=...)``;
+  ``input_mb`` weighs data locality in spill pricing and WAN transfer
+  time). Unpinned stages (screen, aggregate) stay site-free.
+* **Cost-aware spillover** — ``SpilloverConfig(horizon_s=...)`` spills a
+  class when its home backlog would outlive the horizon at the observed
+  drain rate; the cheapest reachable site wins
+  (``SiteRouter.spill_score``: ``Site.spinup_s`` cold-start +
+  ``Site.slot_cost`` slot-seconds + WAN transfer over ``Site.link``).
+  ``min_backlog``/``cooldown_s`` pace the bridges,
+  ``max_bridges_per_class`` caps them, ``drain_idle_s`` hands capacity
+  back.
+* **WAN-tolerant leases** — ``Site(tolerance=LeaseTolerance(slack_s=...,
+  rtt_factor=...))`` stretches only that site's lease deadlines, so a slow
+  link does not trip the home watchdog while partitions heal.
+
+The home monitor serves the whole federation: ``GET /sites`` (per-site
+brokers, leases, bridges, spillover decisions) and a ``GET /metrics``
+where every sample carries a ``site`` label.
+
 Run:  PYTHONPATH=src python examples/knot_campaign.py [--structures 128]
                                                       [--autoscale]
+                                                      [--sites 2]
 """
 import argparse
 import json
@@ -142,6 +174,68 @@ def flat_baseline(broker: Broker, structures: int, batch_size: int,
     return {"knotted": sorted(knotted), "cores": cores, "elapsed_s": dt}
 
 
+def federated_main(args) -> None:
+    """--sites 2: the campaign on an edge + HPC federation (see the
+    'Federated mode' docstring section for the knobs shown here)."""
+    from repro.federation import (FederatedCluster, Site, SpilloverConfig,
+                                  WanLink)
+    sites = [
+        Site("edge", workers=2, worker_slots=1,
+             cluster_kw={"pipeline_task_timeout_s": 20.0,
+                         "partitioner": "balanced",
+                         "default_partitions": 8}),
+        Site("hpc", workers=2, worker_slots=2, spinup_s=0.5, slot_cost=1.5,
+             link=WanLink(latency_s=0.01, bandwidth_mbps=500.0),
+             cluster_kw={"partitioner": "balanced",
+                         "default_partitions": 8}),
+    ]
+    spill = SpilloverConfig(classes=("cpu",), horizon_s=0.3, min_backlog=2,
+                            interval_s=0.05, cooldown_s=0.2,
+                            drain_idle_s=0.5, bridge_slots=2,
+                            max_bridges_per_class=2)
+    with FederatedCluster(sites, prefix="alphaknot", http=True,
+                          spillover=spill) as fed:
+        spec = knots.knots_pipeline(args.batch_size, n_points=args.n_points,
+                                    task_timeout_s=20.0,
+                                    localize_site="hpc")
+        ids = list(range(args.structures))
+        print(f"federated campaign: {len(ids)} structures, home=edge "
+              f"(2x1 slots), remote=hpc (2x2 slots, 10ms WAN); localize "
+              f"pinned to hpc, screen spills on backlog")
+        res = fed.run_campaign(spec, ids, timeout_s=900.0)
+        agg = res.final
+        print(f"\nprocessed {agg['processed']} structures in "
+              f"{res.elapsed_s:.1f}s -> state {res.status.state}")
+        print(f"knotted: {len(agg['knotted'])}")
+
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{fed.http_port}/sites") as r:
+            payload = json.loads(r.read())
+        for name, s in payload["sites"].items():
+            roles = [b["role"] for b in s["bridges"]]
+            print(f"site {name}{' (home)' if s['home'] else ''}: "
+                  f"leases completed {s['leases']['completed']}, "
+                  f"bridges {roles or '[]'}")
+        for d in payload.get("spillover", {}).get("decisions", [])[-4:]:
+            print(f"  spillover: {d['action']} {d['cls']} -> {d['site']} "
+                  f"({d['reason']})")
+        relayed = sum(b.tasks_completed for b in fed.bridges())
+        site_lines = sum(1 for ln in fed.metrics_text().splitlines()
+                         if 'site="hpc"' in ln)
+        print(f"{relayed} tasks relayed over the WAN; federated /metrics "
+              f"has {site_lines} hpc-labelled samples")
+
+        if not args.skip_baseline:
+            base = flat_baseline(fed.home.broker, args.structures,
+                                 args.batch_size, args.n_points)
+            match = base["knotted"] == agg["knotted"]
+            print(f"flat baseline: {len(base['knotted'])} knotted — counts "
+                  f"{'MATCH' if match else 'MISMATCH'}")
+            assert match, (base["knotted"], agg["knotted"])
+            assert set(base["cores"]) == set(agg["cores"])
+    print("OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--structures", type=int, default=96)
@@ -152,7 +246,15 @@ def main() -> None:
                     help="elastic cpu/gpu pools (repro.autoscale) instead "
                          "of the static cluster+workstation layout; the "
                          "localize stage then runs on the GPU class")
+    ap.add_argument("--sites", type=int, default=1, choices=(1, 2),
+                    help="2 = run the campaign on a two-site federation "
+                         "(repro.federation): localize pinned to the "
+                         "remote HPC site, screen spilling on backlog")
     args = ap.parse_args()
+
+    if args.sites == 2:
+        federated_main(args)
+        return
 
     if args.autoscale:
         # -- elastic pools: the autoscaler grows/shrinks on class backlog --

@@ -357,7 +357,8 @@ def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
                    max_attempts: int = 4,
                    task_timeout_s: float | None = None,
                    skip_empty: bool = True,
-                   gpu_localize: bool = False):
+                   gpu_localize: bool = False,
+                   localize_site: str = ""):
     """The AlphaKnot campaign as a declarative 3-stage DAG:
     screen (fan-out) → localize (map over survivors) → aggregate (join).
 
@@ -370,7 +371,12 @@ def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
     barrier task. With ``skip_empty`` (default) localize tasks are *skipped*
     for screen batches with zero survivors — the ROADMAP's conditional-edge
     early exit; the campaign still completes, and the aggregate sees one
-    result per non-empty batch."""
+    result per non-empty batch.
+
+    Under a :class:`~repro.federation.FederatedCluster`, ``localize_site``
+    pins the kernel-heavy stage to a named federation site
+    (``Resources.site`` affinity — e.g. the big remote HPC pool) while
+    screen and aggregate stay site-free and run home or spill."""
     from repro.pipeline import PipelineSpec, RetryPolicy, Stage
     from repro.core import Resources
 
@@ -378,6 +384,7 @@ def knots_pipeline(batch_size: int = 12, *, n_points: int = 96,
     common = {"n_points": n_points, "use_pallas": use_pallas}
     localize_res = (Resources(cpus=1, gpus=1) if gpu_localize
                     else Resources(cpus=2))
+    localize_res.site = localize_site
     return PipelineSpec("alphaknot", [
         Stage("screen", "knot_screen", fan_out=batch_size, params=common,
               resources=Resources(cpus=1), max_in_flight=max_in_flight,

@@ -37,8 +37,9 @@ Usage through the facade::
 from .controller import AutoscaleController
 from .policy import (AutoscaleConfig, AutoscaleError, PoolSignal, PoolSpec,
                      ScalingPolicy, TargetBacklogPolicy)
+from .rate import RateTracker
 
 __all__ = [
     "AutoscaleConfig", "AutoscaleController", "AutoscaleError", "PoolSignal",
-    "PoolSpec", "ScalingPolicy", "TargetBacklogPolicy",
+    "PoolSpec", "RateTracker", "ScalingPolicy", "TargetBacklogPolicy",
 ]

@@ -43,6 +43,7 @@ from repro.core.agents import AgentBase
 from repro.core.scheduling import class_topic
 
 from .policy import AutoscaleConfig, AutoscaleError, PoolSignal, PoolSpec
+from .rate import RateTracker
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.cluster import KsaCluster
@@ -55,7 +56,7 @@ _LONG_AGO = -1e12  # "never": makes every since_* duration effectively inf
 class _PoolState:
     """Mutable runtime state of one elastic pool (controller-private)."""
 
-    def __init__(self, spec: PoolSpec, history: int):
+    def __init__(self, spec: PoolSpec, history: int, rate_window_s: float):
         self.spec = spec
         self.agents: list[AgentBase] = []    # serving members
         self.draining: list[AgentBase] = []  # leaving members (finish work)
@@ -65,8 +66,9 @@ class _PoolState:
         # (ts, backlog, agents, in_flight) ring — the /autoscale history
         self.history: deque[tuple[float, int, int, int]] = \
             deque(maxlen=history)
-        # (ts, consumed) samples for the drain-rate estimate
-        self.consumed: deque[tuple[float, int]] = deque(maxlen=history)
+        # consumed-counter samples for the drain-rate estimate (shared
+        # primitive with the federation spillover controller)
+        self.consumed = RateTracker(rate_window_s, history)
         self.scale_ups = 0
         self.scale_downs = 0
         # when the class backlog last went 0 -> nonzero; the age of this
@@ -97,7 +99,8 @@ class AutoscaleController:
                         f"the cluster's placement policy (known: "
                         f"{sorted(known)}); declare it via "
                         f"ResourceClassPolicy(extra_classes=...)")
-        self._pools = {p.cls: _PoolState(p, config.history)
+        self._pools = {p.cls: _PoolState(p, config.history,
+                                         config.rate_window_s)
                        for p in config.pools}
         self._decisions: deque[dict] = deque(maxlen=128)
         self._group = f"{cluster.prefix}-agents"
@@ -173,7 +176,7 @@ class AutoscaleController:
                     pool.pressure_since = None
                 elif pool.pressure_since is None:
                     pool.pressure_since = now
-                pool.consumed.append((now, stats["consumed"]))
+                pool.consumed.sample(now, stats["consumed"])
                 in_flight = 0
                 for a in pool.agents:
                     s = a.stats()
@@ -185,7 +188,7 @@ class AutoscaleController:
                 sig = PoolSignal(
                     cls=cls, backlog=backlog, in_flight=in_flight,
                     agents=len(pool.agents), slots=pool.spec.slots,
-                    drain_rate=self._drain_rate(pool, now),
+                    drain_rate=pool.consumed.rate(now),
                     idle_for_s=(0.0 if pool.idle_since is None
                                 else now - pool.idle_since),
                     since_scale_up_s=now - pool.last_scale_up,
@@ -211,20 +214,6 @@ class AutoscaleController:
                 self._g_agents.labels(pool=cls).set(len(pool.agents))
                 self._g_backlog.labels(pool=cls).set(backlog)
         self._h_tick.observe(time.perf_counter() - t_tick)
-
-    def _drain_rate(self, pool: _PoolState, now: float) -> float:
-        if not pool.consumed:
-            return 0.0
-        window = self.config.rate_window_s
-        old = None
-        for ts, consumed in pool.consumed:
-            if now - ts <= window:
-                old = (ts, consumed)
-                break
-        new = pool.consumed[-1]
-        if old is None or new[0] <= old[0]:
-            return 0.0
-        return (new[1] - old[1]) / (new[0] - old[0])
 
     def _reap(self, pool: _PoolState) -> None:
         """Deregister drained (or crashed) members from the facade."""
@@ -309,7 +298,7 @@ class AutoscaleController:
                     "agent_ids": [a.agent_id for a in pool.agents],
                     "backlog": hist[-1][1] if hist else 0,
                     "in_flight": hist[-1][3] if hist else 0,
-                    "drain_rate": self._drain_rate(pool, time.time()),
+                    "drain_rate": pool.consumed.rate(time.time()),
                     "scale_ups": pool.scale_ups,
                     "scale_downs": pool.scale_downs,
                     "history": [[round(ts, 3), b, a, f]

@@ -88,10 +88,15 @@ class KsaCluster:
                  poll_interval_s: float = 0.01,
                  session_timeout_s: float | None = None,
                  default_partitions: int = 4,
+                 partitioner: str = "hash",
                  obs: bool = True,
+                 site: str = "",
                  agent_kw: Mapping[str, Any] | None = None,
                  monitor_kw: Mapping[str, Any] | None = None):
         self.prefix = prefix
+        # federation: which site this control plane is ("" = standalone);
+        # tags the owned broker so its stats and leases carry the site
+        self.site = site
         self.placement = placement or ResourceClassPolicy()
         self._lease = lease
         self._spec = dict(workers=workers, worker_slots=worker_slots,
@@ -111,13 +116,14 @@ class KsaCluster:
         self.compact_interval_s = compact_interval_s
         self.compact_every_events = compact_every_events
         self.poll_interval_s = poll_interval_s
+        self.partitioner = partitioner
         self._agent_kw = dict(agent_kw or {})
         self._monitor_kw = dict(monitor_kw or {})
 
         self._owns_broker = broker is None
         if broker is None:
             broker_kw: dict[str, Any] = {"default_partitions": default_partitions,
-                                         "obs": obs}
+                                         "obs": obs, "site": site}
             if session_timeout_s is not None:
                 broker_kw["session_timeout_s"] = session_timeout_s
             broker = Broker(**broker_kw)
@@ -151,7 +157,8 @@ class KsaCluster:
             self._started = True
             try:
                 self.submitter = Submitter(self.broker, self.prefix,
-                                           placement=self.placement)
+                                           placement=self.placement,
+                                           partitioner=self.partitioner)
                 if self._monitor_enabled:
                     kw = dict(task_timeout_s=self.task_timeout_s,
                               max_attempts=self.max_attempts,

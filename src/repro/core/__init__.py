@@ -31,7 +31,7 @@ from .broker import (Broker, BrokerError, Consumer, FencedError, Producer,
                      Record, TopicPartition)
 from .computing import (ClusterComputing, TaskCancelled, register_script,
                         registered_scripts, resolve_script)
-from .lease import Lease, RevokeReason
+from .lease import Lease, LeaseTolerance, RevokeReason
 from .scheduling import (FairShare, FifoLease, LeasePolicy, PlacementPolicy,
                          ResourceClassPolicy, ResourceProfile,
                          SingleTopicPolicy, class_topic)
@@ -47,7 +47,8 @@ __all__ = [
     "AgentBase", "Broker", "BrokerError", "CampaignEvent", "ClusterAgent",
     "ClusterComputing",
     "Consumer", "ErrorMessage", "FairShare", "FencedError", "FifoLease",
-    "Lease", "LeasePolicy", "MonitorAgent", "PlacementPolicy", "Producer",
+    "Lease", "LeasePolicy", "LeaseTolerance", "MonitorAgent",
+    "PlacementPolicy", "Producer",
     "Record", "ResourceClassPolicy", "ResourceProfile", "Resources",
     "RevokeReason",
     "ResultMessage", "SimSlurm", "SingleTopicPolicy", "StatusUpdate",

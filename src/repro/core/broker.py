@@ -249,7 +249,8 @@ class Broker:
                  retention_records: int | None = None,
                  session_timeout_s: float = 10.0,
                  fsync: bool = False,
-                 obs: bool = True):
+                 obs: bool = True,
+                 site: str = ""):
         self._lock = threading.RLock()
         self._data_arrived = threading.Condition(self._lock)
         self._topics: dict[str, list[_PartitionLog]] = {}
@@ -283,6 +284,13 @@ class Broker:
             lambda: self.lease_stats()["active"],
             "Live (GRANTED/RUNNING) leases")
         self._lease_table = LeaseTable(metrics=self.metrics)
+        # federation: which site this broker belongs to ("" = standalone),
+        # and which consumer-group members hold their leases from a remote
+        # site — registered by federation bridges so every lease they are
+        # granted is stamped with the holder's site and WAN-tolerant
+        # heartbeat deadline (consulted by the watchdogs before revoking)
+        self.site = site
+        self._holder_sites: dict[str, tuple[str, float | None]] = {}
         self._closed = False
         self._offsets_path = (os.path.join(log_dir, "_offsets.log")
                               if log_dir else None)
@@ -340,6 +348,17 @@ class Broker:
             ]
 
     # -- produce / fetch ----------------------------------------------------
+
+    def least_loaded_partition(self, topic: str) -> int:
+        """The partition with the fewest records ever produced — the same
+        choice unkeyed :meth:`produce` makes. Lets a submitter balance
+        *keyed* records (task records must stay keyed for lease granting)
+        across partitions instead of hashing, trading per-key placement
+        stability for an even per-member share."""
+        with self._lock:
+            self._ensure_topic(topic)
+            logs = self._topics[topic]
+            return min(range(len(logs)), key=lambda p: logs[p].end_offset())
 
     def produce(self, topic: str, value: Any, key: str | None = None,
                 partition: int | None = None) -> Record:
@@ -634,9 +653,12 @@ class Broker:
                 # the handle every stop-path revokes through
                 if rec.key and isinstance(rec.value, dict) \
                         and rec.value.get("task_id") == rec.key:
+                    h_site, h_deadline = self._holder_sites.get(
+                        member_id, (self.site, None))
                     lease = self._lease_table.grant(
                         rec.key, member_id, rec.topic,
-                        int(rec.value.get("attempt", 0)), dict(rec.value))
+                        int(rec.value.get("attempt", 0)), dict(rec.value),
+                        site=h_site, deadline_s=h_deadline)
                     if lease is not None:
                         # the grant span's duration IS the queue wait:
                         # record append -> this lease
@@ -721,6 +743,24 @@ class Broker:
                 self._lease_table.count_requeued()
                 self.produce(lease.topic, value, key=task_id)
             return True
+
+    def register_holder_site(self, member_id: str, site: str,
+                             deadline_s: float | None = None) -> None:
+        """Tag a consumer-group member as executing on a (remote) federation
+        site: every lease granted to ``member_id`` from now on is stamped
+        with ``site`` and the WAN-tolerant heartbeat ``deadline_s`` (see
+        :class:`~repro.core.lease.LeaseTolerance`), which the MonitorAgent
+        and PipelineAgent watchdogs honour instead of their uniform
+        deadline. Idempotent; re-registering updates the deadline."""
+        with self._lock:
+            self._holder_sites[member_id] = (site, deadline_s)
+
+    def unregister_holder_site(self, member_id: str) -> None:
+        """Drop a member's site tag (bridge drained/stopped). Leases already
+        granted keep their stamp — their holder really is remote until they
+        reach a terminal state."""
+        with self._lock:
+            self._holder_sites.pop(member_id, None)
 
     def forget_lease(self, task_id: str, holder: str) -> None:
         """Drop the holder's lease without a verdict (misroute bounce: the
@@ -834,6 +874,7 @@ class Broker:
                 return out
 
             return {
+                "site": self.site,
                 "topics": {
                     t: {str(p): logs[p].end_offset() for p in range(len(logs))}
                     for t, logs in self._topics.items()

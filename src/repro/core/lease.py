@@ -82,6 +82,37 @@ _REVOKED_TTL_S = 120.0
 _DONE_CAP = 4096
 
 
+@dataclass(frozen=True)
+class LeaseTolerance:
+    """WAN-tolerance policy for leases held across a slow link.
+
+    A federated site's bridge holds home-broker leases for tasks executing
+    remotely; its heartbeats cross a WAN link whose round-trip can dwarf the
+    uniform watchdog deadline tuned for local workers. Instead of loosening
+    every deadline to the slowest link (masking genuinely hung local tasks),
+    holders registered with a tolerance get a *per-site* heartbeat deadline
+    stamped onto each lease they are granted::
+
+        deadline_s = base_timeout_s * rtt_factor + slack_s
+
+    where ``base_timeout_s`` is the watchdog's configured deadline. The
+    MonitorAgent and PipelineAgent watchdogs consult the stamped deadline
+    before revoking, so a healthy remote lease behind a slow-but-alive link
+    survives, while cross-site revocation still fences exactly-once
+    execution when the lease really is taken back."""
+
+    slack_s: float = 0.0     # absolute extra headroom (e.g. 2 * link RTT)
+    rtt_factor: float = 1.0  # multiplier on the watchdog's base deadline
+
+    def deadline(self, base_timeout_s: float | None) -> float | None:
+        """Per-site heartbeat deadline for a given base watchdog timeout.
+        None base (watchdog disabled) stays None unless slack alone is
+        meaningful — a pure-slack tolerance still bounds the lease."""
+        if base_timeout_s is None:
+            return self.slack_s if self.slack_s > 0 else None
+        return base_timeout_s * self.rtt_factor + self.slack_s
+
+
 @dataclass
 class Lease:
     """One attempt of one task held by one agent (broker-internal record).
@@ -104,6 +135,8 @@ class Lease:
     reason: str | None = None
     cancel: threading.Event | None = None
     on_revoke: Callable[[], None] | None = None
+    site: str = ""                   # holder's site ("" = broker-local)
+    deadline_s: float | None = None  # per-site heartbeat deadline, if any
 
     @property
     def live(self) -> bool:
@@ -123,6 +156,8 @@ class Lease:
             "revoked_at": self.revoked_at,
             "reason": self.reason,
             "campaign_id": self.value.get("campaign_id"),
+            "site": self.site,
+            "deadline_s": self.deadline_s,
         }
 
 
@@ -198,19 +233,23 @@ class LeaseTable:
     # -- lifecycle ---------------------------------------------------------
 
     def grant(self, task_id: str, holder: str, topic: str, attempt: int,
-              value: dict) -> Lease | None:
+              value: dict, *, site: str = "",
+              deadline_s: float | None = None) -> Lease | None:
         """Register a fresh GRANTED lease (replaces any stale entry for the
         task — a requeued task's new lease supersedes the fenced old one).
         A record whose attempt is *behind* a live lease is the stale
         sibling of a requeue race: it must not clobber the newer lease
-        (its claim will be refused instead)."""
+        (its claim will be refused instead). ``site``/``deadline_s`` stamp
+        the holder's federation site and WAN-tolerant heartbeat deadline
+        (see :class:`LeaseTolerance`) onto the lease for the watchdogs."""
         cur = self._leases.get(task_id)
         if cur is not None and cur.live and cur.attempt > attempt:
             self._c_stale.inc()
             return None
         self._seq += 1
         lease = Lease(task_id=task_id, holder=holder, topic=topic,
-                      attempt=attempt, value=value, seq=self._seq)
+                      attempt=attempt, value=value, seq=self._seq,
+                      site=site, deadline_s=deadline_s)
         self._leases[task_id] = lease
         self._c_granted.inc()
         return lease

@@ -77,13 +77,22 @@ class Resources:
     tolerating the ``serve`` taint may be routed onto the serve pool) — see
     :mod:`repro.core.scheduling`. ``mem_mb`` is enforced at lease time:
     workers admit tasks only while the sum of running requests fits their
-    profile, and SimSlurm packs it per node alongside cpus/gpus."""
+    profile, and SimSlurm packs it per node alongside cpus/gpus.
+
+    ``site`` pins the task to a named federation site (see
+    :mod:`repro.federation`): a :class:`~repro.federation.SiteRouter` routes
+    it to that site's bridge class instead of the generic cpu/gpu classes.
+    ``input_mb`` is the task's input payload weight — the data-locality
+    term a federated router charges against a WAN link's bandwidth when
+    scoring a remote placement. Both default to the non-federated no-ops."""
 
     cpus: int = 1
     gpus: int = 0
     mem_mb: int = 1024
     labels: tuple = ()
     tolerations: tuple = ()
+    site: str = ""
+    input_mb: float = 0.0
 
     def __post_init__(self) -> None:
         self.labels = tuple(self.labels)
@@ -101,7 +110,7 @@ class Resources:
             return cls()
         return cls(**{k: d[k]
                       for k in ("cpus", "gpus", "mem_mb", "labels",
-                                "tolerations")
+                                "tolerations", "site", "input_mb")
                       if k in d})
 
 

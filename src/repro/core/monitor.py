@@ -44,6 +44,7 @@ ROUTES = (
     "/summary",
     "/broker",
     "/autoscale",
+    "/sites",
     "/metrics",
     "/trace/<task_id>",
 )
@@ -145,6 +146,9 @@ class MonitorAgent:
         # /autoscale payload — per-pool membership, backlog history, and
         # the scaling decision log.
         self._autoscale_source: Any = None
+        # federation attachments: /sites payload + federated /metrics text
+        self._federation_source: Any = None
+        self._federation_metrics: Any = None
         # scheduled journal compaction (attach_compaction): a periodic /
         # event-count trigger that invokes the pipeline's compact() from
         # this loop so operators never have to remember the maintenance.
@@ -376,9 +380,30 @@ class MonitorAgent:
                     # never happened — _maybe_resubmit's newer-lease guard
                     # keeps this from duplicating a healthy requeue.
                     stale_for = now - e.last_update
-                    if e.status == TaskStatus.TIMEOUT.value or \
-                            stale_for > self.task_timeout_s:
+                    if e.status == TaskStatus.TIMEOUT.value:
                         self._maybe_resubmit(e, reason="timeout")
+                    elif stale_for > self.task_timeout_s and \
+                            stale_for > self._deadline_for(e.task.task_id):
+                        self._maybe_resubmit(e, reason="timeout")
+
+    def _deadline_for(self, task_id: str) -> float:
+        """The staleness deadline for one task: the uniform
+        ``task_timeout_s`` unless the task's lease is stamped with a
+        per-site WAN-tolerant deadline (a federation bridge holds it across
+        a slow link — see :class:`~repro.core.lease.LeaseTolerance`), in
+        which case the stamped deadline wins. Never *tighter* than the
+        uniform one: a remote site with a fast link still gets the
+        configured grace. Only consulted for tasks the uniform check has
+        already flagged stale, so the lease lookup is off the common
+        path."""
+        base = self.task_timeout_s
+        lease = self.broker.lease_view(task_id)
+        if lease is None:
+            return base
+        deadline = lease.get("deadline_s")
+        if deadline is None:
+            return base
+        return max(base, deadline)
 
     # -- main loop -----------------------------------------------------------------
 
@@ -446,6 +471,32 @@ class MonitorAgent:
         ``GET /autoscale`` (and detachable with ``None``)."""
         with self._lock:
             self._autoscale_source = source
+
+    def attach_federation(self, sites: Any, metrics: Any = None) -> None:
+        """Register a :class:`~repro.federation.FederatedCluster`'s status
+        callables: ``sites()`` → the ``GET /sites`` payload (per-site
+        queues, leases, links, spillover state), ``metrics()`` → the
+        federated Prometheus exposition (every per-site registry merged
+        with a ``site`` label) which then replaces the local registry on
+        ``GET /metrics``. Detach with ``attach_federation(None)``."""
+        with self._lock:
+            self._federation_source = sites
+            self._federation_metrics = metrics
+
+    def sites(self) -> dict | None:
+        with self._lock:
+            source = self._federation_source
+        return None if source is None else source()
+
+    def metrics_text(self) -> str:
+        """The ``/metrics`` exposition: federated (site-labelled, merged
+        across sites) when a federation is attached, the local registry's
+        render otherwise."""
+        with self._lock:
+            fed = self._federation_metrics
+        if fed is not None:
+            return fed()
+        return self.broker.metrics.render()
 
     # -- scheduled journal compaction (ROADMAP open item) -----------------------
 
@@ -582,7 +633,7 @@ class MonitorAgent:
                                      "monitor_id": mon.monitor_id,
                                      "endpoints": list(ROUTES)})
                 elif parts == ["metrics"]:
-                    self._send_text(200, mon.broker.metrics.render())
+                    self._send_text(200, mon.metrics_text())
                 elif len(parts) == 2 and parts[0] == "trace":
                     spans = mon.broker.spans.trace(parts[1])
                     if not spans:
@@ -618,6 +669,12 @@ class MonitorAgent:
                     payload = mon.autoscale()
                     if payload is None:
                         self._send(404, {"error": "no autoscaler attached"})
+                    else:
+                        self._send(200, payload)
+                elif parts == ["sites"]:
+                    payload = mon.sites()
+                    if payload is None:
+                        self._send(404, {"error": "no federation attached"})
                     else:
                         self._send(200, payload)
                 else:

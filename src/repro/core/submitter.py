@@ -26,12 +26,23 @@ from .scheduling import PlacementPolicy, ResourceClassPolicy
 
 
 class Submitter:
+    """``partitioner`` picks how task records map to partitions of their
+    class topic: ``"hash"`` (default, kafka-like — stable per task id) or
+    ``"balanced"`` (least-loaded partition — evens out the per-member share
+    under the sticky group assignor, which sets a campaign's makespan).
+    Status updates always hash so each task's timeline stays ordered."""
+
     def __init__(self, broker: Broker, prefix: str = "ksa", *,
-                 placement: PlacementPolicy | None = None):
+                 placement: PlacementPolicy | None = None,
+                 partitioner: str = "hash"):
+        if partitioner not in ("hash", "balanced"):
+            raise ValueError(f"unknown partitioner {partitioner!r} "
+                             f"(expected 'hash' or 'balanced')")
         self.broker = broker
         self.prefix = prefix
         self.topics = topic_names(prefix)
         self.placement = placement or ResourceClassPolicy()
+        self.partitioner = partitioner
         self._producer = Producer(broker)
         for t in self.topics.values():
             broker.create_topic(t)
@@ -75,7 +86,8 @@ class Submitter:
                               attempt=task.attempt, topic=topic,
                               trace_id=task.trace["trace_id"],
                               campaign=task.campaign_id)
-        self._producer.send(topic, task.to_dict(), key=task.task_id)
+        self._producer.send(topic, task.to_dict(), key=task.task_id,
+                            partition=self._task_partition(topic))
         self._producer.send(
             self.topics["jobs"],
             StatusUpdate(task_id=task.task_id,
@@ -84,6 +96,11 @@ class Submitter:
                          info={"topic": topic}).to_dict(),
             key=task.task_id)
         return task.task_id
+
+    def _task_partition(self, topic: str) -> int | None:
+        if self.partitioner != "balanced":
+            return None  # keyed hash, the broker's default
+        return self.broker.least_loaded_partition(topic)
 
     def resubmit(self, task: TaskMessage) -> str:
         """Redeliver a task with a bumped attempt (straggler mitigation /
@@ -97,7 +114,8 @@ class Submitter:
                               attempt=nxt.attempt, topic=topic,
                               trace_id=nxt.trace["trace_id"],
                               campaign=nxt.campaign_id, resubmitted=True)
-        self._producer.send(topic, nxt.to_dict(), key=nxt.task_id)
+        self._producer.send(topic, nxt.to_dict(), key=nxt.task_id,
+                            partition=self._task_partition(topic))
         self._producer.send(
             self.topics["jobs"],
             StatusUpdate(task_id=nxt.task_id,

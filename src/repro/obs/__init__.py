@@ -23,7 +23,8 @@ over them. Overhead with ``obs=True`` is budgeted at ≤5% wall on a no-op
 DAG (``benchmarks/bench_obs.py`` → ``BENCH_obs.json``).
 """
 from .metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
-                      MetricsRegistry, topic_class)
+                      MetricsRegistry, inject_label, merge_renders,
+                      topic_class)
 from .rss import sample_rss_mb
 from .trace import NullSpanStore, SpanStore
 
@@ -33,6 +34,8 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "DEFAULT_BUCKETS",
+    "inject_label",
+    "merge_renders",
     "topic_class",
     "SpanStore",
     "NullSpanStore",

@@ -48,6 +48,8 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "DEFAULT_BUCKETS",
+    "inject_label",
+    "merge_renders",
     "topic_class",
 ]
 
@@ -280,6 +282,58 @@ def _series(name: str, label_names: tuple, label_values: tuple,
         pairs += [f'{n}="{v}"' for n, v in extra.items()]
     labels = ("{" + ",".join(pairs) + "}") if pairs else ""
     return f"{name}{suffix}{labels} {_fmt(value)}"
+
+
+def inject_label(text: str, **labels: str) -> str:
+    """Rewrite a Prometheus exposition so every sample line carries the
+    given label(s) — the federation aggregator's tool for merging N
+    per-site registries into one ``/metrics`` page with a ``site`` label
+    (the Prometheus federation convention). ``# HELP`` / ``# TYPE`` lines
+    and blanks pass through untouched; existing labels are preserved and
+    the injected pairs are appended (or prepended into ``name value``
+    lines). Injected values are escaped per the exposition format."""
+    def esc(v: str) -> str:
+        return (str(v).replace("\\", r"\\").replace('"', r'\"')
+                .replace("\n", r"\n"))
+
+    pairs = ",".join(f'{k}="{esc(v)}"' for k, v in labels.items())
+    if not pairs:
+        return text
+    out = []
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            out.append(line)
+            continue
+        # sample lines are `name{labels} value` or `name value`
+        head, _, value = line.rpartition(" ")
+        if not head:
+            out.append(line)
+            continue
+        if head.endswith("}"):
+            base = head[:-1]
+            sep = "" if base.endswith("{") else ","
+            out.append(f"{base}{sep}{pairs}}} {value}")
+        else:
+            out.append(f"{head}{{{pairs}}} {value}")
+    return "\n".join(out) + ("\n" if text.endswith("\n") else "")
+
+
+def merge_renders(renders: Mapping[str, str], label: str = "site") -> str:
+    """Concatenate per-site :meth:`MetricsRegistry.render` outputs into one
+    exposition: every sample gains ``{label}="<site>"`` and duplicate
+    ``# HELP`` / ``# TYPE`` headers (the same family exists on every site)
+    are emitted once, on first sight."""
+    lines: list = []
+    seen_meta: set = set()
+    for site, text in renders.items():
+        tagged = inject_label(text, **{label: site})
+        for ln in tagged.splitlines():
+            if ln.startswith("#"):
+                if ln in seen_meta:
+                    continue
+                seen_meta.add(ln)
+            lines.append(ln)
+    return "\n".join(lines) + "\n"
 
 
 class MetricsRegistry:

@@ -449,12 +449,28 @@ class PipelineAgent:
                             # the watchdog
                             continue
                         last = run.last_submit.get(tid, run.created_at)
-                        if now - last > timeout:
+                        if now - last > timeout and \
+                                now - last > self._lease_deadline(tid,
+                                                                  timeout):
                             self._retry_or_fail(
                                 run, tid, cause="timeout",
                                 reason=f"no result after {timeout:.1f}s")
                         if run.state.done:
                             return
+
+    def _lease_deadline(self, task_id: str, base_timeout_s: float) -> float:
+        """The effective no-result deadline for one task: the stage timeout,
+        stretched to the lease's WAN-tolerant ``deadline_s`` when the task
+        is held across a federation site (:class:`~repro.core.lease.
+        LeaseTolerance` stamps it at grant) — a stage relayed over a slow
+        link is not a straggler just because the uniform timeout says so."""
+        lease = self.broker.lease_view(task_id)
+        if lease is None:
+            return base_timeout_s
+        deadline = lease.get("deadline_s")
+        if deadline is None:
+            return base_timeout_s
+        return max(base_timeout_s, deadline)
 
     # -- preemptive fair share ---------------------------------------------------
 

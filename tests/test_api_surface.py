@@ -1,0 +1,67 @@
+"""API-surface lints: the federated metrics contract (every registered
+``ksa_`` metric is site-labelled when federation is on) and import hygiene
+for examples/benchmarks (public package roots only, no site-internal
+wiring)."""
+import pathlib
+import re
+import time
+
+from repro.federation import FederatedCluster, Site
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _wait(cond, timeout=10.0, interval=0.01):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+def test_every_registered_metric_is_site_labelled_under_federation():
+    """The federated ``/metrics`` exposition must cover every ``ksa_``
+    family any site's registry holds, and every sample line must carry a
+    ``site`` label — a scrape of the home monitor sees the whole
+    federation, unambiguously."""
+    with FederatedCluster([Site("a", workers=1), Site("b", workers=1)],
+                          task_timeout_s=30.0) as fed:
+        tids = [fed.submit("sleep", params={"duration": 0.01}),
+                fed.submit("sleep", params={"duration": 0.01}, site="b")]
+        assert fed.wait_all(tids, timeout=30.0)
+        merged = fed.home.monitor.metrics_text()
+        sample_lines = [ln for ln in merged.splitlines()
+                        if ln and not ln.startswith("#")]
+        assert sample_lines
+        for ln in sample_lines:
+            assert 'site="' in ln, f"unlabelled sample line: {ln}"
+        for name, cluster in fed.clusters.items():
+            snap = cluster.broker.metrics.snapshot()
+            for family, data in snap.items():
+                if not family.startswith("ksa_") or not data["series"]:
+                    continue
+                pat = re.compile(
+                    rf"^{re.escape(family)}(?:_\w+)?\{{[^}}]*"
+                    rf"site=\"{re.escape(name)}\"", re.M)
+                assert pat.search(merged), \
+                    (f"metric {family} of site {name} missing from the "
+                     f"federated /metrics exposition")
+
+
+def test_examples_and_benchmarks_import_public_api_only():
+    """Examples and benchmarks are the copy-paste templates — they must go
+    through the public package roots (``repro.federation``,
+    ``repro.cluster``, ...), never reach into federation site-internal
+    wiring (``repro.federation.bridge`` et al.)."""
+    internal = re.compile(
+        r"^\s*(?:from\s+repro\.federation\.\w+\s+import|"
+        r"import\s+repro\.federation\.\w+)", re.M)
+    offenders = []
+    for folder in ("examples", "benchmarks"):
+        for path in sorted((REPO / folder).glob("*.py")):
+            if internal.search(path.read_text()):
+                offenders.append(str(path.relative_to(REPO)))
+    assert not offenders, \
+        (f"site-internal federation imports in {offenders}; import from "
+         f"the repro.federation package root instead")

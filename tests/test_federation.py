@@ -1,0 +1,306 @@
+"""repro.federation: site/link modeling, site-aware routing, cross-site
+relays, WAN-tolerant leases, spillover, and the federated observability
+surface."""
+import json
+import time
+import urllib.request
+
+import pytest
+
+from repro.cluster import KsaCluster
+from repro.core.lease import LeaseTolerance, RevokeReason
+from repro.core.messages import Resources, TaskMessage, TaskStatus
+from repro.federation import (FederatedCluster, Site, SiteRouter,
+                              SpilloverConfig, SpilloverController, WanLink,
+                              site_class)
+
+
+def _wait(cond, timeout=10.0, interval=0.01):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+def _task(task_id="t1", script="sleep", **res):
+    return TaskMessage(task_id=task_id, script=script,
+                       resources=Resources(**res))
+
+
+# -- model ------------------------------------------------------------------
+
+
+def test_wanlink_transfer_model():
+    link = WanLink(latency_s=0.05, bandwidth_mbps=100.0)
+    assert link.one_way_s() == pytest.approx(0.05)
+    # 10 MB over 100 Mbps = 0.8 s of transfer on top of latency
+    assert link.one_way_s(10.0) == pytest.approx(0.85)
+    assert link.round_trip_s(10.0) == pytest.approx(0.90)
+    assert link.up
+    link.partition()
+    assert not link.up and link.to_dict()["up"] is False
+    link.heal()
+    assert link.up
+    with pytest.raises(ValueError):
+        WanLink(latency_s=-1.0)
+    with pytest.raises(ValueError):
+        WanLink(bandwidth_mbps=0.0)
+
+
+def test_site_name_validation():
+    with pytest.raises(ValueError):
+        Site("")
+    with pytest.raises(ValueError):
+        Site("a.b")  # dot collides with the class-topic separator
+    assert Site("hpc", workers=2, worker_slots=3).slots == 6
+
+
+def test_lease_tolerance_deadline():
+    assert LeaseTolerance().deadline(10.0) == pytest.approx(10.0)
+    t = LeaseTolerance(slack_s=2.0, rtt_factor=1.5)
+    assert t.deadline(10.0) == pytest.approx(17.0)
+    assert t.deadline(None) == pytest.approx(2.0)
+    assert LeaseTolerance().deadline(None) is None
+
+
+# -- routing ----------------------------------------------------------------
+
+
+def test_site_router_classification():
+    router = SiteRouter(["a", "b"], home="a")
+    assert site_class("b") in router.classes()
+    assert site_class("a") not in router.classes()
+    assert router.classify(_task(site="b")) == site_class("b")
+    # home pin and no pin both fall through to cpu/gpu classes
+    assert router.classify(_task(site="a")) == "cpu"
+    assert router.classify(_task()) == "cpu"
+    assert router.classify(_task(gpus=1)) == "gpu"
+    with pytest.raises(ValueError):
+        router.classify(_task(site="nowhere"))
+    with pytest.raises(ValueError):
+        SiteRouter(["a", "b"], home="c")
+
+
+def test_affinity_profile_subscribes_only_to_site_class():
+    router = SiteRouter(["a", "b"], home="a")
+    prof = router.affinity_profile("b")
+    assert router.subscriptions("ksa", prof) == (f"ksa-new.{site_class('b')}",)
+    # ordinary pools never see the site classes
+    from repro.core.scheduling import ResourceProfile
+    cpu = ResourceProfile(cpus=2, mem_mb=2048)
+    assert f"ksa-new.{site_class('b')}" not in \
+        router.subscriptions("ksa", cpu)
+
+
+def test_spill_score_prices_coldstart_slots_and_transfer():
+    router = SiteRouter(["a", "b", "c"], home="a")
+    cheap = Site("b", link=WanLink(latency_s=0.01, bandwidth_mbps=1000.0))
+    pricey = Site("c", spinup_s=5.0, slot_cost=3.0,
+                  link=WanLink(latency_s=0.2, bandwidth_mbps=10.0))
+    assert router.spill_score(cheap) < router.spill_score(pricey)
+    # data locality: input weight charges the link both ways matter
+    heavy = _task(input_mb=100.0)
+    assert router.spill_score(cheap, heavy) > router.spill_score(cheap)
+    pricey.link.partition()
+    assert router.spill_score(pricey) == float("inf")
+
+
+# -- federated execution ----------------------------------------------------
+
+
+def test_pinned_task_relays_to_remote_site():
+    with FederatedCluster([Site("a", workers=1), Site("b", workers=1)],
+                          task_timeout_s=30.0) as fed:
+        local = fed.submit("sleep", params={"duration": 0.02}, site="a")
+        remote = fed.submit("sleep", params={"duration": 0.02}, site="b",
+                            input_mb=1.0)
+        assert fed.wait_all([local, remote], timeout=30.0)
+        assert fed.result(remote) == {"slept": 0.02}
+        assert fed.task(remote).agent_id.startswith("bridge-b-")
+        assert not fed.task(local).agent_id.startswith("bridge-")
+        # the remote control plane really executed it
+        re = fed.clusters["b"].task(remote)
+        assert re is not None and re.done
+        with pytest.raises(ValueError):
+            fed.submit("sleep", site="nowhere")
+
+
+def test_campaign_stage_pinned_to_site():
+    from repro.pipeline import PipelineSpec, Stage
+    spec = PipelineSpec("fedcamp", [
+        Stage("local", "sleep", fan_out=2,
+              params={"duration": 0.02}, resources=Resources(cpus=1)),
+        Stage("remote", "sleep", depends_on=("local",), join=True,
+              params={"duration": 0.02},
+              resources=Resources(cpus=1, site="b")),
+    ])
+    with FederatedCluster([Site("a", workers=1), Site("b", workers=1)],
+                          task_timeout_s=30.0) as fed:
+        res = fed.run_campaign(spec, list(range(4)), timeout_s=60.0)
+        assert res.status.state == "COMPLETED"
+        # the pinned join stage ran through the site-b bridge
+        entries = fed.clusters["b"].monitor.tasks()
+        assert any(e.done for e in entries.values())
+
+
+def test_remote_failure_propagates_home():
+    with FederatedCluster([Site("a", workers=1), Site("b", workers=1)],
+                          max_attempts=1) as fed:
+        tid = fed.submit("fail", params={"fail_times": 5}, site="b")
+        assert _wait(lambda: fed.task(tid) is not None
+                     and fed.task(tid).errors, timeout=20.0)
+        e = fed.task(tid)
+        assert not e.done
+        assert "site b" in e.errors[-1]["error"]
+
+
+def test_bridge_requires_remote_monitor():
+    fed = FederatedCluster([
+        Site("a", workers=1),
+        Site("b", workers=1, cluster_kw={"monitor": False})])
+    with pytest.raises(ValueError, match="monitor"):
+        fed.start()
+    fed.stop()
+
+
+# -- WAN-tolerant leases ----------------------------------------------------
+
+
+def test_partition_within_tolerance_is_not_revoked():
+    """A WAN partition longer than the uniform monitor deadline must not
+    trip the watchdog when the site's LeaseTolerance covers it — the relay
+    resumes after heal and the task completes on its first attempt."""
+    b = Site("b", workers=1, tolerance=LeaseTolerance(slack_s=60.0))
+    with FederatedCluster([Site("a", workers=1), b],
+                          task_timeout_s=0.5) as fed:
+        tid = fed.submit("sleep", params={"duration": 0.2}, site="b")
+        # the home lease is stamped with the site + stretched deadline
+        assert _wait(lambda: fed.home.broker.lease_view(tid) is not None,
+                     timeout=10.0)
+        lease = fed.home.broker.lease_view(tid)
+        assert lease["site"] == "b"
+        assert lease["deadline_s"] == pytest.approx(60.5)
+        b.link.partition()
+        time.sleep(1.2)  # > task_timeout_s: heartbeats stopped, staleness grew
+        b.link.heal()
+        assert fed.wait_all([tid], timeout=30.0)
+        e = fed.task(tid)
+        assert e.result_attempt == 0          # never resubmitted
+        assert e.duplicate_results == 0
+        revoked = fed.home.broker.lease_stats()["revoked"]
+        assert revoked.get(RevokeReason.WATCHDOG, 0) == 0
+
+
+def test_partition_beyond_tolerance_recovers_via_watchdog():
+    """Without tolerance the same partition trips the per-site deadline
+    (== the uniform one) and the monitor reclaims the lease; the task must
+    still complete exactly once after redelivery."""
+    b = Site("b", workers=1)  # default tolerance: no extra headroom
+    with FederatedCluster([Site("a", workers=1), b],
+                          task_timeout_s=0.4) as fed:
+        tid = fed.submit("sleep", params={"duration": 0.2}, site="b")
+        assert _wait(lambda: fed.home.broker.lease_view(tid) is not None,
+                     timeout=10.0)
+        b.link.partition()
+        time.sleep(1.0)
+        b.link.heal()
+        assert fed.wait_all([tid], timeout=30.0)
+        e = fed.task(tid)
+        assert e.done
+        assert e.duplicate_results == 0
+
+
+# -- cross-site revocation fencing ------------------------------------------
+
+
+def test_cross_site_preemption_fences_remote_verdict():
+    """Preempting a spilled task from home revokes the remote copy too;
+    the home commit gate accepts exactly one verdict across both sites."""
+    # a real link latency keeps the fence deterministic: the cancelled
+    # relay's remote abort is control traffic (no link wait), so it always
+    # beats the requeued retry's data shipment to site B
+    b = Site("b", workers=1, link=WanLink(latency_s=0.2))
+    with FederatedCluster([Site("a", workers=1), b],
+                          task_timeout_s=60.0) as fed:
+        tid = fed.submit("sleep", params={"duration": 1.0}, site="b")
+        remote = fed.clusters["b"]
+        assert _wait(lambda: (remote.task(tid) is not None and
+                              remote.task(tid).status ==
+                              TaskStatus.RUNNING.value), timeout=20.0)
+        assert fed.revoke(tid, RevokeReason.PREEMPT)
+        assert fed.wait_all([tid], timeout=40.0)
+        e = fed.task(tid)
+        assert e.duplicate_results == 0       # one committed verdict, ever
+        assert e.result_attempt >= 1          # the re-run, not the preempted
+        # the preemption crossed the WAN: the remote lease was revoked
+        remote_revoked = remote.broker.lease_stats()["revoked"]
+        assert remote_revoked.get(RevokeReason.PREEMPT, 0) >= 1
+
+
+# -- spillover --------------------------------------------------------------
+
+
+def test_spillover_borrows_and_returns_remote_capacity():
+    cfg = SpilloverConfig(classes=("cpu",), horizon_s=0.5, min_backlog=2,
+                          cooldown_s=0.0, drain_idle_s=0.05,
+                          bridge_slots=2, max_bridges_per_class=2)
+    with FederatedCluster([Site("a", workers=0),
+                           Site("b", workers=1, worker_slots=2)]) as fed:
+        ctl = SpilloverController(fed, cfg)  # tick by hand: no loop thread
+        tids = [fed.submit("sleep", params={"duration": 0.05})
+                for _ in range(6)]
+        ctl.tick()
+        assert ctl.bridge_count("cpu") >= 1   # home has no cpu capacity
+        assert fed.bridges("b")
+        assert fed.wait_all(tids, timeout=30.0)
+        # backlog gone: ticks drain the spill bridges back
+        assert _wait(lambda: (ctl.tick() or ctl.bridge_count("cpu") == 0),
+                     timeout=20.0, interval=0.05)
+        # ...and deregistered, leaving only the permanent affinity bridge
+        assert _wait(lambda: (ctl.tick() or
+                              [b.role for b in fed.bridges("b")] ==
+                              ["affinity"]),
+                     timeout=20.0, interval=0.05)
+        st = ctl.status()
+        actions = [d["action"] for d in st["decisions"]]
+        assert "spill" in actions and "release" in actions
+        assert st["classes"]["cpu"]["spills"] >= 1
+
+
+def test_spillover_rejects_unknown_class():
+    with FederatedCluster([Site("a", workers=1), Site("b")]) as fed:
+        with pytest.raises(ValueError, match="resource class"):
+            SpilloverController(fed, SpilloverConfig(classes=("warp",)))
+
+
+# -- federated observability ------------------------------------------------
+
+
+def test_sites_endpoint_and_federated_metrics():
+    with FederatedCluster([Site("a", workers=1), Site("b", workers=1)],
+                          http=True) as fed:
+        tid = fed.submit("sleep", params={"duration": 0.02}, site="b")
+        assert fed.wait_all([tid], timeout=30.0)
+        port = fed.http_port
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/sites") as r:
+            payload = json.loads(r.read())
+        assert payload["home"] == "a"
+        assert set(payload["sites"]) == {"a", "b"}
+        assert payload["sites"]["b"]["bridges"], "affinity bridge missing"
+        assert payload["sites"]["b"]["broker"]["site"] == "b"
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics") as r:
+            text = r.read().decode()
+        assert 'site="a"' in text and 'site="b"' in text
+        for line in text.splitlines():
+            if line and not line.startswith("#"):
+                assert 'site="' in line, f"unlabelled sample: {line}"
+    # standalone clusters keep the unlabelled single-site exposition
+    with KsaCluster(workers=1, http=True) as c:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{c.http_port}/metrics") as r:
+            text = r.read().decode()
+        assert 'site="' not in text

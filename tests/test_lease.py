@@ -495,3 +495,52 @@ def test_orchestrator_killed_while_drain_requeues_deferred_leases():
         w2.stop()
     finally:
         broker.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-site revocation fencing (repro.federation)
+# ---------------------------------------------------------------------------
+
+def test_cross_site_spill_preempted_never_commits_from_both():
+    """Exactly-once across federation sites: a task spilled to site B whose
+    home lease is preempted (site A takes it back) must never commit from
+    both sides — the bridge revokes the remote copy, the home commit gate
+    fences the stale relay, and only the post-preemption attempt's verdict
+    lands."""
+    from repro.federation import FederatedCluster, Site, WanLink
+
+    # a real WAN latency on site B keeps the ordering deterministic: the
+    # preempted relay's remote abort (a control call, ~remote_poll_s after
+    # the cancel) always lands before the requeued retry's relay can ship
+    # its payload back across the link
+    b = Site("b", workers=1, link=WanLink(latency_s=0.2))
+    with FederatedCluster([Site("a", workers=1), b],
+                          task_timeout_s=60.0) as fed:
+        # hangs on attempt 0, completes on the retry — so the preempted
+        # remote execution can never "win the race" by finishing early
+        tid = fed.submit("lease_hang_once", site="b")
+        remote = fed.clusters["b"]
+        assert _wait(lambda: remote.broker.lease_view(tid) is not None,
+                     timeout=20.0)
+        # home authority: one lease, stamped with the executing site
+        home_lease = fed.home.broker.lease_view(tid)
+        assert home_lease is not None and home_lease["site"] == "b"
+        # preempt from home (site A reclaims the task)
+        assert fed.revoke(tid, RevokeReason.PREEMPT)
+        assert fed.wait_all([tid], timeout=40.0)
+        e = fed.task(tid)
+        assert e.done and e.duplicate_results == 0
+        assert e.result_attempt >= 1          # preempted attempt 0 never lands
+        assert e.result["attempt"] >= 1
+        # the revocation crossed the WAN and fenced the remote holder too
+        assert remote.broker.lease_stats()["revoked"].get(
+            RevokeReason.PREEMPT, 0) >= 1
+        # the bridge observed the fence: its relay was dropped, not returned
+        snap = fed.home.broker.metrics.snapshot()
+        events = snap["ksa_bridge_events_total"]["series"]
+        fenced = sum(v for k, v in events.items() if k[-1] == "fenced")
+        remote_revoked = sum(v for k, v in events.items()
+                             if k[-1] == "remote_revoked")
+        assert fenced >= 1 and remote_revoked >= 1
+        # exactly one committed completion at the home lease table
+        assert fed.home.broker.lease_stats()["completed"] == 1

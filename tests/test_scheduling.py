@@ -444,3 +444,34 @@ def test_cluster_start_failure_unwinds_started_components():
     assert c.monitor is not None and c.monitor._thread is not None
     assert not c.monitor._thread.is_alive()
     assert c.broker._closed
+
+
+def test_balanced_partitioner_levels_task_records():
+    """``Submitter(partitioner="balanced")`` places task records on the
+    least-loaded partition while keeping the ``key=task_id`` the lease
+    grant path requires — 24 records over 8 partitions land exactly 3
+    deep, where keyed hashing would skew (and the most-loaded member of a
+    sticky consumer group sets a campaign's makespan)."""
+    b = Broker(default_partitions=8)
+    try:
+        sub = Submitter(b, "bp", partitioner="balanced")
+        for i in range(24):
+            sub.submit("sleep", task_id=f"bal-{i}", params={"duration": 0.0})
+        topic = class_topic("bp", "cpu")
+        recs = b.read_from(topic)
+        per_part = [0] * 8
+        for r in recs:
+            assert r.key == r.value["task_id"]
+            per_part[r.partition] += 1
+        assert per_part == [3] * 8, per_part
+    finally:
+        b.close()
+
+
+def test_submitter_rejects_unknown_partitioner():
+    b = Broker(default_partitions=2)
+    try:
+        with pytest.raises(ValueError, match="partitioner"):
+            Submitter(b, "bq", partitioner="sticky")
+    finally:
+        b.close()

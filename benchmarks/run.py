@@ -9,11 +9,12 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_apps, bench_autoscale, bench_core, bench_federation,
-                   bench_obs, bench_pipeline, bench_preemption,
-                   bench_recovery, bench_routing)
+    from . import (bench_apps, bench_autoscale, bench_broker, bench_core,
+                   bench_federation, bench_obs, bench_pipeline,
+                   bench_preemption, bench_recovery, bench_routing)
 
     suites = [
+        ("broker_data_plane", bench_broker.bench_broker_data_plane),
         ("broker_throughput", bench_core.bench_broker_throughput),
         ("submit_latency", bench_core.bench_submit_latency),
         ("oversubscription_vs_celery",

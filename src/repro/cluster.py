@@ -91,6 +91,8 @@ class KsaCluster:
                  partitioner: str = "hash",
                  obs: bool = True,
                  site: str = "",
+                 single_lock: bool = False,
+                 debug_locks: bool = False,
                  agent_kw: Mapping[str, Any] | None = None,
                  monitor_kw: Mapping[str, Any] | None = None):
         self.prefix = prefix
@@ -122,8 +124,12 @@ class KsaCluster:
 
         self._owns_broker = broker is None
         if broker is None:
+            # single_lock / debug_locks pass straight through to the owned
+            # broker's data plane (legacy escape hatch / lock-order checks)
             broker_kw: dict[str, Any] = {"default_partitions": default_partitions,
-                                         "obs": obs, "site": site}
+                                         "obs": obs, "site": site,
+                                         "single_lock": single_lock,
+                                         "debug_locks": debug_locks}
             if session_timeout_s is not None:
                 broker_kw["session_timeout_s"] = session_timeout_s
             broker = Broker(**broker_kw)

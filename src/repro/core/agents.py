@@ -142,6 +142,14 @@ class AgentBase:
         self.placement = placement or ResourceClassPolicy()
         self.poll_interval_s = poll_interval_s
         self.heartbeat_interval_s = heartbeat_interval_s
+        # saturated-poll group-heartbeat cadence: the configured interval,
+        # but bounded well under the broker's session timeout — a busy
+        # agent that only heartbeats at the nominal interval can slip past
+        # expiry under scheduler load and get falsely evicted (its live
+        # lease revoked + requeued out from under it)
+        self._group_hb_interval_s = min(
+            heartbeat_interval_s, broker.session_timeout_s / 4.0)
+        self._last_group_heartbeat = 0.0
         self.default_timeout_s = default_timeout_s
         self._producer = Producer(broker)
         self._subscriptions = tuple(
@@ -292,14 +300,20 @@ class AgentBase:
                     self._deferred.append(task)
                     self._c["deferred"].inc()
         else:
-            # still heartbeat group membership while saturated
-            try:
-                self.broker.heartbeat(f"{self.prefix}-agents",
-                                      self._consumer.member_id)
-            except Exception as exc:
-                self._c["heartbeat_failures"].inc()
-                log.debug("agent %s: broker heartbeat failed: %r",
-                          self.agent_id, exc)
+            # still heartbeat group membership while saturated — but at the
+            # (session-timeout-bounded) heartbeat interval, not per poll
+            # tick: a 5ms tick hammering the group lock adds contention
+            # for no extra liveness
+            now = time.time()
+            if now - self._last_group_heartbeat >= self._group_hb_interval_s:
+                self._last_group_heartbeat = now
+                try:
+                    self.broker.heartbeat(f"{self.prefix}-agents",
+                                          self._consumer.member_id)
+                except Exception as exc:
+                    self._c["heartbeat_failures"].inc()
+                    log.debug("agent %s: broker heartbeat failed: %r",
+                              self.agent_id, exc)
         self._watchdog()
         self._heartbeat_running()
 

@@ -45,10 +45,11 @@ replays revocations exactly like completions).
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Iterator, Sequence
 
 # -- lease states ------------------------------------------------------------
 
@@ -113,7 +114,7 @@ class LeaseTolerance:
         return base_timeout_s * self.rtt_factor + self.slack_s
 
 
-@dataclass
+@dataclass(slots=True)
 class Lease:
     """One attempt of one task held by one agent (broker-internal record).
 
@@ -162,14 +163,25 @@ class Lease:
 
 
 class LeaseTable:
-    """The broker's lease registry. **Not** thread-safe on its own — every
-    method is called by :class:`~repro.core.broker.Broker` with the broker
-    lock held, which is what makes revoke-vs-complete atomic."""
+    """One shard of the broker's lease registry. **Not** thread-safe on its
+    own — every method is called with the owning lock held (the broker's
+    single lock in ``single_lock`` mode, the shard lock of a
+    :class:`ShardedLeaseTable` otherwise), which is what makes
+    revoke-vs-complete atomic per task.
 
-    def __init__(self, metrics=None) -> None:
+    ``seq_source`` injects a shared grant-sequence counter so N shards keep
+    one broker-wide monotonic ``Lease.seq``; ``done_cap`` bounds this
+    shard's completion-tombstone dict (a sharded table divides the global
+    cap across shards)."""
+
+    def __init__(self, metrics=None, *,
+                 seq_source: Iterator[int] | None = None,
+                 done_cap: int = _DONE_CAP) -> None:
         # counters live in the obs registry (repro.obs) so /metrics and the
         # legacy stats() dict are the same numbers; a standalone table (unit
-        # tests, direct wiring) gets a private registry
+        # tests, direct wiring) gets a private registry. Registration is
+        # idempotent by name, so every shard of a ShardedLeaseTable shares
+        # the same counter families.
         from repro.obs import MetricsRegistry
         reg = metrics if metrics is not None else MetricsRegistry()
         self._c_granted = reg.counter(
@@ -198,7 +210,9 @@ class LeaseTable:
         # (exactly-once *execution*, not just exactly-once result).
         # A deliberate rerun of a finished task id needs a higher attempt.
         self._done: dict[str, int] = {}
-        self._seq = 0
+        self._done_cap = done_cap
+        self._next_seq = seq_source if seq_source is not None \
+            else itertools.count(1)
 
     # -- counter views (registry-backed; the attribute names predate obs) --
 
@@ -234,25 +248,66 @@ class LeaseTable:
 
     def grant(self, task_id: str, holder: str, topic: str, attempt: int,
               value: dict, *, site: str = "",
-              deadline_s: float | None = None) -> Lease | None:
+              deadline_s: float | None = None,
+              now: float | None = None) -> Lease | None:
         """Register a fresh GRANTED lease (replaces any stale entry for the
         task — a requeued task's new lease supersedes the fenced old one).
         A record whose attempt is *behind* a live lease is the stale
         sibling of a requeue race: it must not clobber the newer lease
         (its claim will be refused instead). ``site``/``deadline_s`` stamp
         the holder's federation site and WAN-tolerant heartbeat deadline
-        (see :class:`LeaseTolerance`) onto the lease for the watchdogs."""
+        (see :class:`LeaseTolerance`) onto the lease for the watchdogs.
+        ``now`` lets a batched grant path stamp one shared timestamp."""
         cur = self._leases.get(task_id)
         if cur is not None and cur.live and cur.attempt > attempt:
             self._c_stale.inc()
             return None
-        self._seq += 1
         lease = Lease(task_id=task_id, holder=holder, topic=topic,
-                      attempt=attempt, value=value, seq=self._seq,
+                      attempt=attempt, value=value, seq=next(self._next_seq),
                       site=site, deadline_s=deadline_s)
+        if now is not None:
+            lease.granted_at = now
         self._leases[task_id] = lease
         self._c_granted.inc()
         return lease
+
+    def grant_batch(self, records: Sequence, holder: str, *, site: str = "",
+                    deadline_s: float | None = None,
+                    now: float | None = None) -> list:
+        """Grant leases for a batch of fetched records in one pass under the
+        caller's (shard) lock — one timestamp, one counter bump per grant,
+        no per-record lock round-trips. ``records`` are broker ``Record``s
+        whose ``value`` carries ``task_id``/``attempt``; non-task records
+        pass through with a ``None`` lease. Returns ``[(record, lease|None),
+        ...]`` in input order."""
+        stamp = time.time() if now is None else now
+        out = []
+        leases, n_stale = self._leases, 0
+        seq = self._next_seq
+        for rec in records:
+            # inlined grant() with counters tallied once per batch instead
+            # of one locked inc per record
+            task_id = rec.key
+            value = rec.value
+            attempt = int(value.get("attempt", 0))
+            cur = leases.get(task_id)
+            if cur is not None and cur.live and cur.attempt > attempt:
+                n_stale += 1
+                out.append((rec, None))
+                continue
+            # positional construction: kwarg binding is measurable at
+            # 100k+ grants/s on the sharded hot path
+            lease = Lease(task_id, holder, rec.topic, attempt, value,
+                          next(seq), stamp, GRANTED, None, None, None,
+                          None, None, site, deadline_s)
+            leases[task_id] = lease
+            out.append((rec, lease))
+        n_granted = len(out) - n_stale
+        if n_granted:
+            self._c_granted.inc(n_granted)
+        if n_stale:
+            self._c_stale.inc(n_stale)
+        return out
 
     def claim_start(self, task_id: str, holder: str, attempt: int,
                     cancel: threading.Event,
@@ -315,11 +370,48 @@ class LeaseTable:
         if ok:
             self._c_completed.inc()
             self._done[task_id] = lease.attempt
-            if len(self._done) > _DONE_CAP:
+            if len(self._done) > self._done_cap:
                 self._done.pop(next(iter(self._done)))
         else:
             self._c_failed.inc()
         return True
+
+    def complete_batch(self, items: Sequence, holder: str | None,
+                       ok: bool) -> list:
+        """Batched :meth:`complete` under the caller's (shard) lock:
+        ``items`` is ``[(task_id, attempt|None), ...]`` sharing one wave
+        outcome ``ok`` (a holder commits successes and failures as separate
+        waves); every entry passes through the same commit gate, with the
+        completed/failed counters bumped once per batch instead of once per
+        record. Returns ``[(task_id, committed, lease|None), ...]`` in
+        input order."""
+        out: list = []
+        n_terminal = 0
+        state = DONE if ok else FAILED
+        leases, done = self._leases, self._done
+        for task_id, attempt in items:
+            lease = leases.get(task_id)
+            if lease is None:
+                out.append((task_id, task_id not in done, None))
+                continue
+            if (holder is not None and lease.holder != holder) \
+                    or (attempt is not None and lease.attempt != attempt):
+                out.append((task_id, False, lease))
+                continue
+            del leases[task_id]
+            if lease.state == REVOKED:
+                out.append((task_id, False, lease))
+                continue
+            lease.state = state
+            n_terminal += 1
+            if ok:
+                done[task_id] = lease.attempt
+            out.append((task_id, True, lease))
+        while len(done) > self._done_cap:
+            done.pop(next(iter(done)))
+        if n_terminal:
+            (self._c_completed if ok else self._c_failed).inc(n_terminal)
+        return out
 
     def revoke(self, task_id: str, reason: str) -> Lease | None:
         """Take a live lease back: fire the cancel event (and the holder's
@@ -387,3 +479,229 @@ class LeaseTable:
             "revoked": dict(self.revoked),
             "revoked_total": sum(self.revoked.values()),
         }
+
+
+class ShardedLeaseTable:
+    """Task-id-hash-sharded lease registry — grant/claim/complete/revoke on
+    tasks in different shards never contend.
+
+    Each shard is a plain :class:`LeaseTable` guarded by its own lock; a
+    task's shard is a pure function of its id, so every lifecycle operation
+    for one task serializes on the same lock and the per-task atomicity
+    contracts are exactly those of the single-table broker. Unlike
+    :class:`LeaseTable`, locking is owned *here*: callers never wrap calls
+    in their own lock. The broker injects ``lock_factory`` so its
+    ``single_lock`` (all shards alias the master lock) and ``debug_locks``
+    (order-checked locks) modes compose; shard locks rank between the group
+    lock and the partition locks in the broker's lock hierarchy — see the
+    :mod:`repro.core.broker` docstring.
+
+    Cross-shard invariants are preserved by construction: the grant
+    sequence is one shared ``itertools.count`` (broker-wide monotonic
+    ``Lease.seq``), the counters are one shared registry family (counter
+    registration is idempotent by name), and the completion-tombstone cap
+    is divided across shards."""
+
+    def __init__(self, metrics=None, *, shards: int = 8,
+                 lock_factory: Callable[[int], Any] | None = None) -> None:
+        n = max(1, int(shards))
+        seq = itertools.count(1)
+        cap = max(256, _DONE_CAP // n)
+        self._tables = [LeaseTable(metrics, seq_source=seq, done_cap=cap)
+                        for _ in range(n)]
+        make = lock_factory if lock_factory is not None \
+            else (lambda i: threading.RLock())
+        self._locks = [make(i) for i in range(n)]
+        self._n = n
+
+    @property
+    def shards(self) -> int:
+        return self._n
+
+    def shard_of(self, task_id: str) -> int:
+        return hash(task_id) % self._n
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def grant(self, task_id: str, holder: str, topic: str, attempt: int,
+              value: dict, *, site: str = "",
+              deadline_s: float | None = None,
+              now: float | None = None) -> Lease | None:
+        """Per-record grant (the legacy data plane uses this; the sharded
+        hot path batches through :meth:`grant_batch`)."""
+        i = self.shard_of(task_id)
+        with self._locks[i]:
+            return self._tables[i].grant(
+                task_id, holder, topic, attempt, value,
+                site=site, deadline_s=deadline_s, now=now)
+
+    def grant_batch(self, records: Sequence, holder: str, *, site: str = "",
+                    deadline_s: float | None = None,
+                    now: float | None = None) -> list:
+        """Grant leases for a batch of task records with one critical
+        section per shard touched (not per record). Returns
+        ``[(record, lease|None), ...]``; order is per-shard, which is fine
+        for the observability fan-out this feeds."""
+        stamp = time.time() if now is None else now
+        if self._n == 1:
+            with self._locks[0]:
+                return self._tables[0].grant_batch(
+                    records, holder, site=site, deadline_s=deadline_s,
+                    now=stamp)
+        n = self._n
+        buckets: dict[int, list] = {}
+        for rec in records:
+            buckets.setdefault(hash(rec.key) % n, []).append(rec)
+        out: list = []
+        for i in sorted(buckets):  # one shard lock at a time, ascending
+            with self._locks[i]:
+                out.extend(self._tables[i].grant_batch(
+                    buckets[i], holder, site=site, deadline_s=deadline_s,
+                    now=stamp))
+        return out
+
+    def claim_start(self, task_id: str, holder: str, attempt: int,
+                    cancel: threading.Event,
+                    on_revoke: Callable[[], None] | None = None
+                    ) -> tuple[bool, Lease | None]:
+        """GRANTED → RUNNING under the task's shard lock. Returns
+        ``(ok, lease)`` — the lease (claimed in place when ok) lets the
+        broker observe grant→claim latency *outside* the lock."""
+        i = self.shard_of(task_id)
+        with self._locks[i]:
+            t = self._tables[i]
+            lease = t.get(task_id)
+            ok = t.claim_start(task_id, holder, attempt, cancel, on_revoke)
+            return ok, lease
+
+    def claim_start_batch(self, items: Sequence, holder: str,
+                          cancel: threading.Event,
+                          on_revoke: Callable[[], None] | None = None
+                          ) -> list:
+        """Batched :meth:`claim_start`: ``items`` is ``[(task_id, attempt),
+        ...]``; all claims landing on the same shard share one critical
+        section (shards visited in ascending order). Every claim in the
+        batch binds the same ``cancel``/``on_revoke`` — the caller is one
+        holder starting one wave of tasks. Returns ``[(task_id, ok, lease),
+        ...]`` grouped by shard."""
+        n = self._n
+        buckets: dict[int, list] = {}
+        for item in items:
+            buckets.setdefault(hash(item[0]) % n, []).append(item)
+        out: list = []
+        now = time.time()
+        for i in sorted(buckets):
+            with self._locks[i]:
+                t = self._tables[i]
+                leases, done = t._leases, t._done
+                for task_id, attempt in buckets[i]:
+                    lease = leases.get(task_id)
+                    # fast path: the normal GRANTED -> RUNNING transition,
+                    # with one shared timestamp for the whole wave
+                    if lease is not None and lease.state == GRANTED \
+                            and lease.holder == holder \
+                            and lease.attempt == attempt \
+                            and task_id not in done:
+                        lease.state = RUNNING
+                        lease.started_at = now
+                        lease.cancel = cancel
+                        lease.on_revoke = on_revoke
+                        out.append((task_id, True, lease))
+                        continue
+                    # anything unusual (tombstone, fencing, revoked-ack,
+                    # duplicate) takes the scalar gate
+                    ok = t.claim_start(task_id, holder, attempt, cancel,
+                                       on_revoke)
+                    out.append((task_id, ok, lease))
+        return out
+
+    def complete(self, task_id: str, holder: str | None, attempt: int | None,
+                 ok: bool) -> tuple[bool, Lease | None]:
+        """The commit gate, under the task's shard lock. Returns
+        ``(committed, lease)`` for out-of-lock observability."""
+        i = self.shard_of(task_id)
+        with self._locks[i]:
+            t = self._tables[i]
+            lease = t.get(task_id)
+            committed = t.complete(task_id, holder, attempt, ok)
+            return committed, lease
+
+    def complete_batch(self, items: Sequence, holder: str | None,
+                       ok: bool) -> list:
+        """Batched :meth:`complete`: ``items`` is ``[(task_id,
+        attempt|None), ...]`` sharing one wave outcome ``ok``; one critical
+        section per shard touched. Each entry goes through the same commit
+        gate (fencing, tombstones) as the scalar path. Returns
+        ``[(task_id, committed, lease), ...]`` grouped by shard."""
+        n = self._n
+        buckets: dict[int, list] = {}
+        for item in items:
+            buckets.setdefault(hash(item[0]) % n, []).append(item)
+        out: list = []
+        for i in sorted(buckets):
+            with self._locks[i]:
+                out.extend(self._tables[i].complete_batch(buckets[i],
+                                                          holder, ok))
+        return out
+
+    def revoke(self, task_id: str, reason: str,
+               requeue_cb: Callable[[Lease], None] | None = None
+               ) -> Lease | None:
+        """Fence + cancel + (optionally) requeue in ONE critical section
+        under the task's shard lock: ``requeue_cb(lease)`` runs while the
+        shard lock is held, so a revoked task is never both requeued and
+        completed — the same atomicity the single broker lock provided.
+        The callback may produce (shard lock → partition lock is the legal
+        lock order) but must not touch group state."""
+        i = self.shard_of(task_id)
+        with self._locks[i]:
+            t = self._tables[i]
+            lease = t.revoke(task_id, reason)
+            if lease is not None and requeue_cb is not None:
+                t.count_requeued()
+                requeue_cb(lease)
+            return lease
+
+    def forget(self, task_id: str, holder: str) -> None:
+        i = self.shard_of(task_id)
+        with self._locks[i]:
+            self._tables[i].forget(task_id, holder)
+
+    # -- queries -----------------------------------------------------------
+
+    def get_view(self, task_id: str) -> dict | None:
+        i = self.shard_of(task_id)
+        with self._locks[i]:
+            lease = self._tables[i].get(task_id)
+            return None if lease is None else lease.view()
+
+    def live_views(self, task_ids=None, holder: str | None = None) -> list[dict]:
+        if task_ids is not None:
+            out: list[dict] = []
+            for tid in task_ids:
+                i = self.shard_of(tid)
+                with self._locks[i]:
+                    out.extend(self._tables[i].live_views([tid], holder))
+            return out
+        out = []
+        for lock, t in zip(self._locks, self._tables):
+            with lock:  # one shard at a time — never two shard locks held
+                out.extend(t.live_views(None, holder))
+        return out
+
+    def stats(self) -> dict:
+        t0 = self._tables[0]  # counter families are shared across shards
+        out = {
+            "active": 0,
+            "granted": t0.granted,
+            "completed": t0.completed,
+            "failed": t0.failed,
+            "requeued": t0.requeued,
+            "stale_drops": t0.stale_drops,
+            "revoked": dict(t0.revoked),
+            "revoked_total": sum(t0.revoked.values()),
+        }
+        for lock, t in zip(self._locks, self._tables):
+            with lock:
+                out["active"] += sum(1 for l in t._leases.values() if l.live)
+        return out

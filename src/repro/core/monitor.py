@@ -170,6 +170,18 @@ class MonitorAgent:
             "ksa_result_commit_seconds",
             "Result publish -> monitor ingestion (commit) latency, "
             "per resource class", labels=("cls",))
+        # per-class histogram children, interned once instead of a
+        # labels() dict round trip per ingested result
+        self._h_commit_cls: dict = {}
+        # eviction sweeps take every group's lock; once per second is
+        # plenty against the default multi-second session timeout —
+        # sweeping at the 5ms poll tick just adds group-lock traffic. The
+        # sweep quantum must stay a small fraction of the session timeout,
+        # though: records stranded in a dead member's partitions are only
+        # releasable after eviction, and every extra watchdog period they
+        # stay stranded burns a resubmit out of the attempt budget.
+        self._evict_interval_s = min(1.0, broker.session_timeout_s / 8.0)
+        self._next_evict = 0.0
 
     # -- counter views (registry-backed; names predate repro.obs) ----------
 
@@ -272,8 +284,12 @@ class MonitorAgent:
                 e.last_update = now
                 self._c["results_handled"].inc()
                 # commit span: result published -> accepted here (terminal)
-                self._h_commit.labels(cls=self._task_class(e.task)).observe(
-                    max(0.0, now - res.ts))
+                cls = self._task_class(e.task)
+                h = self._h_commit_cls.get(cls)
+                if h is None:
+                    h = self._h_commit_cls[cls] = self._h_commit.labels(
+                        cls=cls)
+                h.observe(max(0.0, now - res.ts))
                 self.broker.spans.add(res.task_id, "commit", res.ts, now,
                                       attempt=res.attempt,
                                       agent=res.agent_id,
@@ -380,9 +396,19 @@ class MonitorAgent:
                     # never happened — _maybe_resubmit's newer-lease guard
                     # keeps this from duplicating a healthy requeue.
                     stale_for = now - e.last_update
+                    deadline = self.task_timeout_s
+                    if e.status == TaskStatus.SUBMITTED.value:
+                        # no agent has accepted the record yet: it may be
+                        # stranded in a dead member's partitions, which the
+                        # broker only reassigns at session expiry. Waiting
+                        # out that delivery horizon before resubmitting
+                        # keeps the attempt budget for *executed* attempts
+                        # instead of burning it on duplicates of a record
+                        # that was never deliverable in the first place.
+                        deadline += self.broker.session_timeout_s
                     if e.status == TaskStatus.TIMEOUT.value:
                         self._maybe_resubmit(e, reason="timeout")
-                    elif stale_for > self.task_timeout_s and \
+                    elif stale_for > deadline and \
                             stale_for > self._deadline_for(e.task.task_id):
                         self._maybe_resubmit(e, reason="timeout")
 
@@ -425,7 +451,10 @@ class MonitorAgent:
                     self._consumer.commit()
                 self._watchdog()
                 self._maybe_compact()
-                self.broker.evict_expired_members()
+                now = time.time()
+                if now >= self._next_evict:
+                    self._next_evict = now + self._evict_interval_s
+                    self.broker.evict_expired_members()
             except Exception:  # pragma: no cover - defensive
                 log.exception("monitor %s loop error", self.monitor_id)
                 time.sleep(self.poll_interval_s)

@@ -38,6 +38,7 @@ Naming/label conventions used across the repo (documented for scrapers):
 from __future__ import annotations
 
 import bisect
+import functools
 import threading
 from collections import deque
 from typing import Callable, Iterable, Mapping, Sequence
@@ -65,12 +66,18 @@ DEFAULT_BUCKETS: tuple = (
 _SAMPLE_RING = 512
 
 
+@functools.lru_cache(maxsize=4096)
 def topic_class(topic: str) -> str:
     """Resource-class label for a task topic.
 
     Per-class topics are ``PREFIX-new.<cls>`` (see
     :func:`repro.core.scheduling.class_topic`); the paper's flat layout uses
     the bare ``PREFIX-new``, which we label ``"flat"``.
+
+    Cached per topic name: the broker grant path and the queue-stat/metric
+    label sites call this per record, and a deployment has a handful of
+    distinct topics — the parse should run once per topic, not once per
+    task (the cache bound only matters for pathological topic churn).
     """
     base, sep, cls = topic.rpartition("-new.")
     if sep and base and cls:
@@ -145,6 +152,23 @@ class Histogram:
             self._count += 1
             self._ring.append(v)
 
+    def observe_many(self, values: Sequence[float]) -> None:
+        """Batched observe: one lock hold for N samples. The broker's
+        vectorized grant path records a whole lease batch's queue waits
+        here instead of re-entering the lock per record."""
+        if not values:
+            return
+        vs = [float(v) for v in values]
+        with self._lock:
+            counts, uppers = self._counts, self._uppers
+            total = 0.0
+            for v in vs:
+                counts[bisect.bisect_left(uppers, v)] += 1
+                total += v
+            self._sum += total
+            self._count += len(vs)
+            self._ring.extend(vs)
+
     @property
     def count(self) -> int:
         return self._count
@@ -185,6 +209,9 @@ class _NullHistogram:
     __slots__ = ()
 
     def observe(self, value: float) -> None:
+        pass
+
+    def observe_many(self, values: Sequence[float]) -> None:
         pass
 
     count = 0
@@ -247,6 +274,9 @@ class Family:
 
     def observe(self, value) -> None:
         self._default().observe(value)
+
+    def observe_many(self, values) -> None:
+        self._default().observe_many(values)
 
     @property
     def value(self):

@@ -69,6 +69,40 @@ class SpanStore:
                 return
             spans.append(span)
 
+    def add_batch(self, items) -> None:
+        """Batched :meth:`add`: one lock hold for N spans. ``items`` is an
+        iterable of ``(task_id, span_dict)`` pairs where each span dict is
+        *prebuilt* by the caller — ``name``, ``task_id``, ``start``,
+        ``end``, ``dur_s`` plus any attributes; the store only stamps
+        ``seq`` and takes ownership of the dicts. LRU eviction runs once
+        per flush (the store may transiently exceed ``max_tasks`` by the
+        batch size mid-flush). The broker's vectorized grant/claim/commit
+        paths flush a whole lease batch's spans here instead of re-entering
+        the lock (and rebuilding each dict) per record."""
+        with self._lock:
+            spans_map = self._spans
+            max_spans = self.max_spans_per_task
+            seq = self._seq
+            for task_id, span in items:
+                if not task_id:
+                    continue
+                seq += 1
+                span["seq"] = seq
+                spans = spans_map.get(task_id)
+                if spans is None:
+                    spans_map[task_id] = [span]
+                    continue
+                if len(spans) >= max_spans:
+                    self.dropped_spans += 1
+                    continue
+                spans.append(span)
+            self._seq = seq
+            n_over = len(spans_map) - self.max_tasks
+            if n_over > 0:
+                for _ in range(n_over):
+                    spans_map.popitem(last=False)
+                self.evicted_tasks += n_over
+
     def trace(self, task_id: str) -> list:
         """All spans of a task (every attempt), ordered by start time then
         insertion order. Returns copies; ``[]`` for unknown tasks."""
@@ -98,6 +132,9 @@ class NullSpanStore:
 
     def add(self, task_id: str, name: str, start: float,
             end: float | None = None, **attrs) -> None:
+        pass
+
+    def add_batch(self, items) -> None:
         pass
 
     def trace(self, task_id: str) -> list:

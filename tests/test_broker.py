@@ -252,3 +252,187 @@ def test_property_crash_consume_schedule_no_loss(schedule):
                 processed.add(r.value["i"])
         consumer.commit()
     assert processed == set(range(produced))
+
+
+# ---------------------------------------------------------------------------
+# Sharded data plane: concurrency, lock ordering, starvation, legacy mode
+# ---------------------------------------------------------------------------
+
+def test_lock_order_violation_raises():
+    """debug_locks catches acquiring a group lock (rank 0) while holding a
+    partition lock (rank 2), and partition locks taken out of key order."""
+    from repro.core.broker import (LockOrderError, _RANK_GROUP,
+                                   _RANK_PARTITION, _OrderedLock)
+    grp = _OrderedLock(_RANK_GROUP, ("group", "g"))
+    p0 = _OrderedLock(_RANK_PARTITION, ("partition", "t", 0))
+    p1 = _OrderedLock(_RANK_PARTITION, ("partition", "t", 1))
+    # descending rank: partition -> group is illegal
+    with p0:
+        with pytest.raises(LockOrderError):
+            with grp:
+                pass
+    # same rank, descending key is illegal; ascending is fine
+    with p0:
+        with p1:
+            pass
+    with p1:
+        with pytest.raises(LockOrderError):
+            with p0:
+                pass
+    # legal order group -> partition, and re-entrancy
+    with grp:
+        with p0:
+            with p0:
+                pass
+
+
+def test_lease_rotation_prevents_partition_starvation():
+    """With max_records=1, successive lease calls rotate the start partition
+    so every partition's records are eventually granted (satellite a)."""
+    b = Broker(default_partitions=4)
+    for i in range(4):
+        b.produce("work", {"task_id": f"t{i}", "payload": i},
+                  key=f"t{i}", partition=i)
+    c = Consumer(b, ["work"], group_id="g")
+    seen_partitions = set()
+    for _ in range(4):
+        recs = b.lease_records("g", c.member_id, max_records=1)
+        assert len(recs) == 1
+        seen_partitions.add(recs[0].partition)
+        tid = recs[0].value["task_id"]
+        assert b.claim_start(tid, c.member_id, 0, threading.Event())
+        assert b.complete_lease(tid, c.member_id)
+    assert seen_partitions == {0, 1, 2, 3}
+
+
+def test_fetch_returns_snapshot_not_live_slice():
+    """Partition.fetch must hand back a copy: mutating broker state after the
+    fetch (truncation, more appends) must not alter the returned batch
+    (satellite c)."""
+    b = Broker(default_partitions=1)
+    for i in range(10):
+        b.produce("t", {"i": i})
+    tp = TopicPartition("t", 0)
+    batch = b.fetch(tp, 0, 100)
+    vals = [r.value["i"] for r in batch]
+    b.truncate_before(tp, 8)
+    for i in range(10, 15):
+        b.produce("t", {"i": i})
+    assert [r.value["i"] for r in batch] == vals == list(range(10))
+
+
+def test_single_lock_mode_smoke():
+    """single_lock=True restores the serialized legacy data plane but keeps
+    the same external behaviour (satellite e)."""
+    b = Broker(default_partitions=2, single_lock=True)
+    assert b.single_lock and b._master is not None
+    for i in range(6):
+        b.produce("work", {"task_id": f"s{i}", "payload": i}, key=f"s{i}")
+    c = Consumer(b, ["work"], group_id="g")
+    done = set()
+    for _ in range(10):
+        for r in b.lease_records("g", c.member_id, max_records=4):
+            tid = r.value["task_id"]
+            assert b.claim_start(tid, c.member_id, 0, threading.Event())
+            assert b.complete_lease(tid, c.member_id)
+            done.add(tid)
+        if len(done) == 6:
+            break
+    assert done == {f"s{i}" for i in range(6)}
+    st_ = b.lease_stats()
+    assert st_["granted"] == 6 and st_["completed"] == 6
+
+
+def test_stress_concurrent_producers_agents_revoker():
+    """N producers + M leasing agents + a revoker thread under debug_locks:
+    every task completes exactly once, no double grants, no lost tasks,
+    offsets stay monotone and queue/lease stats stay consistent."""
+    import random
+    b = Broker(default_partitions=8, debug_locks=True, session_timeout_s=1e9)
+    b.create_topic("work", partitions=8)
+    n_producers, per_producer, n_agents = 3, 150, 3
+    total = n_producers * per_producer
+    errors: list = []
+    completions: dict[str, int] = {}
+    comp_lock = threading.Lock()
+    stop = threading.Event()
+
+    def producer(pid: int) -> None:
+        try:
+            for i in range(per_producer):
+                b.produce("work", {"task_id": f"p{pid}-{i}", "payload": i},
+                          key=f"p{pid}-{i}")
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    def agent(aid: int) -> None:
+        try:
+            c = Consumer(b, ["work"], group_id="g")
+            idle = 0
+            while not stop.is_set():
+                recs = b.lease_records("g", c.member_id, max_records=16)
+                if not recs:
+                    idle += 1
+                    if idle > 200:
+                        break
+                    time.sleep(0.002)
+                    continue
+                idle = 0
+                for r in recs:
+                    tid = r.value["task_id"]
+                    if not b.claim_start(tid, c.member_id,
+                                         r.value.get("attempt", 0),
+                                         threading.Event()):
+                        continue  # revoked between grant and claim
+                    if b.complete_lease(tid, c.member_id):
+                        with comp_lock:
+                            completions[tid] = completions.get(tid, 0) + 1
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    def revoker() -> None:
+        try:
+            rng = random.Random(42)
+            n_revoked = 0
+            while not stop.is_set() and n_revoked < 40:
+                live = b.live_leases()
+                if live:
+                    victim = rng.choice(live)
+                    if b.revoke_lease(victim["task_id"], reason="preempt"):
+                        n_revoked += 1
+                time.sleep(0.003)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = ([threading.Thread(target=producer, args=(p,))
+                for p in range(n_producers)]
+               + [threading.Thread(target=agent, args=(a,))
+                  for a in range(n_agents)]
+               + [threading.Thread(target=revoker)])
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + 60.0
+    while time.monotonic() < deadline:
+        with comp_lock:
+            if len(completions) == total:
+                break
+        time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errors, errors
+    # exactly-once: every task completed, none more than once
+    assert len(completions) == total
+    assert all(v == 1 for v in completions.values()), \
+        {k: v for k, v in completions.items() if v != 1}
+    st_ = b.lease_stats()
+    assert st_["active"] == 0
+    assert st_["completed"] == total  # tombstones block double commits
+    qs = b.queue_stats("g", ["work"])["work"]
+    assert qs["produced"] >= total  # revoked tasks were re-produced
+    assert qs["consumed"] == qs["produced"]  # fully drained
+    assert qs["depth"] == 0
+    # offsets monotone and within the log
+    for p in range(8):
+        tp = TopicPartition("work", p)
+        assert 0 <= b.committed("g", tp) <= b.end_offset(tp)

@@ -1,4 +1,4 @@
-"""Observability overhead benchmark (ISSUE 6 acceptance: <= 5%).
+"""Observability overhead benchmarks.
 
 The obs layer (repro.obs) records a histogram observation and 4-6 spans per
 task on the control plane's hot path. The contract that keeps it always-on
@@ -8,11 +8,16 @@ by default is a hard overhead ceiling: tracing + metrics must cost at most
 *entire* cost, i.e. the worst case for the obs layer. Real campaigns (tasks
 that do work) amortize this to noise.
 
-Method: the same 64-task two-stage no-op campaign is driven through
-``KsaCluster(obs=True)`` and ``KsaCluster(obs=False)``; each mode takes the
-minimum of three runs (minimum, not mean — scheduler noise only ever adds
-time). The ratio is asserted ``<= 1.05`` and written to
-``BENCH_obs.json`` so the perf trajectory tracks the obs tax across PRs.
+The telemetry *plane* (ISSUE 9: publisher + collector + time-series store +
+alert engine, all streaming over the broker's PREFIX-telemetry topic) has
+its own ceiling: at most 10% end-to-end on the same no-op DAG, measured as
+``KsaCluster(telemetry=True)`` vs ``telemetry=False`` with obs on in both.
+
+Method: the same 64-task two-stage no-op campaign per mode; each mode takes
+the minimum of three runs (minimum, not mean — scheduler noise only ever
+adds time). The ratios are asserted and written to ``BENCH_obs.json``
+(``noop_dag_overhead`` / ``telemetry_overhead``) so the perf trajectory
+tracks both taxes across PRs.
 """
 from __future__ import annotations
 
@@ -21,11 +26,13 @@ import os
 import time
 
 from repro.cluster import KsaCluster
+from repro.obs import AlertRule, SloSpec
 from repro.pipeline import PipelineSpec, Stage
 
 N_TASKS = 64
 REPEATS = 3
 OVERHEAD_CEILING = 0.05
+TELEMETRY_CEILING = 0.10
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
 
@@ -37,9 +44,17 @@ def _spec() -> PipelineSpec:
     ])
 
 
-def _run_once(tag: str, obs: bool) -> float:
+def _run_once(tag: str, obs: bool, telemetry: bool = False) -> float:
+    slos = ()
+    if telemetry:
+        # a live rule so the alert engine actually evaluates every tick
+        slos = (AlertRule(
+            slo=SloSpec(name="qw-p95",
+                        metric="ksa_task_queue_wait_seconds:p95",
+                        objective=30.0, q=0.95)),)
     with KsaCluster(prefix=f"bo-{tag}", workers=1, worker_slots=4,
-                    poll_interval_s=0.002, obs=obs) as c:
+                    poll_interval_s=0.002, obs=obs, telemetry=telemetry,
+                    telemetry_interval_s=0.05, slos=slos) as c:
         t0 = time.perf_counter()
         cid = c.submit_campaign(_spec(), list(range(N_TASKS)))
         st = c.wait_campaign(cid, timeout=120.0)
@@ -51,6 +66,14 @@ def _run_once(tag: str, obs: bool) -> float:
             text = c.broker.metrics.render()
             assert "ksa_task_run_seconds_count" in text
             assert c.broker.spans.stats()["tasks"] >= N_TASKS
+        if telemetry:
+            # the plane must actually have streamed: records on the topic,
+            # series in the store, and at least one alert evaluation
+            c.telemetry_publisher.publish_once()
+            c.telemetry_collector.poll()
+            assert c.telemetry_store.sum("ksa_leases_completed_total") > 0
+            c.alert_engine.evaluate()
+            assert c.alerts()["rules"] == ["qw-p95"]
     return wall
 
 
@@ -64,6 +87,16 @@ def bench_obs_overhead() -> list[tuple[str, float, str]]:
         f"obs overhead {overhead:.1%} exceeds {OVERHEAD_CEILING:.0%} "
         f"(base {base:.3f}s, traced {traced:.3f}s)")
 
+    # telemetry-plane mode: publisher + collector + alert engine on vs off
+    # (obs on in both, so this isolates the streaming plane's tax)
+    streamed = min(_run_once(f"tp{i}", obs=True, telemetry=True)
+                   for i in range(REPEATS))
+    t_overhead = streamed / max(traced, 1e-9) - 1.0
+    assert t_overhead <= TELEMETRY_CEILING, (
+        f"telemetry overhead {t_overhead:.1%} exceeds "
+        f"{TELEMETRY_CEILING:.0%} (obs-only {traced:.3f}s, "
+        f"telemetry {streamed:.3f}s)")
+
     payload = {
         "noop_dag_overhead": {
             "tasks": N_TASKS,
@@ -73,6 +106,15 @@ def bench_obs_overhead() -> list[tuple[str, float, str]]:
             "wall_obs_on_s": round(traced, 4),
             "overhead_frac": round(overhead, 4),
             "ceiling": OVERHEAD_CEILING,
+        },
+        "telemetry_overhead": {
+            "tasks": N_TASKS,
+            "stages": 2,
+            "repeats": REPEATS,
+            "wall_telemetry_off_s": round(traced, 4),
+            "wall_telemetry_on_s": round(streamed, 4),
+            "overhead_frac": round(t_overhead, 4),
+            "ceiling": TELEMETRY_CEILING,
         },
     }
     with open(_JSON_PATH, "w") as fh:
@@ -84,4 +126,8 @@ def bench_obs_overhead() -> list[tuple[str, float, str]]:
          f"tracing+metrics on {N_TASKS}-task no-op DAG: "
          f"{traced:.3f}s vs {base:.3f}s untraced "
          f"({overhead:+.1%}; ceiling {OVERHEAD_CEILING:.0%})"),
+        ("telemetry_overhead", streamed / N_TASKS * 1e6,
+         f"publisher+collector+alerts on {N_TASKS}-task no-op DAG: "
+         f"{streamed:.3f}s vs {traced:.3f}s obs-only "
+         f"({t_overhead:+.1%}; ceiling {TELEMETRY_CEILING:.0%})"),
     ]

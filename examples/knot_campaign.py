@@ -30,6 +30,35 @@ history. The journal records, in per-campaign ``seq`` order::
     StageSkipped      {stage, task_id, index, dep_ids}    conditional edge
     BarrierReleased   {stage}                             join fired once
 
+Telemetry rides the broker the same way (``KsaCluster(telemetry=True)``):
+a :class:`~repro.obs.TelemetryPublisher` streams metric/span/event
+snapshots onto the durable ``PREFIX-telemetry`` topic, one record per
+tick, keyed by source::
+
+    {"kind": "telemetry", "v": 1, "source": ..., "site": ..., "seq": n,
+     "ts": ...,
+     "metrics": [{"name", "type", "labels", "value"}          # counter/gauge
+                 | {"name", "type": "histogram", "labels",
+                    "count", "sum", "p50", "p95", "p99"}],
+     "spans":  [...],       # new spans since the last tick
+     "events": [...]}       # new flight-recorder events since the last tick
+
+A :class:`~repro.obs.TelemetryCollector` (attached to the monitor) replays
+the topic via the same group-less ``Broker.read_from`` the journal uses
+and folds it into a queryable :class:`~repro.obs.TimeSeriesStore` —
+histograms become ``{name}_count``/``{name}_sum`` plus ``:p50/:p95/:p99``
+recording-rule series, so an SLO on queue-wait p95 targets
+``ksa_task_queue_wait_seconds:p95``. Like the journal, the topic is the
+source of truth: kill the monitor and a restarted collector rebuilds the
+exact same store from offset 0. ``GET /query`` / ``cluster.query(...)``
+aggregate it (``latest``/``rate``/``quantile``/``sum_by``/``points``);
+``SloSpec``/``AlertRule`` burn-rate rules evaluate against it
+(``GET /alerts``); the broker's always-on flight recorder keeps a bounded
+blackbox of grants/revocations/drains/spills that auto-dumps a
+post-mortem on a revocation storm, campaign FAILED, or firing alert
+(``GET /blackbox``, forced via ``cluster.dump_blackbox()``) — all shown
+at the end of this example.
+
 Lease lifecycle — how work is taken *back*
 ------------------------------------------
 Every task an agent accepts holds a broker-tracked lease
@@ -151,6 +180,7 @@ import urllib.request
 from repro.apps import knots  # registers knot_* scripts
 from repro.cluster import KsaCluster
 from repro.core import Broker
+from repro.obs import SloSpec
 
 
 def flat_baseline(broker: Broker, structures: int, batch_size: int,
@@ -256,6 +286,14 @@ def main() -> None:
         federated_main(args)
         return
 
+    # telemetry plane: stream metrics onto PREFIX-telemetry and hold the
+    # campaign to an SLO — queue-wait p95 under 15 s, tested with the
+    # SRE-style multi-window burn rate (GET /alerts shows firing rules)
+    telemetry_kw = dict(
+        telemetry=True,
+        slos=[SloSpec(name="queue-wait-p95",
+                      metric="ksa_task_queue_wait_seconds:p95",
+                      objective=15.0, q=0.95)])
     if args.autoscale:
         # -- elastic pools: the autoscaler grows/shrinks on class backlog --
         from repro.autoscale import AutoscaleConfig, PoolSpec
@@ -265,13 +303,15 @@ def main() -> None:
             autoscale=AutoscaleConfig(
                 pools=(PoolSpec("cpu", min_agents=1, max_agents=4, slots=2),
                        PoolSpec("gpu", min_agents=0, max_agents=2, slots=1)),
-                interval_s=0.02))
+                interval_s=0.02),
+            **telemetry_kw)
     else:
         # -- static pools: one simulated cluster + one workstation ---------
         cluster = KsaCluster(prefix="alphaknot", session_timeout_s=2.0,
                              slurm=dict(nodes=2, cpus_per_node=2,
                                         oversubscribe=2),
-                             pipeline_task_timeout_s=20.0, http=True)
+                             pipeline_task_timeout_s=20.0, http=True,
+                             **telemetry_kw)
     with cluster as c:
         spec = knots.knots_pipeline(args.batch_size, n_points=args.n_points,
                                     task_timeout_s=20.0,
@@ -349,6 +389,24 @@ def main() -> None:
             print(f"  {name:>9}: queue {s['queue_s']:6.2f}s  "
                   f"run {s['run_s']:6.2f}s  retry {s['retry_s']:5.2f}s  "
                   f"({s['tasks']} tasks, {s['retries']} retried)")
+
+        # telemetry plane (GET /query, /alerts, /blackbox): drain rate from
+        # the PREFIX-telemetry time series, the queue-wait SLO's verdict,
+        # and a forced flight-recorder post-mortem
+        c.telemetry_publisher.publish_once()  # flush the final snapshot
+        drain = c.query("ksa_leases_completed_total", agg="rate",
+                        window_s=max(10.0, res.elapsed_s))
+        p95 = c.query("ksa_task_queue_wait_seconds:p95", agg="latest")
+        print(f"telemetry (GET /query): drain rate "
+              f"{drain['result']:.1f} tasks/s, queue-wait p95 "
+              f"{p95['result'] if p95['result'] is None else round(p95['result'], 3)}s")
+        alerts = c.alerts()
+        print(f"SLO '{alerts['rules'][0]}' (queue-wait p95 <= 15s): "
+              f"{'FIRING ' + str(alerts['firing']) if alerts['firing'] else 'within objective'}")
+        dump = c.dump_blackbox("example")   # force a post-mortem snapshot
+        print(f"blackbox dump (GET /blackbox): trigger={dump['trigger']}, "
+              f"{len(dump['events'])} lifecycle events, "
+              f"counts {dump['counts']}")
 
         if args.autoscale:
             with urllib.request.urlopen(

@@ -41,9 +41,9 @@ from typing import TYPE_CHECKING, Any
 
 from repro.core.agents import AgentBase
 from repro.core.scheduling import class_topic
+from repro.obs import TimeSeriesStore
 
 from .policy import AutoscaleConfig, AutoscaleError, PoolSignal, PoolSpec
-from .rate import RateTracker
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.cluster import KsaCluster
@@ -63,12 +63,11 @@ class _PoolState:
         self.last_scale_up = _LONG_AGO
         self.last_scale_down = _LONG_AGO
         self.idle_since: float | None = None
-        # (ts, backlog, agents, in_flight) ring — the /autoscale history
-        self.history: deque[tuple[float, int, int, int]] = \
-            deque(maxlen=history)
-        # consumed-counter samples for the drain-rate estimate (shared
-        # primitive with the federation spillover controller)
-        self.consumed = RateTracker(rate_window_s, history)
+        # backlog/agents/in_flight/consumed samples live in the
+        # controller's TimeSeriesStore (``src="autoscale"`` series), not
+        # in per-pool rings — history and drain rate are store queries
+        self.history_len = history
+        self.rate_window_s = rate_window_s
         self.scale_ups = 0
         self.scale_downs = 0
         # when the class backlog last went 0 -> nonzero; the age of this
@@ -86,9 +85,23 @@ class AutoscaleController:
     tests and embedders.
     """
 
-    def __init__(self, cluster: "KsaCluster", config: AutoscaleConfig):
+    def __init__(self, cluster: "KsaCluster", config: AutoscaleConfig,
+                 store: TimeSeriesStore | None = None):
         self.cluster = cluster
         self.config = config
+        # sensing is store-backed (ISSUE 9): samples land in the cluster's
+        # telemetry TimeSeriesStore when the plane is on, or a private one
+        # otherwise — either way a lookahead policy reads history from the
+        # same query surface operators do, and swapping it in is a pure
+        # policy change. The ``src="autoscale"`` label keeps these series
+        # disjoint from registry-snapshot series folded by the collector.
+        if store is None:
+            store = getattr(cluster, "telemetry_store", None)
+        if store is None:
+            store = TimeSeriesStore(
+                resolution_s=max(0.01, min(0.25, config.interval_s / 2)),
+                max_buckets=max(64, 4 * config.history))
+        self.store = store
         classes = getattr(cluster.placement, "classes", None)
         if classes is not None:
             known = set(classes())
@@ -176,11 +189,19 @@ class AutoscaleController:
                     pool.pressure_since = None
                 elif pool.pressure_since is None:
                     pool.pressure_since = now
-                pool.consumed.sample(now, stats["consumed"])
                 in_flight = 0
                 for a in pool.agents:
                     s = a.stats()
                     in_flight += s["in_flight"] + s["deferred_pending"]
+                lbl = {"pool": cls, "src": "autoscale"}
+                self.store.ingest_many([
+                    ("ksa_pool_consumed_total", lbl, now,
+                     stats["consumed"], "counter"),
+                    ("ksa_pool_backlog", lbl, now, backlog, "gauge"),
+                    ("ksa_pool_agents", lbl, now, len(pool.agents),
+                     "gauge"),
+                    ("ksa_pool_in_flight", lbl, now, in_flight, "gauge"),
+                ])
                 if backlog > 0 or in_flight > 0:
                     pool.idle_since = None
                 elif pool.idle_since is None:
@@ -188,7 +209,9 @@ class AutoscaleController:
                 sig = PoolSignal(
                     cls=cls, backlog=backlog, in_flight=in_flight,
                     agents=len(pool.agents), slots=pool.spec.slots,
-                    drain_rate=pool.consumed.rate(now),
+                    drain_rate=self.store.rate(
+                        "ksa_pool_consumed_total", lbl,
+                        pool.rate_window_s, now),
                     idle_for_s=(0.0 if pool.idle_since is None
                                 else now - pool.idle_since),
                     since_scale_up_s=now - pool.last_scale_up,
@@ -209,8 +232,6 @@ class AutoscaleController:
                 elif desired < sig.agents:
                     self._shrink(pool, sig.agents - desired,
                                  reason=f"idle {sig.idle_for_s:.2f}s")
-                pool.history.append((now, backlog, len(pool.agents),
-                                     in_flight))
                 self._g_agents.labels(pool=cls).set(len(pool.agents))
                 self._g_backlog.labels(pool=cls).set(backlog)
         self._h_tick.observe(time.perf_counter() - t_tick)
@@ -281,13 +302,32 @@ class AutoscaleController:
         with self._lock:
             return sum(p.scale_downs for p in self._pools.values())
 
+    def pool_history(self, cls: str, *,
+                     limit: int | None = None) -> list[list]:
+        """Store-backed ``[[ts, backlog, agents, in_flight], ...]`` rows
+        for one pool, joined across the ``src="autoscale"`` series on the
+        shared tick timestamp (downsampled to the store's bucket
+        resolution)."""
+        lbl = {"pool": cls, "src": "autoscale"}
+        backlog = self.store.points("ksa_pool_backlog", lbl)
+        agents = dict(self.store.points("ksa_pool_agents", lbl))
+        in_flight = dict(self.store.points("ksa_pool_in_flight", lbl))
+        rows = [[round(ts, 3), int(b), int(agents.get(ts, 0)),
+                 int(in_flight.get(ts, 0))] for ts, b in backlog]
+        if limit is not None:
+            rows = rows[-limit:]
+        return rows
+
     def status(self, *, history: int = 64) -> dict:
         """The ``/autoscale`` payload: per-pool membership, live signal
         components, recent backlog history, and the decision log."""
+        now = time.time()
         with self._lock:
             pools: dict[str, Any] = {}
             for cls, pool in self._pools.items():
-                hist = list(pool.history)[-history:]
+                lbl = {"pool": cls, "src": "autoscale"}
+                hist = self.pool_history(
+                    cls, limit=min(history, pool.history_len))
                 pools[cls] = {
                     "kind": pool.spec.kind,
                     "min": pool.spec.min_agents,
@@ -298,11 +338,12 @@ class AutoscaleController:
                     "agent_ids": [a.agent_id for a in pool.agents],
                     "backlog": hist[-1][1] if hist else 0,
                     "in_flight": hist[-1][3] if hist else 0,
-                    "drain_rate": pool.consumed.rate(time.time()),
+                    "drain_rate": self.store.rate(
+                        "ksa_pool_consumed_total", lbl,
+                        pool.rate_window_s, now),
                     "scale_ups": pool.scale_ups,
                     "scale_downs": pool.scale_downs,
-                    "history": [[round(ts, 3), b, a, f]
-                                for ts, b, a, f in hist],
+                    "history": hist,
                 }
             return {
                 "ticks": self.ticks,

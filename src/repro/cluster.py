@@ -33,11 +33,14 @@ from typing import TYPE_CHECKING, Any, Callable, Iterable, Mapping
 from repro.core.broker import Broker
 from repro.core.agents import AgentBase, ClusterAgent, WorkerAgent
 from repro.core.lease import RevokeReason
+from repro.core.messages import topic_names
 from repro.core.monitor import MonitorAgent, TaskEntry
 from repro.core.scheduling import (LeasePolicy, PlacementPolicy,
                                    ResourceClassPolicy, ResourceProfile)
 from repro.core.simslurm import SimSlurm
 from repro.core.submitter import Submitter
+from repro.obs import (AlertEngine, AlertRule, SloSpec, TelemetryCollector,
+                       TelemetryPublisher, TimeSeriesStore)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.autoscale import AutoscaleConfig, AutoscaleController
@@ -90,6 +93,9 @@ class KsaCluster:
                  default_partitions: int = 4,
                  partitioner: str = "hash",
                  obs: bool = True,
+                 telemetry: bool = False,
+                 telemetry_interval_s: float = 0.25,
+                 slos: Iterable[SloSpec | AlertRule] = (),
                  site: str = "",
                  single_lock: bool = False,
                  debug_locks: bool = False,
@@ -135,6 +141,17 @@ class KsaCluster:
             broker = Broker(**broker_kw)
         self.broker = broker
 
+        # telemetry plane (ISSUE 9, opt-in): periodic metric/span/event
+        # snapshots on the durable PREFIX-telemetry topic, folded into a
+        # queryable TimeSeriesStore and burn-rate-alerted against `slos`
+        self._telemetry_enabled = telemetry
+        self._telemetry_interval_s = telemetry_interval_s
+        self._slos = tuple(slos)
+        self.telemetry_store: TimeSeriesStore | None = None
+        self.telemetry_publisher: TelemetryPublisher | None = None
+        self.telemetry_collector: TelemetryCollector | None = None
+        self.alert_engine: AlertEngine | None = None
+
         self.agents: list[AgentBase] = []
         self._slurms: list[SimSlurm] = []     # owned simulated clusters
         self.monitor: MonitorAgent | None = None
@@ -165,6 +182,10 @@ class KsaCluster:
                 self.submitter = Submitter(self.broker, self.prefix,
                                            placement=self.placement,
                                            partitioner=self.partitioner)
+                # flight-recorder dumps carry live control-plane context
+                self.broker.blackbox.context_fn = self._blackbox_context
+                if self._telemetry_enabled:
+                    self._start_telemetry()
                 if self._monitor_enabled:
                     kw = dict(task_timeout_s=self.task_timeout_s,
                               max_attempts=self.max_attempts,
@@ -181,6 +202,10 @@ class KsaCluster:
                             self._auto_compact,
                             interval_s=self.compact_interval_s,
                             every_events=self.compact_every_events)
+                    if self.telemetry_collector is not None:
+                        self.monitor.attach_telemetry(
+                            self.telemetry_collector, self.alert_engine,
+                            interval_s=self._telemetry_interval_s)
                 for _ in range(self._spec["workers"]):
                     self.add_worker(slots=self._spec["worker_slots"])
                 for _ in range(self._spec["gpu_workers"]):
@@ -203,6 +228,42 @@ class KsaCluster:
                 raise
         return self
 
+    def _start_telemetry(self) -> None:
+        """Build the telemetry plane: store + collector + alert engine +
+        publisher, all sharing the durable ``PREFIX-telemetry`` topic.
+        Called under the facade lock from :meth:`start`, before the
+        autoscaler is built so its sensing lands in the same store."""
+        topic = topic_names(self.prefix)["telemetry"]
+        self.telemetry_store = TimeSeriesStore()
+        self.telemetry_collector = TelemetryCollector(
+            self.broker, topic, store=self.telemetry_store, site=self.site)
+        rules = [r if isinstance(r, AlertRule) else AlertRule(slo=r)
+                 for r in self._slos]
+        self.alert_engine = AlertEngine(
+            self.telemetry_store, rules, registry=self.broker.metrics,
+            on_fire=self._on_alert_fire)
+        self.telemetry_publisher = TelemetryPublisher(
+            self.broker, topic, source=self.site or self.prefix,
+            site=self.site, interval_s=self._telemetry_interval_s)
+        self.telemetry_publisher.start()
+
+    def _blackbox_context(self) -> dict:
+        """Live control-plane context stitched into every flight-recorder
+        dump: the unified lease ledger plus whatever alerts are firing."""
+        ctx: dict[str, Any] = {"leases": self.broker.lease_stats()}
+        engine = self.alert_engine
+        if engine is not None:
+            ctx["alerts"] = engine.active()
+        return ctx
+
+    def _on_alert_fire(self, rule: str, ev: dict) -> None:
+        """Alert-engine hook: a firing alert is a trigger condition — it
+        is recorded as a lifecycle event and latches a post-mortem dump."""
+        self.broker.blackbox.record(
+            "alert", rule=rule, burn_long=ev.get("burn_long"),
+            burn_short=ev.get("burn_short"), metric=ev.get("metric"))
+        self.broker.blackbox.dump(f"alert:{rule}", {"evaluation": ev})
+
     def stop(self, timeout: float = 5.0) -> None:
         """Graceful, idempotent teardown in reverse dependency order:
         autoscaler first (stop resizing pools), then the pipeline agent
@@ -224,6 +285,10 @@ class KsaCluster:
             pipeline.stop(timeout=timeout)
         for a in agents:
             a.stop(timeout=timeout)
+        publisher = self.telemetry_publisher
+        if publisher is not None:
+            # final flush before the monitor (and broker) go away
+            publisher.stop(timeout=timeout)
         if monitor is not None:
             monitor.stop(timeout=timeout)
         for s in slurms:
@@ -506,7 +571,45 @@ class KsaCluster:
             out["preemptions"] = pipeline.preemptions
         if self.autoscaler is not None:
             out["autoscale"] = self.autoscaler.status()
+        if self.alert_engine is not None:
+            out["alerts"] = self.alert_engine.active()
         return out
+
+    def query(self, name: str, *, agg: str = "latest",
+              labels: dict[str, str] | None = None, window_s: float = 60.0,
+              q: float | None = None, by: str | None = None) -> dict:
+        """Query the telemetry time-series store — same semantics the
+        monitor serves at ``GET /query``. ``agg`` is one of ``latest``,
+        ``rate``, ``quantile`` (pass ``q``), ``sum_by`` (pass ``by``),
+        ``sum`` or ``points``. Requires ``telemetry=True``; in a federation
+        the home store carries ``site``-labelled series from every feed,
+        so ``agg="sum_by", by="site"`` answers across sites."""
+        store = self.telemetry_store
+        if store is None:
+            raise RuntimeError(
+                "telemetry plane is off; construct KsaCluster(telemetry=True)")
+        # poll eagerly so a query right after an event sees it without
+        # waiting for the monitor's telemetry tick
+        if self.telemetry_collector is not None:
+            self.telemetry_collector.poll()
+        return store.query(name, agg=agg, labels=labels,
+                           window_s=window_s, q=q, by=by)
+
+    def alerts(self) -> dict:
+        """SLO alert-engine status: per-rule state, firing set, history."""
+        if self.alert_engine is None:
+            raise RuntimeError(
+                "no alert engine; construct KsaCluster(telemetry=True)")
+        if self.telemetry_collector is not None:
+            self.telemetry_collector.poll()
+        self.alert_engine.evaluate()
+        return self.alert_engine.status()
+
+    def dump_blackbox(self, trigger: str = "manual") -> dict:
+        """Force a flight-recorder post-mortem dump and return it. Works
+        with or without the telemetry plane — the blackbox rides on the
+        broker and records lifecycle events unconditionally."""
+        return self.broker.blackbox.dump(trigger)
 
     def metrics_text(self) -> str:
         """Prometheus text-format snapshot of the broker's metrics registry

@@ -497,6 +497,9 @@ class AgentBase:
         with self._lock:
             if timeout_s is not None:
                 self._drain_deadline = time.time() + timeout_s
+        self.broker.blackbox.record(
+            "drain", agent=self.agent_id, in_flight=self._in_flight(),
+            deferred=len(self._deferred), timeout_s=timeout_s)
         self._draining.set()
 
     def _drain_tick(self) -> bool:

@@ -113,7 +113,8 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import msgpack
 
-from repro.obs import MetricsRegistry, NullSpanStore, SpanStore, topic_class
+from repro.obs import (FlightRecorder, MetricsRegistry, NullSpanStore,
+                       SpanStore, topic_class)
 
 from .lease import ShardedLeaseTable
 
@@ -463,6 +464,10 @@ class Broker:
             "ksa_leases_active",
             lambda: self.lease_stats()["active"],
             "Live (GRANTED/RUNNING) leases")
+        # crash flight recorder (repro.obs.blackbox): always on — event
+        # appends are one deque op — so post-mortems exist even when the
+        # telemetry plane is not enabled
+        self.blackbox = FlightRecorder()
         self._lease_table = ShardedLeaseTable(
             metrics=self.metrics,
             shards=1 if self.single_lock else max(1, int(lease_shards)),
@@ -1005,6 +1010,11 @@ class Broker:
             h_wait.observe_many(vals)
         if spans:
             self.spans.add_batch(spans)
+            # blackbox: grants are recorded count-level per batch — one
+            # ring slot per poll, not per task, so grant volume cannot
+            # wash the interesting (revocation/drain) events out
+            self.blackbox.record("grants", holder=member_id,
+                                 count=len(spans))
 
     def _topic_obs(self, topic: str) -> tuple:
         """Cached ``(cls, queue-wait, claim, run)`` histogram children for
@@ -1253,6 +1263,11 @@ class Broker:
                        lease.revoked_at, lease.revoked_at,
                        attempt=lease.attempt, holder=lease.holder,
                        reason=reason, requeued=requeue)
+        # blackbox: every revocation, with its reason — the flight
+        # recorder's storm detector auto-dumps on a burst of these
+        self.blackbox.record("revocation", task_id=task_id, reason=reason,
+                             holder=lease.holder, attempt=lease.attempt,
+                             requeued=requeue)
         return True
 
     def register_holder_site(self, member_id: str, site: str,

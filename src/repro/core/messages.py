@@ -58,13 +58,19 @@ def topic_names(prefix: str) -> Mapping[str, str]:
     (:mod:`repro.core.scheduling`) routes tasks to per-resource-class
     children of it (``PREFIX-new.cpu``, ``PREFIX-new.gpu``, ...); the flat
     :class:`~repro.core.scheduling.SingleTopicPolicy` uses the base topic
-    directly, which is the paper's original layout."""
+    directly, which is the paper's original layout.
+
+    ``telemetry`` is the telemetry plane's durable stream
+    (:mod:`repro.obs.telemetry`): periodic metric/span/event snapshot
+    records, replayable like the journal so a restarted collector
+    rebuilds its time-series store from the topic."""
     return {
         "new": f"{prefix}-new",
         "jobs": f"{prefix}-jobs",
         "done": f"{prefix}-done",
         "error": f"{prefix}-error",
         "campaigns": f"{prefix}-campaigns",
+        "telemetry": f"{prefix}-telemetry",
     }
 
 

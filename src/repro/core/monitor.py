@@ -47,7 +47,14 @@ ROUTES = (
     "/sites",
     "/metrics",
     "/trace/<task_id>",
+    "/query",
+    "/alerts",
+    "/blackbox",
 )
+
+# /query accepts these aggregations (validated before hitting the store so
+# a bad request is a structured 400, not a 500)
+_QUERY_AGGS = ("latest", "rate", "quantile", "sum_by", "sum", "points")
 
 
 @dataclass
@@ -149,6 +156,13 @@ class MonitorAgent:
         # federation attachments: /sites payload + federated /metrics text
         self._federation_source: Any = None
         self._federation_metrics: Any = None
+        # telemetry plane attachments (attach_telemetry): the collector is
+        # polled (and the alert engine evaluated) from the monitor loop;
+        # /query, /alerts and /blackbox serve from them.
+        self._telemetry_collector: Any = None
+        self._alert_engine: Any = None
+        self._telemetry_interval_s = 0.25
+        self._next_telemetry = 0.0
         # scheduled journal compaction (attach_compaction): a periodic /
         # event-count trigger that invokes the pipeline's compact() from
         # this loop so operators never have to remember the maintenance.
@@ -451,6 +465,7 @@ class MonitorAgent:
                     self._consumer.commit()
                 self._watchdog()
                 self._maybe_compact()
+                self._telemetry_tick()
                 now = time.time()
                 if now >= self._next_evict:
                     self._next_evict = now + self._evict_interval_s
@@ -585,6 +600,61 @@ class MonitorAgent:
             source = self._autoscale_source
         return None if source is None else source()
 
+    # -- telemetry plane (ISSUE 9) ----------------------------------------------
+
+    def attach_telemetry(self, collector: Any, engine: Any = None, *,
+                         interval_s: float = 0.25) -> None:
+        """Register the cluster's :class:`~repro.obs.TelemetryCollector`
+        (and optionally its :class:`~repro.obs.AlertEngine`): the monitor
+        loop polls the collector's feeds and evaluates the alert rules
+        every ``interval_s``, and ``GET /query`` / ``GET /alerts`` serve
+        from them. Detach with ``attach_telemetry(None)``."""
+        with self._lock:
+            self._telemetry_collector = collector
+            self._alert_engine = engine
+            self._telemetry_interval_s = interval_s
+            self._next_telemetry = 0.0
+
+    def _telemetry_tick(self) -> None:
+        with self._lock:
+            collector = self._telemetry_collector
+            engine = self._alert_engine
+            now = time.time()
+            if collector is None or now < self._next_telemetry:
+                return
+            self._next_telemetry = now + self._telemetry_interval_s
+        try:
+            collector.poll()
+            if engine is not None:
+                engine.evaluate(now)
+        except Exception:  # pragma: no cover - defensive
+            log.exception("monitor %s telemetry tick failed",
+                          self.monitor_id)
+
+    def query(self, name: str, *, agg: str = "latest",
+              labels: dict | None = None, window_s: float = 60.0,
+              q: float | None = None, by: str | None = None) -> dict | None:
+        """Run one :meth:`~repro.obs.TimeSeriesStore.query` against the
+        attached collector's store (None when no telemetry is attached;
+        ``ValueError`` propagates for malformed requests)."""
+        with self._lock:
+            collector = self._telemetry_collector
+        if collector is None:
+            return None
+        return collector.store.query(name, agg=agg, labels=labels,
+                                     window_s=window_s, q=q, by=by)
+
+    def alerts(self) -> dict | None:
+        """The ``GET /alerts`` payload (None without an alert engine)."""
+        with self._lock:
+            engine = self._alert_engine
+        return None if engine is None else engine.status()
+
+    def blackbox(self) -> dict:
+        """The ``GET /blackbox`` payload: the broker flight recorder's
+        recent events and retained post-mortem dumps."""
+        return self.broker.blackbox.snapshot()
+
     def campaigns(self) -> dict[str, dict]:
         """Latest per-campaign progress snapshots (per-stage done/in-flight/
         failed counters published by pipeline agents), each annotated with
@@ -656,7 +726,62 @@ class MonitorAgent:
                 self.wfile.write(raw)
 
             def do_GET(self) -> None:  # noqa: N802 - http.server API
-                parts = [p for p in self.path.split("/") if p]
+                # any handler bug must surface as structured JSON, never
+                # as a stack trace over a half-written response
+                try:
+                    self._route()
+                except Exception as exc:  # pragma: no cover - defensive
+                    log.exception("monitor %s: %s failed",
+                                  mon.monitor_id, self.path)
+                    try:
+                        self._send(500, {"error": "internal error",
+                                         "detail": str(exc)})
+                    except Exception:
+                        pass
+
+            def _query_params(self) -> dict:
+                """Parse /query parameters; raises ValueError with a
+                user-facing message on anything malformed."""
+                from urllib.parse import parse_qsl
+                _, _, qs = self.path.partition("?")
+                params = dict(parse_qsl(qs, keep_blank_values=True))
+                name = params.pop("name", "")
+                if not name:
+                    raise ValueError("missing required parameter: name")
+                agg = params.pop("agg", "latest")
+                if agg not in _QUERY_AGGS:
+                    raise ValueError(
+                        f"unknown agg {agg!r} (one of {_QUERY_AGGS})")
+                out: dict = {"name": name, "agg": agg}
+                for key, cast in (("window_s", float), ("q", float)):
+                    if key in params:
+                        try:
+                            out[key] = cast(params.pop(key))
+                        except ValueError:
+                            raise ValueError(
+                                f"parameter {key} must be a number")
+                if "by" in params:
+                    out["by"] = params.pop("by")
+                labels = {k[2:]: v for k, v in params.items()
+                          if k.startswith("l.") and len(k) > 2}
+                for k in list(params):
+                    if k.startswith("l."):
+                        params.pop(k)
+                if params:
+                    raise ValueError(
+                        f"unknown parameters: {sorted(params)} (labels "
+                        f"filter with l.<label>=<value>)")
+                if labels:
+                    out["labels"] = labels
+                if agg == "quantile" and "q" not in out:
+                    raise ValueError("agg=quantile requires q")
+                if agg == "sum_by" and "by" not in out:
+                    raise ValueError("agg=sum_by requires by=<label>")
+                return out
+
+            def _route(self) -> None:
+                path, _, _ = self.path.partition("?")
+                parts = [p for p in path.split("/") if p]
                 if not parts:
                     self._send(200, {"service": "ksa-monitor",
                                      "monitor_id": mon.monitor_id,
@@ -706,6 +831,33 @@ class MonitorAgent:
                         self._send(404, {"error": "no federation attached"})
                     else:
                         self._send(200, payload)
+                elif parts == ["query"]:
+                    try:
+                        kw = self._query_params()
+                    except ValueError as exc:
+                        self._send(400, {"error": "bad query",
+                                         "detail": str(exc)})
+                        return
+                    name = kw.pop("name")
+                    try:
+                        payload = mon.query(name, **kw)
+                    except ValueError as exc:
+                        self._send(400, {"error": "bad query",
+                                         "detail": str(exc)})
+                        return
+                    if payload is None:
+                        self._send(404, {"error": "no telemetry attached"})
+                    else:
+                        self._send(200, payload)
+                elif parts == ["alerts"]:
+                    payload = mon.alerts()
+                    if payload is None:
+                        self._send(404, {"error": "no alert engine "
+                                                  "attached"})
+                    else:
+                        self._send(200, payload)
+                elif parts == ["blackbox"]:
+                    self._send(200, mon.blackbox())
                 else:
                     self._send(404, {"error": "unknown endpoint",
                                      "endpoints": list(ROUTES)})

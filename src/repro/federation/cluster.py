@@ -40,7 +40,7 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 
 from repro.cluster import KsaCluster
 from repro.core.lease import RevokeReason
-from repro.core.messages import Resources
+from repro.core.messages import Resources, topic_names
 from repro.core.scheduling import ResourceProfile
 from repro.obs import merge_renders
 
@@ -71,7 +71,10 @@ class FederatedCluster:
                  max_attempts: int = 3,
                  poll_interval_s: float = 0.01,
                  extra_classes: tuple[str, ...] = (),
-                 gpu_takes_cpu: bool = True):
+                 gpu_takes_cpu: bool = True,
+                 telemetry: bool = False,
+                 telemetry_interval_s: float = 0.25,
+                 slos: Sequence[Any] = ()):
         self.sites = tuple(sites)
         if not self.sites:
             raise ValueError("a federation needs at least one site")
@@ -88,16 +91,19 @@ class FederatedCluster:
         self.router = SiteRouter(names, home=self.home_site.name,
                                  extra_classes=extra_classes,
                                  gpu_takes_cpu=gpu_takes_cpu)
+        self._telemetry_enabled = telemetry
         self.home = self._build_cluster(
             self.home_site, prefix=prefix, placement=self.router,
             http=http, task_timeout_s=task_timeout_s,
-            max_attempts=max_attempts)
+            max_attempts=max_attempts, telemetry=telemetry,
+            telemetry_interval_s=telemetry_interval_s, slos=tuple(slos))
         self.clusters: dict[str, KsaCluster] = {self.home_site.name: self.home}
         for s in self.remote_sites:
             self.clusters[s.name] = self._build_cluster(
                 s, prefix=f"{prefix}-{s.name}", placement=None,
                 http=False, task_timeout_s=task_timeout_s,
-                max_attempts=max_attempts)
+                max_attempts=max_attempts, telemetry=telemetry,
+                telemetry_interval_s=telemetry_interval_s)
         self._spill_cfg = spillover
         self.spillover: SpilloverController | None = None
         self._bridges: list[SiteBridgeAgent] = []
@@ -129,6 +135,17 @@ class FederatedCluster:
             try:
                 for cluster in self.clusters.values():
                     cluster.start()
+                if self._telemetry_enabled:
+                    # the home collector tails every remote site's telemetry
+                    # topic directly, so one home /query answers
+                    # sum_by("site") across the federation — no extra
+                    # merge protocol on top of the metrics one
+                    for s in self.remote_sites:
+                        remote = self.clusters[s.name]
+                        self.home.telemetry_collector.add_feed(
+                            remote.broker,
+                            topic_names(remote.prefix)["telemetry"],
+                            site=s.name)
                 for s in self.remote_sites:
                     self._start_bridge(
                         s, role="affinity",
@@ -310,6 +327,20 @@ class FederatedCluster:
         bridge traffic across the whole federation."""
         return merge_renders({name: c.broker.metrics.render()
                               for name, c in self.clusters.items()})
+
+    def query(self, name: str, **kw: Any) -> dict:
+        """Query the home telemetry store — carries ``site``-labelled
+        series from every federated feed, so ``agg="sum_by", by="site"``
+        answers one question across the whole federation."""
+        return self.home.query(name, **kw)
+
+    def alerts(self) -> dict:
+        """Home alert-engine status (rules evaluate over federated series)."""
+        return self.home.alerts()
+
+    def dump_blackbox(self, trigger: str = "manual") -> dict:
+        """Force a post-mortem dump of the home flight recorder."""
+        return self.home.dump_blackbox(trigger)
 
     def _sites_payload(self) -> dict:
         """The home monitor's ``GET /sites`` payload."""

@@ -216,6 +216,11 @@ class SpilloverController:
         self._decisions.append({"ts": time.time(), "cls": cls, "site": site,
                                 "action": action, "reason": reason})
         self._c_spill.labels(cls=cls, site=site, action=action).inc()
+        # blackbox: spill decisions are exactly the context a post-mortem
+        # of a WAN incident needs next to the revocations
+        self.fed.home.broker.blackbox.record(
+            "spill_decision", cls=cls, site=site, action=action,
+            reason=reason)
         log.info("spillover %s: %s -> %s (%s)", cls, action, site, reason)
 
     # -- observability -----------------------------------------------------

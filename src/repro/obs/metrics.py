@@ -305,11 +305,18 @@ def _fmt(v: float) -> str:
     return repr(float(v))
 
 
+def _esc(v) -> str:
+    """Escape a label value per the exposition format: backslash, quote
+    and newline are the three characters the spec requires escaping."""
+    return (str(v).replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
 def _series(name: str, label_names: tuple, label_values: tuple,
             value, suffix: str = "", extra: Mapping | None = None) -> str:
-    pairs = [f'{n}="{v}"' for n, v in zip(label_names, label_values)]
+    pairs = [f'{n}="{_esc(v)}"' for n, v in zip(label_names, label_values)]
     if extra:
-        pairs += [f'{n}="{v}"' for n, v in extra.items()]
+        pairs += [f'{n}="{_esc(v)}"' for n, v in extra.items()]
     labels = ("{" + ",".join(pairs) + "}") if pairs else ""
     return f"{name}{suffix}{labels} {_fmt(value)}"
 
@@ -322,11 +329,7 @@ def inject_label(text: str, **labels: str) -> str:
     and blanks pass through untouched; existing labels are preserved and
     the injected pairs are appended (or prepended into ``name value``
     lines). Injected values are escaped per the exposition format."""
-    def esc(v: str) -> str:
-        return (str(v).replace("\\", r"\\").replace('"', r'\"')
-                .replace("\n", r"\n"))
-
-    pairs = ",".join(f'{k}="{esc(v)}"' for k, v in labels.items())
+    pairs = ",".join(f'{k}="{_esc(v)}"' for k, v in labels.items())
     if not pairs:
         return text
     out = []
@@ -459,6 +462,53 @@ class MetricsRegistry:
                 continue
             lines.append(_series(name, (), (), value))
         return "\n".join(lines) + "\n"
+
+    def describe(self) -> list:
+        """Registered family descriptors — ``{name, type, labels, help}``
+        rows (callback gauges included). Feeds the ``docs/METRICS.md``
+        catalog generator and its lint test."""
+        with self._lock:
+            families = list(self._families.items())
+            callbacks = list(self._callbacks.items())
+        rows = [{"name": name, "type": self._types[name],
+                 "labels": list(fam.label_names), "help": fam.help}
+                for name, fam in families]
+        rows += [{"name": name, "type": "gauge", "labels": [],
+                  "help": help_} for name, (help_, fn) in callbacks]
+        return sorted(rows, key=lambda r: r["name"])
+
+    def sample(self) -> list:
+        """Flat telemetry samples, one dict per live child series — the
+        :class:`~repro.obs.telemetry.TelemetryPublisher` payload. Counters
+        and gauges carry ``value``; histograms are pre-digested into
+        ``count``/``sum`` plus ring quantiles (p50/p95/p99), which is what
+        the time-series store folds into recording-rule-style series."""
+        out: list = []
+        with self._lock:
+            families = list(self._families.items())
+            callbacks = list(self._callbacks.items())
+        for name, fam in families:
+            type_ = self._types[name]
+            for key, child in fam.items():
+                labels = dict(zip(fam.label_names, key))
+                if type_ in ("counter", "gauge"):
+                    out.append({"name": name, "type": type_,
+                                "labels": labels, "value": child.value})
+                else:
+                    snap = child.snapshot()
+                    pct = child.percentiles()
+                    out.append({"name": name, "type": "histogram",
+                                "labels": labels, "count": snap["count"],
+                                "sum": snap["sum"], "p50": pct["p50"],
+                                "p95": pct["p95"], "p99": pct["p99"]})
+        for name, (help_, fn) in callbacks:
+            try:
+                value = float(fn())
+            except Exception:
+                continue
+            out.append({"name": name, "type": "gauge", "labels": {},
+                        "value": value})
+        return out
 
     def snapshot(self) -> dict:
         """Programmatic dump (tests): ``{name: {labels_tuple: value}}`` with

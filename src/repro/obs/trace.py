@@ -21,7 +21,7 @@ campaign cannot exhaust broker memory. Eviction counters are exposed via
 from __future__ import annotations
 
 import threading
-from collections import OrderedDict
+from collections import OrderedDict, deque
 
 __all__ = ["SpanStore", "NullSpanStore"]
 
@@ -37,7 +37,8 @@ class SpanStore:
     """
 
     def __init__(self, max_tasks: int = 4096,
-                 max_spans_per_task: int = 128) -> None:
+                 max_spans_per_task: int = 128,
+                 max_recent: int = 2048) -> None:
         self.max_tasks = max_tasks
         self.max_spans_per_task = max_spans_per_task
         self._lock = threading.Lock()
@@ -46,6 +47,10 @@ class SpanStore:
         self.evicted_tasks = 0
         self.dropped_spans = 0
         self.enabled = True
+        # side ring of recently accepted spans, in seq order — the
+        # telemetry publisher drains this incrementally via since()
+        # without walking the whole per-task map
+        self._recent: deque = deque(maxlen=max_recent)
 
     def add(self, task_id: str, name: str, start: float,
             end: float | None = None, **attrs) -> None:
@@ -68,6 +73,7 @@ class SpanStore:
                 self.dropped_spans += 1
                 return
             spans.append(span)
+            self._recent.append(span)
 
     def add_batch(self, items) -> None:
         """Batched :meth:`add`: one lock hold for N spans. ``items`` is an
@@ -82,6 +88,7 @@ class SpanStore:
         with self._lock:
             spans_map = self._spans
             max_spans = self.max_spans_per_task
+            recent = self._recent
             seq = self._seq
             for task_id, span in items:
                 if not task_id:
@@ -91,17 +98,31 @@ class SpanStore:
                 spans = spans_map.get(task_id)
                 if spans is None:
                     spans_map[task_id] = [span]
+                    recent.append(span)
                     continue
                 if len(spans) >= max_spans:
                     self.dropped_spans += 1
                     continue
                 spans.append(span)
+                recent.append(span)
             self._seq = seq
             n_over = len(spans_map) - self.max_tasks
             if n_over > 0:
                 for _ in range(n_over):
                     spans_map.popitem(last=False)
                 self.evicted_tasks += n_over
+
+    def since(self, seq: int, limit: int = 1024) -> tuple[int, list]:
+        """Spans with ``seq`` greater than the watermark, oldest first,
+        plus the new watermark — the telemetry publisher's incremental
+        drain. Only the bounded recent ring is scanned, so a publisher
+        that falls further behind than ``max_recent`` spans loses the
+        oldest (the ring is the retention contract, same as the per-task
+        bounds)."""
+        with self._lock:
+            out = [dict(s) for s in self._recent if s["seq"] > seq][:limit]
+            new_seq = out[-1]["seq"] if out else max(seq, 0)
+        return new_seq, out
 
     def trace(self, task_id: str) -> list:
         """All spans of a task (every attempt), ordered by start time then
@@ -136,6 +157,9 @@ class NullSpanStore:
 
     def add_batch(self, items) -> None:
         pass
+
+    def since(self, seq: int, limit: int = 1024) -> tuple[int, list]:
+        return max(seq, 0), []
 
     def trace(self, task_id: str) -> list:
         return []

@@ -429,6 +429,15 @@ class PipelineAgent:
             self._finalize(run)
             log.warning("campaign %s FAILED: %s",
                         run.campaign_id, run.state.failure)
+            # trigger condition: a campaign entering FAILED latches a
+            # post-mortem blackbox dump with the events leading up to it
+            self.broker.blackbox.record(
+                "campaign_failed", campaign_id=run.campaign_id,
+                task_id=task_id, reason=run.state.failure)
+            self.broker.blackbox.dump(
+                "campaign_failed",
+                {"campaign_id": run.campaign_id,
+                 "failure": run.state.failure})
 
     def _watchdog(self) -> None:
         now = time.time()
@@ -688,10 +697,17 @@ class PipelineAgent:
         crash dropped between a fact event and its follow-up planning events.
         Both planners are guard-checked, so this is a no-op on a clean
         journal."""
+        seq_before = run.state.seq
         for ev in plan_sources(run.state):
             self._emit(run, ev)
         for tid in [t for t, r in run.state.tasks.items() if r.terminal]:
             self._advance(run, tid)
+        if run.state.seq != seq_before:
+            # only journal repairs that actually re-emitted something —
+            # a clean-journal no-op is not a lifecycle event
+            self.broker.blackbox.record(
+                "journal_repair", campaign_id=run.campaign_id,
+                events=run.state.seq - seq_before)
 
     # -- journal compaction -----------------------------------------------------
 

@@ -304,3 +304,40 @@ def test_sites_endpoint_and_federated_metrics():
                 f"http://127.0.0.1:{c.http_port}/metrics") as r:
             text = r.read().decode()
         assert 'site="' not in text
+
+
+def test_home_query_answers_sum_by_site_across_the_federation():
+    """ISSUE 9 acceptance: with the telemetry plane on, the home collector
+    holds a feed into every remote site's PREFIX-telemetry topic, so one
+    home /query answers sum_by(site) across the whole federation."""
+    fed = FederatedCluster(
+        [Site("home", workers=1), Site("edge", workers=1)],
+        prefix="fedq", http=True, telemetry=True)
+    with fed:
+        ids = [fed.submit("sleep", params={"duration": 0.01})
+               for _ in range(4)]
+        ids.append(fed.submit("sleep", site="edge",
+                              params={"duration": 0.01}))
+        assert fed.wait_all(ids, timeout=30.0)
+        # drive the plane deterministically: both sites publish, then the
+        # home facade polls its feeds inside query()
+        for cluster in fed.clusters.values():
+            cluster.telemetry_publisher.publish_once()
+        out = fed.query("ksa_leases_granted_total", agg="sum_by", by="site")
+        assert set(out["result"]) == {"home", "edge"}
+        assert out["result"]["home"] >= 4
+        assert out["result"]["edge"] >= 1       # the relayed task's lease
+        # the same question over the home monitor's HTTP surface
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{fed.http_port}/query?"
+                f"name=ksa_leases_granted_total&agg=sum_by&by=site") as r:
+            data = json.loads(r.read())
+        assert set(data["result"]) == {"home", "edge"}
+        assert data["result"] == out["result"]
+        # remote spans fold into the home span store tagged with the site
+        edge_grants = fed.query("ksa_leases_granted_total", agg="sum",
+                                labels={"site": "edge"})
+        assert edge_grants["result"] >= 1
+        # alerts and blackbox ride the same home surface
+        assert fed.alerts()["rules"] == []
+        assert fed.dump_blackbox()["trigger"] == "manual"

@@ -16,9 +16,13 @@ import pytest
 from repro.cluster import KsaCluster
 from repro.core import (Broker, ClusterComputing, Consumer, FairShare,
                         RevokeReason, Submitter)
+from repro.core.messages import topic_names
 from repro.core.monitor import ROUTES
-from repro.obs import (DEFAULT_BUCKETS, MetricsRegistry, NullSpanStore,
-                       SpanStore, sample_rss_mb, topic_class)
+from repro.obs import (DEFAULT_BUCKETS, AlertEngine, AlertRule,
+                       FlightRecorder, MetricsRegistry, NullSpanStore,
+                       SloSpec, SpanStore, TelemetryCollector,
+                       TimeSeriesStore, merge_renders, sample_rss_mb,
+                       topic_class)
 from repro.pipeline import PipelineAgent, PipelineSpec, RetryPolicy, Stage
 
 
@@ -480,3 +484,471 @@ def test_campaign_report_splits_queue_run_retry():
         assert rep["dominant_stage"] in ("a", "b")
         assert rep["wall_s"] >= max(s["run_s"] for s in
                                     rep["stages"].values()) / 2
+
+
+# ---------------------------------------------------------------------------
+# telemetry plane: time-series store, SLO burn alerts, flight recorder,
+# broker-streamed publisher/collector (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _get_any(port, path):
+    """GET that returns (status, parsed-json) for 2xx and 4xx alike."""
+    try:
+        with urllib.request.urlopen(f"http://127.0.0.1:{port}{path}") as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_time_series_store_queries_and_validation():
+    st = TimeSeriesStore(resolution_s=0.5)
+    now = 100.0
+    for i in range(10):
+        st.ingest("m_total", {"site": "a"}, now + i, float(i), "counter")
+        st.ingest("m_total", {"site": "b"}, now + i, float(2 * i), "counter")
+        st.ingest("lat:p95", {"site": "a"}, now + i, 0.1 * i, "gauge")
+    t = now + 9
+    assert st.latest("m_total", {"site": "a"}) == 9.0
+    assert st.sum_by("m_total", "site", now=t) == {"a": 9.0, "b": 18.0}
+    assert st.sum("m_total", now=t) == 27.0
+    # counter slope, per-series and summed across the label match
+    assert st.rate("m_total", {"site": "a"}, 60.0, t) == pytest.approx(1.0)
+    assert st.rate("m_total", None, 60.0, t) == pytest.approx(3.0)
+    assert st.quantile("lat:p95", 1.0, None, 60.0, t) == pytest.approx(0.9)
+    assert st.quantile("lat:p95", 0.5, None, 60.0, t) == pytest.approx(0.4)
+    assert len(st.points("m_total", {"site": "a"}, 4.5, t)) == 5
+    # the /query facade validates before it aggregates
+    out = st.query("m_total", agg="sum_by", by="site", now=t)
+    assert out["result"]["b"] == 18.0 and out["agg"] == "sum_by"
+    assert st.query("m_total", agg="latest")["result"] == 9.0
+    with pytest.raises(ValueError):
+        st.query("m_total", agg="nope")
+    with pytest.raises(ValueError):
+        st.query("m_total", agg="quantile")     # requires q
+    with pytest.raises(ValueError):
+        st.query("m_total", agg="sum_by")       # requires by
+    stats = st.stats()
+    assert stats["series"] == 3
+
+
+def test_time_series_store_same_bucket_folds_min_max_sum():
+    st = TimeSeriesStore(resolution_s=10.0)
+    for v in (1.0, 5.0, 3.0):
+        st.ingest("g", None, 100.0, v, "gauge")
+    pts = st.points("g")
+    assert len(pts) == 1 and pts[0][1] == 3.0  # last write wins the sample
+    assert st.latest("g") == 3.0
+
+
+def test_alert_engine_multi_window_fire_and_resolve():
+    store = TimeSeriesStore(resolution_s=0.1)
+    now = 1000.0
+    for i in range(11):                          # slope 2/s for 10 s
+        store.ingest("err_total", None, now - 10 + i, float(2 * i), "counter")
+    slo = SloSpec(name="errs", metric="err_total", kind="rate", objective=1.0)
+    rule = AlertRule(slo=slo, long_window_s=20.0, short_window_s=5.0)
+    reg = MetricsRegistry()
+    fired = []
+    eng = AlertEngine(store, [rule], registry=reg,
+                      on_fire=lambda r, ev: fired.append(r))
+    evs = eng.evaluate(now=now)
+    assert evs[0]["breach"] and evs[0]["burn_short"] >= 1.0
+    assert fired == ["errs"]
+    assert [a["rule"] for a in eng.active()] == ["errs"]
+    # still firing on the next pass, but no duplicate transition
+    eng.evaluate(now=now + 0.5)
+    assert [h["state"] for h in eng.status()["history"]] == ["firing"]
+    # counter goes flat -> short-window burn decays -> resolves
+    for i in range(11):
+        store.ingest("err_total", None, now + i, 20.0, "counter")
+    eng.evaluate(now=now + 10)
+    st = eng.status()
+    assert st["states"]["errs"]["state"] == "resolved"
+    assert st["firing"] == []
+    assert [h["state"] for h in st["history"]] == ["firing", "resolved"]
+    text = reg.render()
+    assert 'ksa_alerts_total{rule="errs",state="firing"} 1' in text
+    assert 'ksa_alerts_total{rule="errs",state="resolved"} 1' in text
+
+
+def test_slo_threshold_quantile_and_ratio_kinds():
+    store = TimeSeriesStore(resolution_s=0.1)
+    now = 50.0
+    for i in range(10):
+        store.ingest("wait:p95", None, now - 9 + i, 4.0, "gauge")
+        store.ingest("bad_total", None, now - 9 + i, float(i), "counter")
+        store.ingest("all_total", None, now - 9 + i, float(10 * i), "counter")
+    q = SloSpec(name="p95", metric="wait:p95", objective=2.0, q=0.95)
+    assert q.burn(store, 30.0, now) == pytest.approx(2.0)  # 4s vs 2s target
+    ratio = SloSpec(name="errratio", metric="bad_total", kind="ratio",
+                    total_metric="all_total", objective=0.05)
+    assert ratio.burn(store, 30.0, now) == pytest.approx(2.0)  # 10% vs 5%
+    # ratio with an empty denominator reads as zero burn, not a crash
+    empty = SloSpec(name="e", metric="bad_total", kind="ratio",
+                    total_metric="missing_total", objective=0.05)
+    assert empty.burn(store, 30.0, now) == 0.0
+    with pytest.raises(ValueError):
+        SloSpec(name="x", metric="m", kind="ratio", objective=1.0)
+    with pytest.raises(ValueError):
+        SloSpec(name="x", metric="m", objective=0.0)
+    with pytest.raises(ValueError):
+        AlertRule(slo=q, long_window_s=5.0, short_window_s=10.0)
+
+
+def test_flight_recorder_ring_drain_and_storm_autodump():
+    fr = FlightRecorder(max_events=32, storm_threshold=5,
+                        storm_window_s=60.0, storm_cooldown_s=0.0)
+    fr.context_fn = lambda: {"extra": 1}
+    for i in range(4):
+        fr.record("grant", holder=f"w{i}")
+    seq, evs = fr.since(0)
+    assert [e["kind"] for e in evs] == ["grant"] * 4 and seq == 4
+    seq2, evs2 = fr.since(seq)                   # incremental drain
+    assert (seq2, evs2) == (4, [])
+    for i in range(5):
+        fr.record("revocation", task_id=f"t{i}", reason="preempt")
+    dumps = fr.dumps()
+    assert [d["trigger"] for d in dumps] == ["revocation_storm"]
+    revs = [e for e in dumps[0]["events"] if e["kind"] == "revocation"]
+    assert len(revs) == 5
+    assert all(e["reason"] == "preempt" for e in revs)
+    assert dumps[0]["context"]["extra"] == 1     # injected live context
+    assert fr.stats()["counts"] == {"grant": 4, "revocation": 5}
+    snap = fr.snapshot()
+    assert snap["seq"] == 9 and len(snap["dumps"]) == 1
+
+
+def test_telemetry_topic_schema_and_collector_fold():
+    with KsaCluster(prefix="obs7", workers=1, telemetry=True) as c:
+        ids = [c.submit("sleep", params={"duration": 0.01}) for _ in range(3)]
+        assert c.wait_all(ids, timeout=30.0)
+        c.telemetry_publisher.publish_once()
+        topic = topic_names("obs7")["telemetry"]
+        recs = c.broker.read_from(topic, 0)
+        assert recs, "publisher produced nothing on the telemetry topic"
+        rec = recs[-1].value
+        assert rec["kind"] == "telemetry" and rec["v"] == 1
+        for key in ("source", "site", "seq", "ts", "metrics", "spans",
+                    "events"):
+            assert key in rec
+        by_type = {}
+        for row in rec["metrics"]:
+            by_type.setdefault(row["type"], []).append(row)
+        assert {"value"} <= set(by_type["counter"][0])
+        hist = by_type["histogram"][0]
+        assert {"count", "sum", "p50", "p95", "p99"} <= set(hist)
+        # collector folds the records into queryable series
+        c.telemetry_collector.poll()
+        st = c.telemetry_store
+        assert st.sum("ksa_leases_completed_total") >= 3
+        names = set(st.series_names())
+        assert "ksa_task_queue_wait_seconds:p95" in names   # digest series
+        assert "ksa_task_queue_wait_seconds_count" in names
+        # the facade query sees the same numbers
+        out = c.query("ksa_leases_completed_total", agg="sum")
+        assert out["result"] >= 3
+
+
+def test_restarted_collector_rebuilds_store_from_topic_replay():
+    """Killing the monitor (the collector's host) loses nothing: a fresh
+    collector replays the durable PREFIX-telemetry topic from offset 0 via
+    Broker.read_from and rebuilds the exact same series."""
+    with KsaCluster(prefix="obs8", workers=1, telemetry=True) as c:
+        ids = [c.submit("sleep", params={"duration": 0.01}) for _ in range(5)]
+        assert c.wait_all(ids, timeout=30.0)
+        c.telemetry_publisher.publish_once()
+        c.telemetry_collector.poll()
+        live = c.telemetry_store
+        granted = live.sum("ksa_leases_granted_total")
+        assert granted >= 5
+        c.monitor.stop()                          # kill the collector host
+        store2 = TimeSeriesStore()
+        coll2 = TelemetryCollector(c.broker, topic_names("obs8")["telemetry"],
+                                   store=store2)
+        n = coll2.poll()
+        assert n > 0
+        assert store2.sum("ksa_leases_granted_total") == granted
+        # no gap: every series the live store knew is rebuilt
+        assert set(store2.series_names()) >= set(live.series_names())
+
+
+def test_revocation_storm_fires_alert_and_dumps_blackbox():
+    slo = SloSpec(name="revocation-rate", metric="ksa_leases_revoked_total",
+                  kind="rate", objective=0.2)
+    rule = AlertRule(slo=slo, long_window_s=60.0, short_window_s=30.0)
+    with KsaCluster(prefix="obs9", workers=2, worker_slots=6,
+                    telemetry=True, slos=[rule]) as c:
+        ids = [c.submit("hang") for _ in range(12)]
+        # keyed partitioning can split unevenly, so not all 12 lease at
+        # once — wait for a storm's worth and revoke whatever is active
+        # (revoking frees slots, so the queued remainder leases next)
+        assert _wait(lambda: c.broker.lease_stats()["active"] >= 10,
+                     timeout=15.0)
+        c.telemetry_publisher.publish_once()      # pre-storm sample
+        revoked = [t for t in ids[:6]
+                   if c.revoke(t, reason=RevokeReason.PREEMPT,
+                               requeue=False)]
+        time.sleep(0.3)
+        c.telemetry_publisher.publish_once()      # mid-storm sample
+        pending = [t for t in ids if t not in revoked]
+        deadline = time.time() + 8.0
+        while len(revoked) < 12 and time.time() < deadline:
+            for tid in list(pending):
+                if c.revoke(tid, reason=RevokeReason.PREEMPT,
+                            requeue=False):
+                    revoked.append(tid)
+                    pending.remove(tid)
+            time.sleep(0.05)
+        assert len(revoked) >= 10                 # a storm's worth
+        time.sleep(0.3)
+        c.telemetry_publisher.publish_once()
+        c.telemetry_collector.poll()
+        c.alert_engine.evaluate()
+        # the burn-rate alert fired on the revocation counter's slope
+        assert _wait(lambda: "revocation-rate" in
+                     c.alert_engine.status()["firing"], timeout=5.0)
+        assert [a["rule"] for a in c.status()["alerts"]] == \
+            ["revocation-rate"]
+        assert 'ksa_alerts_total{rule="revocation-rate",state="firing"} 1' \
+            in c.metrics_text()
+        # 12 revocations inside the storm window auto-latched a blackbox
+        # dump; the alert firing latched a second one
+        triggers = [d["trigger"] for d in c.broker.blackbox.dumps()]
+        assert "revocation_storm" in triggers
+        assert "alert:revocation-rate" in triggers
+        storm = next(d for d in c.broker.blackbox.dumps()
+                     if d["trigger"] == "revocation_storm")
+        revs = [e for e in storm["events"] if e["kind"] == "revocation"]
+        assert len(revs) >= 10
+        assert all(e["reason"] == RevokeReason.PREEMPT for e in revs)
+        assert {e["task_id"] for e in revs} <= set(ids)
+        assert "leases" in storm["context"]       # injected cluster context
+        # a forced dump works with or without telemetry and is retained
+        manual = c.dump_blackbox()
+        assert manual["trigger"] == "manual"
+        assert manual in c.broker.blackbox.dumps()
+
+
+def test_monitor_query_alerts_blackbox_endpoints():
+    slo = SloSpec(name="qw-p95", metric="ksa_task_queue_wait_seconds:p95",
+                  objective=30.0, q=0.95)
+    with KsaCluster(prefix="obs10", workers=1, http=True,
+                    telemetry=True, slos=[slo]) as c:
+        port = c.http_port
+        ids = [c.submit("sleep", params={"duration": 0.01}) for _ in range(3)]
+        assert c.wait_all(ids, timeout=30.0)
+        c.telemetry_publisher.publish_once()
+        c.telemetry_collector.poll()
+        code, data = _get_any(
+            port, "/query?name=ksa_leases_completed_total&agg=sum")
+        assert code == 200 and data["result"] >= 3
+        code, data = _get_any(
+            port, "/query?name=ksa_task_queue_wait_seconds:p95"
+                  "&agg=quantile&q=0.95&window_s=120")
+        assert code == 200 and data["result"] is not None
+        # label filter: l.<key>=<value>
+        code, data = _get_any(
+            port, "/query?name=ksa_leases_granted_total&agg=sum&l.cls=cpu")
+        assert code == 200
+        code, data = _get_any(port, "/alerts")
+        assert code == 200 and data["rules"] == ["qw-p95"]
+        assert data["firing"] == []               # 30 s objective holds
+        code, data = _get_any(port, "/blackbox")
+        assert code == 200
+        assert any(e["kind"] == "grants" for e in data["events"])
+        # /query, /alerts, /blackbox are advertised on the index
+        code, data = _get_any(port, "/")
+        assert {"/query", "/alerts", "/blackbox"} <= set(data["endpoints"])
+
+
+def test_monitor_http_error_paths_are_structured_json():
+    """Unknown /trace and /campaigns ids and malformed /query parameters
+    come back as structured JSON 404/400 payloads, never empty bodies."""
+    with KsaCluster(prefix="obs11", workers=1, http=True,
+                    telemetry=True) as c:
+        port = c.http_port
+        for path in ("/trace/no-such-task", "/campaigns/no-such-campaign",
+                     "/tasks/no-such-task"):
+            code, data = _get_any(port, path)
+            assert code == 404, path
+            assert data["error"], path            # human-readable message
+        bad_queries = [
+            "/query",                              # missing name
+            "/query?agg=rate",                     # still missing name
+            "/query?name=m&agg=bogus",             # unknown aggregation
+            "/query?name=m&window_s=abc",          # non-numeric window
+            "/query?name=m&q=x&agg=quantile",      # non-numeric q
+            "/query?name=m&agg=quantile",          # quantile without q
+            "/query?name=m&agg=sum_by",            # sum_by without by
+            "/query?name=m&bogus=1",               # unknown parameter
+        ]
+        for path in bad_queries:
+            code, data = _get_any(port, path)
+            assert code == 400, path
+            assert data["error"] == "bad query" and data["detail"], path
+    # without a telemetry plane the query surface 404s instead of crashing
+    with KsaCluster(prefix="obs12", workers=0, http=True) as c2:
+        port = c2.http_port
+        code, data = _get_any(port, "/query?name=m")
+        assert code == 404 and "telemetry" in data["error"]
+        code, data = _get_any(port, "/alerts")
+        assert code == 404 and "alert" in data["error"]
+        code, data = _get_any(port, "/blackbox")
+        assert code == 200                        # blackbox is always on
+        with pytest.raises(RuntimeError):
+            c2.query("m")
+        with pytest.raises(RuntimeError):
+            c2.alerts()
+
+
+def test_autoscale_sensing_reads_from_time_series_store():
+    """The autoscaler's backlog/drain-rate history lives in a
+    TimeSeriesStore; with the telemetry plane on it shares the cluster's
+    store, so /query can read the controller's own sensing series."""
+    from repro.autoscale import AutoscaleConfig, PoolSpec
+    cfg = AutoscaleConfig(pools=(PoolSpec("cpu", min_agents=1,
+                                          max_agents=2),))
+    with KsaCluster(prefix="obs13", workers=0, telemetry=True,
+                    autoscale=cfg) as c:
+        assert c.autoscaler.store is c.telemetry_store  # shared, not private
+        ids = [c.submit("sleep", params={"duration": 0.01}) for _ in range(4)]
+        c.autoscaler.tick()
+        assert c.wait_all(ids, timeout=30.0)
+        c.autoscaler.tick()
+        out = c.query("ksa_pool_backlog", agg="points",
+                      labels={"pool": "cpu", "src": "autoscale"})
+        assert out["result"], "controller sensing did not land in the store"
+        rate = c.query("ksa_pool_consumed_total", agg="rate",
+                       labels={"pool": "cpu", "src": "autoscale"},
+                       window_s=30.0)
+        assert rate["result"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: Prometheus text-format conformance lint
+# ---------------------------------------------------------------------------
+
+_PROM_PAIR = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)='
+                        r'"((?:[^"\\\n]|\\\\|\\"|\\n)*)"')
+_PROM_SAMPLE = re.compile(r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})? (\S+)$')
+
+
+def _lint_prometheus(text):
+    """Parse + lint a Prometheus 0.0.4 exposition. Returns the samples as
+    (name, labels, value) triples; asserts on any conformance violation."""
+    help_count, type_count, types = {}, {}, {}
+    samples = []
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            name = line.split(" ", 3)[2]
+            help_count[name] = help_count.get(name, 0) + 1
+        elif line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            type_count[name] = type_count.get(name, 0) + 1
+            types[name] = kind
+        elif line.startswith("#"):
+            continue
+        else:
+            m = _PROM_SAMPLE.match(line)
+            assert m, f"unparseable sample line: {line!r}"
+            name, braces, value = m.groups()
+            labels = {}
+            if braces:
+                body, pos = braces[1:-1], 0
+                while pos < len(body):  # strict: every char must be covered
+                    pm = _PROM_PAIR.match(body, pos)
+                    assert pm, f"bad label escaping in {line!r}"
+                    labels[pm.group(1)] = pm.group(2)
+                    pos = pm.end()
+                    if pos < len(body):
+                        assert body[pos] == ",", line
+                        pos += 1
+            float(value)  # every sample value must parse
+            samples.append((name, labels, value))
+    families = {}
+    for name, labels, value in samples:
+        fam = name
+        for suffix in ("_bucket", "_count", "_sum"):
+            if name.endswith(suffix) and \
+                    types.get(name[:-len(suffix)]) == "histogram":
+                fam = name[:-len(suffix)]
+                break
+        families.setdefault(fam, []).append((name, labels, value))
+    for fam in families:
+        if not fam.startswith("ksa_"):
+            continue
+        assert help_count.get(fam) == 1, \
+            f"{fam}: {help_count.get(fam, 0)} HELP lines (want exactly 1)"
+        assert type_count.get(fam) == 1, \
+            f"{fam}: {type_count.get(fam, 0)} TYPE lines (want exactly 1)"
+    for fam, kind in types.items():
+        if kind != "histogram":
+            continue
+        counts, infs = {}, {}
+        for name, labels, value in families.get(fam, []):
+            child = tuple(sorted((k, v) for k, v in labels.items()
+                                 if k != "le"))
+            if name == fam + "_count":
+                counts[child] = float(value)
+            elif name == fam + "_bucket" and labels.get("le") == "+Inf":
+                infs[child] = float(value)
+        assert set(counts) == set(infs), \
+            f"{fam}: children missing a +Inf bucket or a _count"
+        for child in counts:
+            assert counts[child] == infs[child], \
+                f"{fam}{dict(child)}: le=\"+Inf\" != _count"
+    return samples
+
+
+def test_prometheus_lint_escapes_label_values():
+    reg = MetricsRegistry()
+    raw = 'we"ird\\pa\nth'
+    reg.counter("ksa_esc_total", "escape check", labels=("path",)) \
+        .labels(path=raw).inc()
+    reg.histogram("ksa_esc_seconds", "escape hist", labels=("path",)) \
+        .labels(path=raw).observe(0.2)
+    samples = _lint_prometheus(reg.render())
+    escaped = [lab["path"] for name, lab, _ in samples
+               if name == "ksa_esc_total"]
+    assert escaped == ['we\\"ird\\\\pa\\nth']  # \  " and newline escaped
+
+
+def test_prometheus_conformance_cluster_and_federation_renders():
+    with KsaCluster(prefix="obs14", workers=1, telemetry=True) as c:
+        ids = [c.submit("sleep", params={"duration": 0.01}) for _ in range(3)]
+        assert c.wait_all(ids, timeout=30.0)
+        text = c.metrics_text()
+        samples = _lint_prometheus(text)
+        assert any(n.startswith("ksa_") for n, _, _ in samples)
+        # federation merge: every sample gains a site label; the merged
+        # exposition must still be conformant with deduped HELP/TYPE
+        merged = merge_renders({"home": text, "edge": text})
+        msamples = _lint_prometheus(merged)
+        tagged = [lab for n, lab, _ in msamples if n.startswith("ksa_")]
+        assert tagged and all(lab.get("site") in ("home", "edge")
+                              for lab in tagged)
+
+
+# ---------------------------------------------------------------------------
+# satellite: metrics catalog lint (docs/METRICS.md)
+# ---------------------------------------------------------------------------
+
+def test_metrics_catalog_documents_every_registered_family():
+    import pathlib
+    from repro.obs.catalog import _full_registry, catalog_names, \
+        render_catalog
+    doc = pathlib.Path(__file__).resolve().parent.parent / "docs/METRICS.md"
+    assert doc.exists(), "docs/METRICS.md missing — regenerate with " \
+        "PYTHONPATH=src python -m repro.obs.catalog > docs/METRICS.md"
+    documented = catalog_names(doc.read_text())
+    reg = _full_registry()
+    registered = {r["name"] for r in reg.describe()
+                  if r["name"].startswith("ksa_")}
+    missing = registered - documented
+    assert not missing, \
+        f"metrics missing from docs/METRICS.md: {sorted(missing)} — " \
+        f"regenerate with PYTHONPATH=src python -m repro.obs.catalog"
+    # the generator output itself round-trips through the lint
+    assert catalog_names(render_catalog(reg)) == registered

@@ -11,7 +11,8 @@ import traceback
 def main() -> None:
     from . import (bench_apps, bench_autoscale, bench_broker, bench_core,
                    bench_federation, bench_obs, bench_pipeline,
-                   bench_preemption, bench_recovery, bench_routing)
+                   bench_preemption, bench_recovery, bench_routing,
+                   bench_serve)
 
     suites = [
         ("broker_data_plane", bench_broker.bench_broker_data_plane),
@@ -37,6 +38,7 @@ def main() -> None:
         ("train_step", bench_apps.bench_train_step),
         ("serve_continuous_batching",
          bench_apps.bench_serve_continuous_batching),
+        ("serve_tier", bench_serve.bench_serve),
     ]
     print("name,us_per_call,derived")
     failures = 0

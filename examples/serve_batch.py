@@ -10,6 +10,18 @@ Part 2 runs the same workload as a repro.pipeline DAG — tokenize (fan-out) →
 generate (serve_request as a map stage) → post-process (join) — proving the
 campaign subsystem is workload-agnostic.
 
+For the production tier, replicate instead of batching through one engine:
+``ServeReplicaSet(cfg, params, n_replicas=N, engine_kw=dict(paged=True,
+decode_kernel="flash"), ttft_slo=ttft_slo(0.5), on_violation="shed")``
+routes each request to the replica with the least projected queue wait
+(token rate from the telemetry store), sheds or spills when even the best
+replica would blow the TTFT budget, and ``deploy(cluster, taint="serve")``
+runs every replica driver as a long-lived task on a serve-tainted worker
+pool (requires ``placement=ResourceClassPolicy(extra_classes=("serve",))``)
+with ``serve_loadgen`` tasks as the load-generation campaign — see
+tests/test_serve.py::test_replica_set_cluster_deploy and
+benchmarks/bench_serve.py for both wirings end to end.
+
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 import time

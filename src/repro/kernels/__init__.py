@@ -3,11 +3,14 @@ dispatch wrapper (ops.py) and a pure-jnp oracle (ref.py):
 
 * ``flash_attention`` — causal/sliding-window GQA, online softmax, VMEM
   block tiling with causal/window block skipping;
+* ``flash_decode``    — the serving decode path: single-token-per-slot
+  split-KV attention with per-slot ragged positions, ring/window masking
+  and a paged-KV variant (page table in scalar prefetch);
 * ``ssd``             — Mamba-2 chunked SSD scan, recurrent state in VMEM
   scratch across the sequential chunk grid;
 * ``writhe``          — the paper's workload: Gauss-linking writhe map over
   segment-pair blocks (AlphaKnot's knot screen / knot-core heuristic).
 """
-from . import ops, ref
+from . import flash_decode, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["flash_decode", "ops", "ref"]

@@ -206,11 +206,15 @@ def attention_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
                     positions: jax.Array | int = 0,
                     cache: dict | None = None,
                     cache_index: jax.Array | None = None,
-                    dist=None) -> tuple[jax.Array, dict | None]:
+                    dist=None,
+                    pages: jax.Array | None = None) -> tuple[jax.Array, dict | None]:
     """Projections + RoPE + attention (+ KV-cache update for decode).
 
     ``cache``: {"k": (B, S_cache, K, Dh), "v": ...}. If ``S_cache == window``
-    for a local layer, the cache is treated as a **ring buffer**.
+    for a local layer, the cache is treated as a **ring buffer**. A paged
+    cache instead holds {"pool_k": (P, page_size, K, Dh), "pool_v": ...}
+    and requires ``pages``: the (B, pages_per_slot) int32 page table
+    (-1 = unbound; page 0 is the allocator's trash page).
     ``cache_index``: scalar int32 — count of tokens already cached.
     """
     b, s, d = x.shape
@@ -241,6 +245,14 @@ def attention_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
     assert cache_index is not None
     cache_index = jnp.asarray(cache_index, jnp.int32)
     per_slot = cache_index.ndim == 1  # continuous batching: (B,) positions
+
+    if "pool_k" in cache:  # paged KV cache (serving tier)
+        assert per_slot and s == 1 and pages is not None
+        new_cache, out = _paged_decode(cfg, q, k, v, cache, cache_index,
+                                       pages, window)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return y, new_cache
+
     s_cache = cache["k"].shape[1]
     is_ring = window is not None and s_cache == window
     cdt = cache["k"].dtype
@@ -289,6 +301,16 @@ def attention_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
                                     k_positions, k_valid, window=window,
                                     kv_chunk=cfg.kv_chunk,
                                     q_offset=positions)
+    elif (cfg.decode_kernel == "flash" and s == 1 and per_slot
+          and dist is None):
+        # serving hot path: fused split-KV flash-decode. The -1-invalid
+        # position encoding folds k_valid into k_positions; ring caches
+        # (slot != position) disable the occupancy-bounded trip count.
+        from repro.kernels.flash_decode import decode_attention
+        out = decode_attention(
+            q, ck.astype(dt), cv.astype(dt), cache_index,
+            jnp.where(k_valid, k_positions, -1), window=window,
+            interpret=cfg.kernel_interpret, bounded=not is_ring)
     else:
         out = chunked_attention(q, ck.astype(dt), cv.astype(dt),
                                 q_offset=positions, k_positions=k_positions,
@@ -296,6 +318,54 @@ def attention_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
                                 kv_chunk=cfg.kv_chunk, k_valid=k_valid)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
     return y, new_cache
+
+
+def _paged_decode(cfg: ModelConfig, q: jax.Array, k: jax.Array,
+                  v: jax.Array, cache: dict, positions: jax.Array,
+                  pages: jax.Array, window: int | None
+                  ) -> tuple[dict, jax.Array]:
+    """One decode step against a paged KV cache.
+
+    The new token is scattered into its slot's current page (slots whose
+    table row is unbound clamp to the reserved trash page 0), then attention
+    reads through the page table. ``decode_kernel="flash"`` uses the fused
+    paged kernel; "chunked" gathers the logical view and runs the reference
+    — pages are bound in logical order, so offsets past a slot's position
+    hold garbage but are causally masked (``k_pos > q_pos``).
+    """
+    b = q.shape[0]
+    dt = q.dtype
+    cdt = cache["pool_k"].dtype
+    page_size = cache["pool_k"].shape[1]
+    rows = jnp.arange(b, dtype=jnp.int32)
+    page = pages[rows, positions // page_size]
+    page = jnp.maximum(page, 0)
+    off = positions % page_size
+    ck = cache["pool_k"].at[page, off].set(k[:, 0].astype(cdt))
+    cv = cache["pool_v"].at[page, off].set(v[:, 0].astype(cdt))
+    new_cache = {"pool_k": ck, "pool_v": cv}
+    if cfg.decode_kernel == "flash":
+        from repro.kernels.flash_decode import decode_attention_paged
+        out = decode_attention_paged(q, ck.astype(dt), cv.astype(dt),
+                                     positions, pages, window=window,
+                                     interpret=cfg.kernel_interpret)
+        return new_cache, out
+    n_pages = pages.shape[1]
+    tbl = jnp.maximum(pages, 0)
+    kh, dk = ck.shape[2], ck.shape[3]
+    dv = cv.shape[3]
+    k_lin = ck[tbl].reshape(b, n_pages * page_size, kh, dk)
+    v_lin = cv[tbl].reshape(b, n_pages * page_size, kh, dv)
+    kp = (jnp.arange(n_pages, dtype=jnp.int32)[:, None] * page_size +
+          jnp.arange(page_size, dtype=jnp.int32)[None, :])
+    kp = jnp.where(pages[:, :, None] >= 0, kp[None], -1)
+    kp = kp.reshape(b, n_pages * page_size)
+    out = chunked_attention(q, k_lin.astype(dt), v_lin.astype(dt),
+                            q_offset=positions, k_positions=kp,
+                            causal=True, window=window,
+                            kv_chunk=cfg.kv_chunk, k_valid=kp >= 0,
+                            score_dtype=jnp.dtype(cfg.score_dtype))
+    return new_cache, out
 
 
 def init_kv_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,

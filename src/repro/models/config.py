@@ -97,6 +97,11 @@ class ModelConfig:
     # attention implementation knobs
     kv_chunk: int = 1024                    # chunked-softmax KV block
     use_pallas: bool = False                # TPU kernels (tests use interpret)
+    decode_kernel: str = "chunked"          # serving decode: "chunked"
+                                            # (reference) | "flash"
+                                            # (split-KV flash-decode)
+    kernel_interpret: bool = False          # Pallas interpret mode (CPU
+                                            # parity tests)
     logit_dtype: str = "float32"
     score_dtype: str = "float32"            # attention score/probability dtype
                                             # (bf16 halves the S×chunk buffers)

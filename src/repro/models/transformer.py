@@ -58,7 +58,8 @@ def block_apply(params: dict, cfg: ModelConfig, kind: str, x: jax.Array, *,
                 cache: dict | None = None,
                 cache_index: jax.Array | None = None,
                 dist: Any = None,
-                decode: bool = False) -> tuple[jax.Array, dict | None, jax.Array]:
+                decode: bool = False,
+                pages: jax.Array | None = None) -> tuple[jax.Array, dict | None, jax.Array]:
     """One residual block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(params["norm1"], x, cfg.rms_eps)
@@ -71,7 +72,7 @@ def block_apply(params: dict, cfg: ModelConfig, kind: str, x: jax.Array, *,
             y, new_cache = attention_block(params["mix"], cfg, h, kind=kind,
                                            positions=positions, cache=cache,
                                            cache_index=cache_index,
-                                           dist=dist)
+                                           dist=dist, pages=pages)
     elif kind == "ssd":
         y, new_cache = ssd_block(params["mix"], cfg, h, cache=cache)
     else:  # rglru
@@ -125,7 +126,8 @@ def model_spec(cfg: ModelConfig) -> dict:
 
 
 def _apply_period(params_p: dict, cfg: ModelConfig, x: jax.Array, *,
-                  positions, caches_p, cache_index, dist, decode=False):
+                  positions, caches_p, cache_index, dist, decode=False,
+                  pages=None):
     """Apply one period (len(layer_pattern) blocks). caches_p: dict per slot."""
     new_caches = {}
     aux = jnp.zeros((), jnp.float32)
@@ -134,7 +136,7 @@ def _apply_period(params_p: dict, cfg: ModelConfig, x: jax.Array, *,
         x, nc, a = block_apply(params_p[str(i)], cfg, kind, x,
                                positions=positions, cache=c,
                                cache_index=cache_index, dist=dist,
-                               decode=decode)
+                               decode=decode, pages=pages)
         aux = aux + a
         if nc is not None:
             new_caches[str(i)] = nc
@@ -147,13 +149,17 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             dist: Any = None,
             remat: str = "none",
             unroll: int | bool = 1,
-            return_hidden: bool = False
+            return_hidden: bool = False,
+            pages: jax.Array | None = None
             ) -> tuple[jax.Array, dict | None, jax.Array]:
     """Run the stack.
 
     ``batch``: {"tokens": (B, S) int32} and/or {"embeds": (B, S, input_dim)}
     for stub frontends; VLM concatenates projected patch embeds before text.
     ``caches``: {"periods": stacked-cache pytree, "tail": {...}} or None.
+    ``pages``: (B, pages_per_slot) int32 page table when ``caches`` came
+    from :func:`init_paged_caches` (shared by every paged layer — slot
+    positions advance uniformly across the stack).
     Returns (logits (B, S, vocab) [text positions only for VLM], new_caches,
     aux_loss).
     """
@@ -191,7 +197,7 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             p_i, c_i = xs
             h, nc, a = _apply_period(p_i, cfg, h, positions=positions,
                                      caches_p=c_i, cache_index=cache_index,
-                                     dist=dist, decode=decode)
+                                     dist=dist, decode=decode, pages=pages)
             return (h, auxc + a), nc
 
         if remat != "none":
@@ -217,7 +223,7 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             x, nc, a = block_apply(params["tail"][str(i)], cfg, kind, x,
                                    positions=positions, cache=c,
                                    cache_index=cache_index, dist=dist,
-                                   decode=decode)
+                                   decode=decode, pages=pages)
             aux_total = aux_total + a
             if nc is not None:
                 new_tail[str(i)] = nc
@@ -268,6 +274,67 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
         for i in range(cfg.n_remainder):
             kind = cfg.layer_pattern[i]
             c = _cache_for(cfg, kind, batch, max_len, dtype)
+            if c is not None:
+                tail[str(i)] = c
+        out["tail"] = tail
+    return out
+
+
+def paged_layout(max_len: int, page_size: int, batch: int,
+                 n_pages: int | None = None) -> tuple[int, int]:
+    """(pages_per_slot, pool_pages) for a paged cache. The default pool is
+    full-reservation-equivalent plus the reserved trash page; serving passes
+    a smaller pool to oversubscribe (long-context slots no longer reserve
+    ``max_len`` up front)."""
+    pages_per_slot = -(-max_len // page_size)
+    if n_pages is None:
+        n_pages = batch * pages_per_slot + 1
+    return pages_per_slot, n_pages
+
+
+def _paged_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, *, page_size: int, n_pages: int) -> dict | None:
+    if kind in ("attn", "local"):
+        if kind == "local" and min(max_len, cfg.window_size) < max_len:
+            # ring buffers are already O(window); keep them dense.
+            return init_kv_cache(cfg, kind, batch, max_len, dtype)
+        return {
+            "pool_k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype),
+            "pool_v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype),
+        }
+    return _cache_for(cfg, kind, batch, max_len, dtype)
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int, dtype, *,
+                      page_size: int = 64,
+                      n_pages: int | None = None) -> dict:
+    """Decode cache pytree with paged KV for the full-context attention
+    layers: physical pools ``(n_pages, page_size, K, Dh)`` indexed through
+    the page table that :func:`forward` takes as ``pages``. Ring (local)
+    and recurrent (ssd/rglru) caches keep their dense layout — they are
+    already O(window) / O(1) per slot. Page 0 is reserved as the trash page
+    for writes from unbound slots."""
+    if cfg.mla is not None:
+        raise NotImplementedError("paged KV cache with MLA latent caches")
+    _, n_pages = paged_layout(max_len, page_size, batch, n_pages)
+    kw = dict(page_size=page_size, n_pages=n_pages)
+    out: dict = {}
+    if cfg.n_periods > 0:
+        per = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            c = _paged_cache_for(cfg, kind, batch, max_len, dtype, **kw)
+            if c is not None:
+                per[str(i)] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (cfg.n_periods,) + a.shape).copy(), c)
+        out["periods"] = per
+    if cfg.n_remainder:
+        tail = {}
+        for i in range(cfg.n_remainder):
+            kind = cfg.layer_pattern[i]
+            c = _paged_cache_for(cfg, kind, batch, max_len, dtype, **kw)
             if c is not None:
                 tail[str(i)] = c
         out["tail"] = tail

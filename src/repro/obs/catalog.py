@@ -65,6 +65,7 @@ def _full_registry() -> "MetricsRegistry":
     from repro.autoscale import AutoscaleConfig, PoolSpec
     from repro.federation import FederatedCluster, Site, SpilloverConfig
     from repro.pipeline import PipelineSpec, Stage
+    from repro.serve.metrics import register_serve_metrics
 
     fed = FederatedCluster(
         [Site("home", workers=1,
@@ -82,6 +83,7 @@ def _full_registry() -> "MetricsRegistry":
             items=[1], timeout_s=30)
         fed.home.autoscaler.tick()
         fed.spillover.tick()
+        register_serve_metrics(fed.home.broker.metrics)
         return fed.home.broker.metrics
 
 

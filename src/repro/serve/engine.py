@@ -9,7 +9,23 @@ slot-based KV caches, per-slot positions, join-on-arrival / leave-on-EOS —
 and results flow back via ``PREFIX-done``.
 
 The decode step is the same ``make_serve_step`` program the dry-run lowers;
-per-slot positions use the per-batch ``q_offset`` path of chunked attention.
+per-slot positions use the per-batch ``q_offset`` path of chunked attention,
+or the fused flash-decode kernel with ``decode_kernel="flash"``.
+
+Admission is token-level and never blocks the device:
+
+* the jitted step runs **outside** the engine lock — ``step()`` assembles a
+  snapshot under the lock, dispatches, then applies results under the lock,
+  skipping any slot whose generation counter moved (admitted/evicted
+  mid-flight);
+* admission does O(pages-touched) work, not an O(cache) tree rebuild:
+  attention KV needs no zeroing at all (position masking — dense ``end``
+  masks, ring-buffer negative positions, paged table clamps — already hides
+  stale lanes) and only the recurrent leaves (ssd/rglru ``h``/``conv``
+  state) of the admitted slot are zeroed, deferred to the next assembly;
+* with ``paged=True`` the full-context KV lives in fixed-size pages bound
+  on demand (``serve.paged.PageAllocator``), so admission binds one page
+  and completion frees O(pages-used) — slots never reserve ``max_len``.
 """
 from __future__ import annotations
 
@@ -25,8 +41,16 @@ import numpy as np
 
 from repro.core import ClusterComputing, register_script
 from repro.models.config import ModelConfig
-from repro.models.transformer import forward, init_caches
+from repro.models.transformer import (init_caches, init_paged_caches,
+                                      paged_layout)
 from repro.train.step import make_serve_step
+
+from .paged import PageAllocator
+
+_RECURRENT_KINDS = ("ssd", "rglru")
+# positional caches are masked by k_valid/page-table logic; only recurrent
+# state carries across steps unmasked and must be zeroed on admission.
+_POSITIONAL_LEAVES = ("k", "v", "pool_k", "pool_v", "c_kv", "k_rope")
 
 
 @dataclass
@@ -37,6 +61,11 @@ class _Slot:
     max_new: int = 16
     position: int = 0
     done: bool = True
+    gen: int = 0              # bumped on admit/evict; stale steps skip apply
+    arrival_ts: float = 0.0
+    got_first_token: bool = False
+    base_prompt_len: int = 0  # original prompt length (resume replays the
+                              # generated prefix as extra prompt tokens)
 
 
 class ServeEngine:
@@ -45,45 +74,166 @@ class ServeEngine:
     All slots advance together each step (one ``serve_step`` call); finished
     slots are refilled from the queue without stalling the others — the
     property that keeps utilization high under ragged request lengths.
+
+    ``step()`` must be driven by a single thread (the replica driver);
+    ``add_request`` / ``evict`` may be called concurrently from any thread
+    and only touch host state under the admission lock.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int = 4,
-                 max_len: int = 512, eos_id: int | None = None):
+                 max_len: int = 512, eos_id: int | None = None,
+                 paged: bool = False, page_size: int = 64,
+                 n_pages: int | None = None,
+                 decode_kernel: str | None = None,
+                 kernel_interpret: bool | None = None,
+                 admission: str = "lazy",
+                 registry: Any = None, replica: str = "0",
+                 step_latency_s: float = 0.0):
+        if decode_kernel is not None:
+            cfg = cfg.with_(decode_kernel=decode_kernel)
+        if kernel_interpret is not None:
+            cfg = cfg.with_(kernel_interpret=kernel_interpret)
+        if admission not in ("lazy", "reset_full"):
+            raise ValueError(f"unknown admission mode {admission!r}")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self.caches = init_caches(cfg, n_slots, max_len, jnp.dtype(cfg.dtype))
+        self.paged = paged
+        self.admission = admission
+        self.replica = replica
+        self.step_latency_s = step_latency_s
+        dt = jnp.dtype(cfg.dtype)
+        if paged:
+            pages_per_slot, pool_pages = paged_layout(max_len, page_size,
+                                                      n_slots, n_pages)
+            self.caches = init_paged_caches(cfg, n_slots, max_len, dt,
+                                            page_size=page_size,
+                                            n_pages=pool_pages)
+            self.allocator: PageAllocator | None = PageAllocator(
+                pool_pages, page_size, n_slots, pages_per_slot)
+            self._serve = jax.jit(make_serve_step(cfg, paged=True))
+        else:
+            self.caches = init_caches(cfg, n_slots, max_len, dt)
+            self.allocator = None
+            self._serve = jax.jit(make_serve_step(cfg))
         self.slots = [_Slot() for _ in range(n_slots)]
-        self._serve = jax.jit(make_serve_step(cfg))
         self._lock = threading.Lock()
+        self._step_guard = threading.Lock()
+        self._pending_reset: set[int] = set()
+        self._has_recurrent = any(k in _RECURRENT_KINDS
+                                  for k in cfg.layer_kinds())
+        self._recent: deque = deque(maxlen=64)  # (ts, tokens) per step
         self.steps = 0
         self.tokens_out = 0
+        self._m = None
+        if registry is not None:
+            from .metrics import register_serve_metrics
+            fams = register_serve_metrics(registry)
+            self._m = {name: fam.labels(replica=replica)
+                       for name, fam in fams.items()
+                       if name != "requests"}
+            self._m_requests = fams["requests"]
+            self._m["slots_total"].set(n_slots)
+            if self.allocator is not None:
+                self._m["pages_total"].set(self.allocator.capacity)
+
+    def _event(self, event: str) -> None:
+        if self._m is not None:
+            self._m_requests.labels(replica=self.replica, event=event).inc()
 
     # -- request lifecycle ----------------------------------------------------
 
     def add_request(self, request_id: str, prompt: list[int],
-                    max_new: int = 16) -> bool:
-        """Claim a free slot; False if saturated (caller requeues)."""
+                    max_new: int = 16, *, arrival_ts: float | None = None,
+                    resume_tokens: list[int] | None = None) -> bool:
+        """Claim a free slot; False if saturated or (paged) out of pages —
+        the caller requeues. O(pages-touched): no device work beyond a
+        deferred per-slot recurrent-state zero.
+
+        ``resume_tokens`` re-admits an evicted request: the generated prefix
+        is replayed as part of the prompt and greedy decoding continues
+        deterministically from where it stopped."""
+        now = time.time() if arrival_ts is None else arrival_ts
         with self._lock:
             for i, s in enumerate(self.slots):
-                if s.done:
-                    self.slots[i] = _Slot(request_id=request_id,
-                                          prompt=list(prompt),
-                                          tokens=[], max_new=max_new,
-                                          position=0, done=False)
+                if not s.done:
+                    continue
+                if self.allocator is not None:
+                    self.allocator.release(i)
+                    if not self.allocator.ensure(i, 0):
+                        return False  # page pool exhausted
+                resumed = list(resume_tokens or [])
+                self.slots[i] = _Slot(
+                    request_id=request_id,
+                    prompt=list(prompt) + resumed,
+                    tokens=resumed, max_new=max_new,
+                    position=0, done=False, gen=s.gen + 1,
+                    arrival_ts=now,
+                    got_first_token=bool(resumed),
+                    base_prompt_len=len(prompt))
+                if self.admission == "reset_full":
                     self._reset_slot_cache(i)
-                    return True
+                else:
+                    self._pending_reset.add(i)
+                if self._m is not None:
+                    self._m["queue_wait"].observe(max(0.0, time.time() - now))
+                self._event("admitted")
+                return True
             return False
 
+    def evict(self, request_id: str) -> dict | None:
+        """Preempt a mid-generation request, freeing its slot (and pages)
+        immediately. Returns the state needed to resume it elsewhere via
+        ``add_request(..., resume_tokens=state["tokens"])``, or None if the
+        request isn't active."""
+        with self._lock:
+            for i, s in enumerate(self.slots):
+                if s.request_id == request_id and not s.done:
+                    state = {"request_id": s.request_id,
+                             "prompt": list(s.prompt[:s.base_prompt_len]),
+                             "tokens": list(s.tokens),
+                             "max_new": s.max_new}
+                    s.done = True
+                    s.gen += 1
+                    if self.allocator is not None:
+                        self.allocator.release(i)
+                    self._event("evicted")
+                    return state
+            return None
+
     def _reset_slot_cache(self, i: int) -> None:
+        """Legacy full-tree rebuild (admission="reset_full"): zeroes slot
+        ``i``'s lane in *every* cache leaf — O(cache) device work per
+        admission, kept as the benchmark baseline for the lazy path."""
         def zero_lane(path, c):
             keys = [getattr(p, "key", None) for p in path]
             bdim = 1 if "periods" in keys else 0  # stacked caches lead with L
             idx = [slice(None)] * c.ndim
             idx[bdim] = slice(i, i + 1)
             return c.at[tuple(idx)].set(0)
+        self.caches = jax.tree_util.tree_map_with_path(zero_lane, self.caches)
+
+    def _apply_resets(self) -> None:
+        """Zero the recurrent state (ssd/rglru h/conv) of newly admitted
+        slots, batched across admissions since the last step. Positional
+        caches are left alone — masking already hides stale entries."""
+        if not self._pending_reset:
+            return
+        idx = sorted(self._pending_reset)
+        self._pending_reset.clear()
+        if not self._has_recurrent:
+            return
+        rows = jnp.asarray(idx, jnp.int32)
+
+        def zero_lane(path, c):
+            keys = [getattr(p, "key", None) for p in path]
+            if keys[-1] in _POSITIONAL_LEAVES:
+                return c
+            bdim = 1 if "periods" in keys else 0
+            idx_t = (slice(None),) * bdim + (rows,)
+            return c.at[idx_t].set(0)
         self.caches = jax.tree_util.tree_map_with_path(zero_lane, self.caches)
 
     def _active(self) -> list[int]:
@@ -94,43 +244,123 @@ class ServeEngine:
     def step(self) -> list[tuple[str, list[int]]]:
         """Advance every active slot by one token (prompt-feeding slots
         consume their next prompt token; generating slots append). Returns
-        finished (request_id, tokens) pairs."""
+        finished (request_id, tokens) pairs.
+
+        Three phases: assemble (lock), device call (no lock — admissions
+        proceed concurrently), apply (lock, generation-checked)."""
+        if not self._step_guard.acquire(blocking=False):
+            raise RuntimeError("ServeEngine.step is single-driver; a step "
+                               "is already in flight")
+        try:
+            return self._step()
+        finally:
+            self._step_guard.release()
+
+    def _step(self) -> list[tuple[str, list[int]]]:
         with self._lock:
             active = self._active()
             if not active:
                 return []
-            # assemble the token column + per-slot positions
+            self._apply_resets()
             col = np.zeros((self.n_slots, 1), np.int32)
             pos = np.zeros((self.n_slots,), np.int32)
-            for i, s in enumerate(self.slots):
-                if s.done:
-                    continue
+            stepped: list[int] = []
+            gens: dict[int, int] = {}
+            for i in active:
+                s = self.slots[i]
+                if self.allocator is not None and \
+                        not self.allocator.ensure(i, s.position):
+                    continue  # pool exhausted: slot stalls, retries next step
                 if s.position < len(s.prompt):
                     col[i, 0] = s.prompt[s.position]
                 else:
                     col[i, 0] = s.tokens[-1] if s.tokens else s.prompt[-1]
                 pos[i] = s.position
-            logits, next_ids, self.caches = self._serve(
-                self.params, jnp.asarray(col), self.caches,
-                jnp.asarray(pos))
-            next_ids = np.asarray(next_ids)
+                stepped.append(i)
+                gens[i] = s.gen
+            if not stepped:
+                return []
+            caches = self.caches
+            pages = (jnp.asarray(self.allocator.table)
+                     if self.allocator is not None else None)
+
+        t0 = time.time()
+        if pages is not None:
+            logits, next_ids, new_caches = self._serve(
+                self.params, jnp.asarray(col), caches, jnp.asarray(pos),
+                pages)
+        else:
+            logits, next_ids, new_caches = self._serve(
+                self.params, jnp.asarray(col), caches, jnp.asarray(pos))
+        next_ids = np.asarray(next_ids)  # device sync, still outside the lock
+        if self.step_latency_s:
+            # benchmark knob: emulate an accelerator-bound step on hosts
+            # where the smoke model underruns real device latency.
+            time.sleep(self.step_latency_s)
+        dt = time.time() - t0
+
+        with self._lock:
+            self.caches = new_caches
             self.steps += 1
             finished = []
-            for i, s in enumerate(self.slots):
-                if s.done:
-                    continue
+            n_tokens = 0
+            now = time.time()
+            for i in stepped:
+                s = self.slots[i]
+                if s.done or s.gen != gens[i]:
+                    continue  # evicted (and possibly re-filled) mid-flight
                 s.position += 1
                 if s.position < len(s.prompt):
                     continue  # still prefill-feeding
                 tok = int(next_ids[i])
                 s.tokens.append(tok)
                 self.tokens_out += 1
+                n_tokens += 1
+                if not s.got_first_token:
+                    s.got_first_token = True
+                    if self._m is not None:
+                        self._m["ttft"].observe(max(0.0, now - s.arrival_ts))
                 if (len(s.tokens) >= s.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
                         or s.position >= self.max_len - 1):
                     s.done = True
+                    if self.allocator is not None:
+                        self.allocator.release(i)
+                    self._event("completed")
                     finished.append((s.request_id, list(s.tokens)))
+            self._recent.append((now, n_tokens))
+            if self._m is not None:
+                self._m["step"].observe(dt)
+                if n_tokens:
+                    self._m["tokens"].inc(n_tokens)
+                self._m["slots_active"].set(len(self._active()))
+                if self.allocator is not None:
+                    self._m["pages_used"].set(self.allocator.used_pages)
             return finished
+
+    def throughput_tokens_s(self, window_s: float = 5.0) -> float:
+        """Recent generation rate (host-side ring of per-step counts) —
+        the router's fallback signal when the telemetry store is cold."""
+        now = time.time()
+        pts = [(t, n) for t, n in self._recent if t >= now - window_s]
+        if len(pts) < 2:
+            return 0.0
+        span = pts[-1][0] - pts[0][0]
+        return sum(n for _, n in pts) / max(span, 1e-6)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "replica": self.replica,
+                "steps": self.steps,
+                "tokens_out": self.tokens_out,
+                "active_slots": len(self._active()),
+                "n_slots": self.n_slots,
+                "pages_used": (self.allocator.used_pages
+                               if self.allocator else None),
+                "pages_free": (self.allocator.free_pages
+                               if self.allocator else None),
+            }
 
     def run_until_drained(self, pending: list[tuple[str, list[int], int]],
                           max_steps: int = 10_000) -> dict[str, list[int]]:

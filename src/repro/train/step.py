@@ -152,21 +152,43 @@ def make_prefill_step(cfg: ModelConfig, *, dist: Any = None,
 
 
 def make_serve_step(cfg: ModelConfig, *, dist: Any = None,
-                    unroll: int | bool = 1) -> Callable:
-    """serve_step(params, tokens (B,1), caches, cache_index) ->
+                    unroll: int | bool = 1, paged: bool = False,
+                    decode_kernel: str | None = None) -> Callable:
+    """serve_step(params, tokens (B,1), caches, cache_index[, pages]) ->
     (next-token logits (B, V), new caches). One decode step against the
-    cache; greedy next-token id is returned alongside for convenience."""
+    cache; greedy next-token id is returned alongside for convenience.
 
-    def serve_step(params, tokens, caches, cache_index):
-        batch = {"tokens": tokens}
-        logits, new_caches, _ = forward(params, cfg, batch, caches=caches,
-                                        cache_index=cache_index, dist=dist,
-                                        unroll=unroll)
+    ``decode_kernel`` overrides ``cfg.decode_kernel`` ("chunked" reference |
+    "flash" split-KV kernel). ``paged=True`` compiles the paged-cache step,
+    which takes the (B, pages_per_slot) page table as a fifth argument
+    (caches from ``init_paged_caches``)."""
+    if decode_kernel is not None:
+        cfg = cfg.with_(decode_kernel=decode_kernel)
+
+    def _finish(logits):
         logits = logits[:, -1]
         if cfg.padded_vocab != cfg.vocab_size:  # mask vocab padding
             pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
             logits = jnp.where(pad_mask[None, :], -1e30, logits)
         next_id = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, next_id
+
+    if paged:
+        def serve_step(params, tokens, caches, cache_index, pages):
+            logits, new_caches, _ = forward(
+                params, cfg, {"tokens": tokens}, caches=caches,
+                cache_index=cache_index, dist=dist, unroll=unroll,
+                pages=pages)
+            logits, next_id = _finish(logits)
+            return logits, next_id, new_caches
+        return serve_step
+
+    def serve_step(params, tokens, caches, cache_index):
+        logits, new_caches, _ = forward(params, cfg, {"tokens": tokens},
+                                        caches=caches,
+                                        cache_index=cache_index, dist=dist,
+                                        unroll=unroll)
+        logits, next_id = _finish(logits)
         return logits, next_id, new_caches
 
     return serve_step

@@ -25,7 +25,11 @@ Admission is token-level and never blocks the device:
   state) of the admitted slot are zeroed, deferred to the next assembly;
 * with ``paged=True`` the full-context KV lives in fixed-size pages bound
   on demand (``serve.paged.PageAllocator``), so admission binds one page
-  and completion frees O(pages-used) — slots never reserve ``max_len``.
+  and completion frees O(pages-used) — slots never reserve ``max_len``;
+* a slot that loses the page race **stalls in place**: its table row is
+  cleared for that step (the garbage lane's writes clamp to the trash
+  page) and its per-slot lanes are rolled back afterwards, so it resumes
+  bit-exact once pages free up.
 """
 from __future__ import annotations
 
@@ -95,6 +99,14 @@ class ServeEngine:
             cfg = cfg.with_(kernel_interpret=kernel_interpret)
         if admission not in ("lazy", "reset_full"):
             raise ValueError(f"unknown admission mode {admission!r}")
+        if admission == "reset_full" and paged:
+            # the full-lane zero indexes leaf dim 0 by slot, but paged
+            # pool_k/pool_v lead with the *physical page* axis — zeroing
+            # "slot i" there would wipe page i, which may hold another
+            # request's KV. The legacy baseline is dense-cache only.
+            raise ValueError("admission='reset_full' cannot be combined "
+                             "with paged=True; use the default lazy "
+                             "admission for paged caches")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -154,7 +166,18 @@ class ServeEngine:
 
         ``resume_tokens`` re-admits an evicted request: the generated prefix
         is replayed as part of the prompt and greedy decoding continues
-        deterministically from where it stopped."""
+        deterministically from where it stopped.
+
+        Raises ValueError for a request that can never fit: prompt feeding
+        bypasses the max_len force-finish, so an oversized prompt would walk
+        positions past the cache (and past the page table)."""
+        total = len(prompt) + len(resume_tokens or [])
+        if total >= self.max_len:
+            raise ValueError(
+                f"request {request_id!r} has {total} prompt tokens "
+                f"(incl. resume) but max_len={self.max_len} leaves no "
+                "decode position; it would never fit — truncate or raise "
+                "max_len")
         now = time.time() if arrival_ts is None else arrival_ts
         with self._lock:
             for i, s in enumerate(self.slots):
@@ -173,10 +196,15 @@ class ServeEngine:
                     arrival_ts=now,
                     got_first_token=bool(resumed),
                     base_prompt_len=len(prompt))
-                if self.admission == "reset_full":
-                    self._reset_slot_cache(i)
-                else:
+                if self.admission != "reset_full":
                     self._pending_reset.add(i)
+                elif self._step_guard.locked():
+                    # a step's device call may be in flight; its apply phase
+                    # would clobber an eager zero with new_caches — defer to
+                    # the next assembly, which runs under this lock.
+                    self._pending_reset.add(i)
+                else:
+                    self._reset_slot_cache(i)
                 if self._m is not None:
                     self._m["queue_wait"].observe(max(0.0, time.time() - now))
                 self._event("admitted")
@@ -215,14 +243,38 @@ class ServeEngine:
             return c.at[tuple(idx)].set(0)
         self.caches = jax.tree_util.tree_map_with_path(zero_lane, self.caches)
 
+    def _restore_lanes(self, new: Any, old: Any, idx: list[int]) -> Any:
+        """Copy slot lanes ``idx`` of every per-slot cache leaf from ``old``
+        (the pre-step snapshot) into ``new`` — used to undo the garbage-lane
+        advance of slots that stalled on page-pool exhaustion. Physical page
+        pools are skipped: their leading axis is the page, not the slot, and
+        the cleared table rows already clamped those writes to the trash
+        page."""
+        rows = jnp.asarray(idx, jnp.int32)
+
+        def restore(path, n, o):
+            keys = [getattr(p, "key", None) for p in path]
+            if keys[-1] in ("pool_k", "pool_v"):
+                return n
+            bdim = 1 if "periods" in keys else 0
+            idx_t = (slice(None),) * bdim + (rows,)
+            return n.at[idx_t].set(o[idx_t])
+        return jax.tree_util.tree_map_with_path(restore, new, old)
+
     def _apply_resets(self) -> None:
-        """Zero the recurrent state (ssd/rglru h/conv) of newly admitted
-        slots, batched across admissions since the last step. Positional
-        caches are left alone — masking already hides stale entries."""
+        """Zero the state of newly admitted slots, batched across admissions
+        since the last step: in lazy mode only the recurrent leaves
+        (ssd/rglru h/conv — positional caches are left alone, masking
+        already hides stale entries); in reset_full mode the full lane of
+        any admission deferred because a step was in flight."""
         if not self._pending_reset:
             return
         idx = sorted(self._pending_reset)
         self._pending_reset.clear()
+        if self.admission == "reset_full":
+            for i in idx:
+                self._reset_slot_cache(i)
+            return
         if not self._has_recurrent:
             return
         rows = jnp.asarray(idx, jnp.int32)
@@ -265,11 +317,13 @@ class ServeEngine:
             col = np.zeros((self.n_slots, 1), np.int32)
             pos = np.zeros((self.n_slots,), np.int32)
             stepped: list[int] = []
+            stalled: list[int] = []
             gens: dict[int, int] = {}
             for i in active:
                 s = self.slots[i]
                 if self.allocator is not None and \
                         not self.allocator.ensure(i, s.position):
+                    stalled.append(i)
                     continue  # pool exhausted: slot stalls, retries next step
                 if s.position < len(s.prompt):
                     col[i, 0] = s.prompt[s.position]
@@ -281,8 +335,17 @@ class ServeEngine:
             if not stepped:
                 return []
             caches = self.caches
-            pages = (jnp.asarray(self.allocator.table)
-                     if self.allocator is not None else None)
+            pages = None
+            if self.allocator is not None:
+                table = self.allocator.table
+                if stalled:
+                    # a stalled slot still rides through the device call as a
+                    # garbage lane (col=0, pos=0); clearing its row makes the
+                    # K/V scatter clamp to the trash page instead of hitting
+                    # its real, still-bound position-0 page.
+                    table = table.copy()
+                    table[stalled] = -1
+                pages = jnp.asarray(table)
 
         t0 = time.time()
         if pages is not None:
@@ -300,6 +363,12 @@ class ServeEngine:
         dt = time.time() - t0
 
         with self._lock:
+            if stalled:
+                # the garbage lane also advanced per-slot state (recurrent
+                # ssd/rglru h/conv, ring K/V at index 0) — roll those lanes
+                # back to the pre-step snapshot so a stalled slot resumes
+                # exactly where it paused.
+                new_caches = self._restore_lanes(new_caches, caches, stalled)
             self.caches = new_caches
             self.steps += 1
             finished = []

@@ -46,6 +46,8 @@ class PageAllocator:
         already bound. Returns False when the pool is exhausted (the caller
         stalls or sheds the slot; nothing is modified)."""
         idx = position // self.page_size
+        if idx >= self.pages_per_slot:
+            return False  # past the table width: stall, never IndexError
         if self.table[slot, idx] >= 0:
             return True
         if not self._free:

@@ -133,6 +133,14 @@ class ServeReplicaSet:
 
     def submit(self, request_id: str, prompt: list[int],
                max_new: int = 16) -> PendingRequest:
+        limit = min(e.max_len for e in self.engines)
+        if len(prompt) >= limit:
+            # reject in the client's thread: an unfittable request reaching
+            # the driver loop would raise there and kill the replica.
+            raise ValueError(
+                f"request {request_id!r} prompt has {len(prompt)} tokens "
+                f"but the replicas' max_len={limit} leaves no decode "
+                "position")
         p = PendingRequest(request_id=request_id, prompt=list(prompt),
                            max_new=max_new, arrival_ts=time.time())
         waits = [self.projected_wait_s(r) for r in range(self.n_replicas)]

@@ -221,6 +221,14 @@ def test_page_allocator_exhaustion_and_trash_page():
         PageAllocator(n_pages=1, page_size=4, n_slots=1, pages_per_slot=1)
 
 
+def test_page_allocator_position_past_table_width():
+    al = PageAllocator(n_pages=5, page_size=4, n_slots=1, pages_per_slot=2)
+    assert al.ensure(0, 7)
+    assert not al.ensure(0, 8)  # past the table: reports False, no IndexError
+    assert al.table[0, 1] >= 0  # in-range bindings untouched
+    al.check()
+
+
 # ---------------------------------------------------------------------------
 # engine: paged cache + flash kernel parity, eviction/resume
 # ---------------------------------------------------------------------------
@@ -307,6 +315,95 @@ def test_evict_and_resume_mid_generation(small_model):
         done.update(eng.step())
     assert done["victim"] == _greedy_reference(cfg, params, prompt, 8)
     assert done["other"] == _greedy_reference(cfg, params, other, 10)
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "gemma3_1b",
+                                  "recurrentgemma_2b"])
+def test_stalled_slot_resumes_uncorrupted(arch):
+    """Page-pool exhaustion stalls one slot while the other keeps stepping.
+    The stalled slot still rides the jitted step as a garbage lane — its
+    bound pages, ring KV, and recurrent state must not advance on it, so
+    once pages free up it resumes bit-exact against the uninterrupted
+    greedy decode."""
+    cfg = smoke_config(arch)
+    params = init_params(model_spec(cfg), jax.random.PRNGKey(5),
+                         jnp.dtype(cfg.dtype))
+    # 3 usable pages, two requests needing 2 pages each: the slot that
+    # loses the race for the third page stalls mid-generation until the
+    # winner completes and releases its pages.
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=64, paged=True,
+                      page_size=16, n_pages=4)
+    rng = np.random.RandomState(9)
+    reqs = [("a", list(rng.randint(0, cfg.vocab_size, 4)), 20),
+            ("b", list(rng.randint(0, cfg.vocab_size, 4)), 20)]
+    for req in reqs:
+        assert eng.add_request(*req)
+    done, stalls = {}, 0
+    for _ in range(200):
+        before = {i: eng.slots[i].position for i in eng._active()}
+        done.update(eng.step())
+        stalls += sum(1 for i, p in before.items()
+                      if not eng.slots[i].done
+                      and eng.slots[i].position == p)
+        if not eng._active():
+            break
+    assert stalls > 0  # the scenario really exercised a stall
+    eng.allocator.check()
+    assert eng.allocator.used_pages == 0
+    for rid, prompt, n in reqs:
+        assert done[rid] == _greedy_reference(cfg, params, prompt, n), rid
+
+
+def test_reset_full_defers_under_inflight_step(small_model):
+    """reset_full admissions landing while a step's device call is in
+    flight must defer their zero to the next assembly — an eager reset
+    would be clobbered by the apply phase's ``self.caches = new_caches``,
+    leaking the previous occupant's state into the new request."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=32,
+                      admission="reset_full")
+    assert eng._step_guard.acquire(blocking=False)  # simulate in-flight step
+    try:
+        assert eng.add_request("r0", [1, 2, 3], max_new=3)
+        assert 0 in eng._pending_reset  # deferred, not eagerly applied
+    finally:
+        eng._step_guard.release()
+    assert eng.add_request("r1", [4, 5], max_new=3)
+    assert 1 not in eng._pending_reset  # no step in flight: eager baseline
+    done = {}
+    while eng._active():
+        done.update(eng.step())
+    assert done["r0"] == _greedy_reference(cfg, params, [1, 2, 3], 3)
+    assert done["r1"] == _greedy_reference(cfg, params, [4, 5], 3)
+
+
+def test_reset_full_rejects_paged(small_model):
+    """The full-lane zero indexes pool leaves by physical page, not slot —
+    the combination would wipe other requests' KV and must not construct."""
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, n_slots=2, max_len=32, paged=True,
+                    admission="reset_full")
+
+
+def test_oversized_prompt_rejected(small_model):
+    """A prompt that can never fit max_len must fail loudly at submission
+    (engine and router), not walk positions past the page table in the
+    driver thread."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=16, paged=True,
+                      page_size=8)
+    with pytest.raises(ValueError):
+        eng.add_request("big", list(range(16)), max_new=4)
+    with pytest.raises(ValueError):
+        eng.add_request("big", list(range(10)), max_new=4,
+                        resume_tokens=list(range(6)))
+    assert eng.add_request("fits", list(range(15)), max_new=4)
+    rs = ServeReplicaSet(cfg, params, n_replicas=1,
+                         engine_kw=dict(n_slots=1, max_len=16))
+    with pytest.raises(ValueError):
+        rs.submit("big", list(range(16)))
+    assert rs.lost == 0 and rs.submitted == 0
 
 
 # ---------------------------------------------------------------------------
